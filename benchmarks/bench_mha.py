@@ -1,0 +1,85 @@
+"""Paper Fig. 3 analogue: MHA forward prefill throughput (modelled TFLOPS on
+TPU v5e) for the AVO-evolved kernel vs the expert (cuDNN-analogue) and FA
+reference genomes, across seq lens {4k, 8k, 16k, 32k} x {causal, non-causal}
+at fixed 32k total tokens, head_dim 128, 16 heads, bf16.
+
+``--published-baselines`` additionally prints the App.-A-style comparison
+against the FA4 paper's fraction-of-peak transferred to v5e peak.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import chart, emit
+from repro.core.perfmodel import (EXPERT_GENOME, FA_REFERENCE_GENOME,
+                                  estimate, expert_reference, fa_reference,
+                                  mha_suite)
+from repro.core.search_space import KernelGenome, seed_genome
+
+# B200 fractions-of-peak from the FA4 paper's reported numbers (Fig. 7),
+# transferred to the v5e 197 TFLOP/s peak for the App. A-style comparison.
+FA4_PAPER_FRAC = {  # (causal, seq): fraction of bf16 peak
+    (False, 4096): 0.70, (False, 8192): 0.72, (False, 16384): 0.73,
+    (False, 32768): 0.74,
+    (True, 4096): 0.55, (True, 8192): 0.62, (True, 16384): 0.66,
+    (True, 32768): 0.69,
+}
+
+
+def evolved_genome(lineage_path: str | None = None) -> KernelGenome:
+    """Best committed genome from a lineage file; defaults to the repo's own
+    evolution artifact (examples/evolve_attention.py) when present, else a
+    strong static fallback."""
+    import os
+    if lineage_path is None:
+        default = os.path.join(os.path.dirname(__file__), "..", "results",
+                               "lineage_mha.json")
+        if os.path.exists(default):
+            lineage_path = default
+    if lineage_path:
+        from repro.core.population import Lineage
+        return Lineage.load(lineage_path).best().genome
+    return KernelGenome(block_q=512, block_k=1024, rescale_mode="branchless",
+                        mask_mode="block_skip", div_mode="deferred",
+                        kv_in_grid=True, gqa_pack=False)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lineage", default=None,
+                    help="lineage.json from an evolution run")
+    ap.add_argument("--published-baselines", action="store_true")
+    args = ap.parse_args(argv)
+
+    g_avo = evolved_genome(args.lineage)
+    rows = []
+    for cfg in mha_suite():
+        avo = estimate(g_avo, cfg).tflops
+        seed = estimate(seed_genome(), cfg).tflops
+        exp = expert_reference(cfg)
+        fa = fa_reference(cfg)
+        rows.append([cfg.name, cfg.seq_len, cfg.batch, int(cfg.causal),
+                     round(seed, 1), round(fa, 1), round(exp, 1),
+                     round(avo, 1),
+                     f"{avo / exp - 1:+.1%}", f"{avo / fa - 1:+.1%}"])
+    emit("mha_fig3", ["config", "seq", "batch", "causal", "seed_x0",
+                      "fa_ref", "expert_ref", "avo", "vs_expert", "vs_fa"],
+         rows)
+    chart("MHA causal (modelled TFLOPS, v5e)",
+          [(r[0], r[7]) for r in rows if r[3] == 1])
+    chart("MHA non-causal (modelled TFLOPS, v5e)",
+          [(r[0], r[7]) for r in rows if r[3] == 0])
+
+    if args.published_baselines:
+        rows = []
+        for cfg in mha_suite():
+            avo = estimate(g_avo, cfg).tflops
+            fa4 = FA4_PAPER_FRAC[(cfg.causal, cfg.seq_len)] * 197.0
+            rows.append([cfg.name, round(avo, 1), round(fa4, 1),
+                         f"{avo / fa4 - 1:+.1%}"])
+        emit("mha_published_appA", ["config", "avo", "fa4_paper_frac_v5e",
+                                    "delta"], rows)
+
+
+if __name__ == "__main__":
+    main()

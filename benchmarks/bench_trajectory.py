@@ -1,0 +1,58 @@
+"""Paper Fig. 5/6 analogue: the evolution trajectory.  Runs a full continuous
+evolution (single lineage, supervisor-assisted) and prints the per-version
+running-best geomean + per-config series, with the expert/FA reference lines.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import bar, emit
+from repro.core import ContinuousEvolution, Scorer
+from repro.core.perfmodel import expert_reference, fa_reference, mha_suite
+import numpy as np
+
+
+def run(target_commits: int, causal: bool, max_steps: int):
+    suite = [c for c in mha_suite() if c.causal == causal]
+    evo = ContinuousEvolution(scorer=Scorer(suite=suite))
+    rep = evo.run(max_steps=max_steps, target_commits=target_commits)
+    return evo, rep, suite
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--commits", type=int, default=12,
+                    help="target committed versions (paper: 40 over 7 days)")
+    ap.add_argument("--max-steps", type=int, default=60)
+    args = ap.parse_args(argv)
+
+    for causal in (True, False):
+        tag = "causal" if causal else "noncausal"
+        evo, rep, suite = run(args.commits, causal, args.max_steps)
+        traj = evo.lineage.trajectory()
+        exp_line = float(np.exp(np.mean(
+            [np.log(expert_reference(c)) for c in suite])))
+        fa_line = float(np.exp(np.mean(
+            [np.log(fa_reference(c)) for c in suite])))
+
+        rows = []
+        for i, (g, rb) in enumerate(zip(traj["geomean"], traj["running_best"])):
+            rows.append([i, round(g, 1), round(rb, 1),
+                         traj["notes"][i][:60]])
+        emit(f"trajectory_{tag}",
+             ["version", "geomean", "running_best", "note"], rows)
+
+        print(f"[{tag}] expert(cuDNN-analogue) geomean = {exp_line:.1f}  "
+              f"FA-ref geomean = {fa_line:.1f}")
+        vmax = max(max(traj["running_best"]), exp_line)
+        for i, rb in enumerate(traj["running_best"]):
+            mark = " *" if i and traj["running_best"][i - 1] < rb else ""
+            print(f"  v{i:02d} {rb:7.1f} |{bar(rb, vmax)}{mark}")
+        print(f"  exp {exp_line:6.1f} |{bar(exp_line, vmax)}  <- expert line")
+        print(f"  fa  {fa_line:6.1f} |{bar(fa_line, vmax)}  <- FA line")
+        print(f"  internal attempts: {rep.internal_attempts}  "
+              f"interventions: {rep.interventions}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing: CSV emission + tiny ASCII charts."""
+from __future__ import annotations
+
+import csv
+import io
+import os
+import sys
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def emit(name: str, header: list[str], rows: list[list]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    buf = io.StringIO()
+    w = csv.writer(buf)
+    w.writerow(header)
+    w.writerows(rows)
+    print(f"--- {name} ---")
+    print(buf.getvalue().rstrip())
+    print()
+
+
+def bar(value: float, vmax: float, width: int = 42) -> str:
+    n = 0 if vmax <= 0 else int(round(width * value / vmax))
+    return "#" * max(0, min(n, width))
+
+
+def chart(title: str, items: list[tuple[str, float]]) -> None:
+    print(title)
+    vmax = max((v for _, v in items), default=1.0)
+    for label, v in items:
+        print(f"  {label:28s} {v:8.1f} |{bar(v, vmax)}")
+    print()
+
+
+class timed:
+    def __init__(self, label=""):
+        self.label = label
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,60 @@
+"""Benchmark runner — one section per paper table/figure.
+
+  python -m benchmarks.run              # everything (CSV under results/bench)
+  python -m benchmarks.run --only mha   # one section
+
+Sections:
+  mha         Fig. 3  — MHA throughput vs expert/FA references (+ App. A)
+  gqa         Fig. 4  — GQA transfer after autonomous adaptation
+  trajectory  Fig. 5/6 — evolution trajectory, running-best geomean
+  ablation    Table 1 — the three representative optimizations
+  operators   Fig. 1  — AVO vs fixed-pipeline variation operators
+  roofline    (brief) — dry-run roofline table, if results/dryrun exists
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SECTIONS = ["mha", "gqa", "trajectory", "ablation", "operators", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=SECTIONS, default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller budgets (CI-scale)")
+    args = ap.parse_args()
+    todo = [args.only] if args.only else SECTIONS
+
+    t0 = time.time()
+    for name in todo:
+        print(f"\n================ {name} ================", flush=True)
+        try:
+            if name == "mha":
+                from benchmarks import bench_mha
+                bench_mha.main(["--published-baselines"])
+            elif name == "gqa":
+                from benchmarks import bench_gqa
+                bench_gqa.main(["--adapt-steps", "3" if args.fast else "6"])
+            elif name == "trajectory":
+                from benchmarks import bench_trajectory
+                bench_trajectory.main(
+                    ["--commits", "6" if args.fast else "12"])
+            elif name == "ablation":
+                from benchmarks import bench_ablation
+                bench_ablation.main([])
+            elif name == "operators":
+                from benchmarks import bench_operators
+                bench_operators.main(["--budget", "30" if args.fast else "60"])
+            elif name == "roofline":
+                from repro.launch import roofline
+                roofline.main([])
+        except FileNotFoundError as e:
+            print(f"[skipped: {e}]")
+    print(f"\nall sections done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: the three layers of the framework in two minutes on CPU.
+
+  1. run the genome-parameterized Pallas flash-attention kernel (interpret
+     mode) and check it against the oracle;
+  2. score a genome with the AVO scoring function f (correctness gate +
+     modelled v5e throughput);
+  3. take one agentic variation step on a fresh lineage.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (AgenticVariationOperator, KnowledgeBase, Lineage,
+                        Scorer, Toolbelt)
+from repro.core.perfmodel import BenchConfig
+from repro.core.search_space import KernelGenome, seed_genome
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import mha_reference
+
+
+def main():
+    # -- 1. kernel vs oracle ---------------------------------------------------
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 256, 64))
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    ref = mha_reference(q, k, v, causal=True)
+    print(f"kernel vs oracle max|err| = {float(jnp.abs(out - ref).max()):.2e}")
+
+    # -- 2. score a genome -------------------------------------------------------
+    suite = [BenchConfig("causal_8k", 4, 16, 16, 8192, causal=True),
+             BenchConfig("noncausal_8k", 4, 16, 16, 8192, causal=False)]
+    scorer = Scorer(suite=suite)
+    for g in (seed_genome(),
+              KernelGenome(block_q=512, block_k=1024,
+                           rescale_mode="branchless", mask_mode="block_skip",
+                           div_mode="deferred", kv_in_grid=True)):
+        sv = scorer(g)
+        print(f"f({g}) -> correct={sv.correct} "
+              f"values={tuple(round(x, 1) for x in sv.values)} TFLOPS "
+              f"geomean={sv.geomean:.1f}")
+
+    # -- 3. one variation step ---------------------------------------------------
+    tools = Toolbelt(scorer, KnowledgeBase(), Lineage())
+    op = AgenticVariationOperator()
+    for _ in range(3):
+        r = op.vary(tools)
+        if r.committed:
+            c = tools.lineage.update(r.genome, r.score, r.note,
+                                     r.internal_attempts)
+            print(f"committed v{c.version}: {c.note} "
+                  f"(geomean {c.geomean:.1f} TFLOPS, "
+                  f"{r.internal_attempts} internal attempts)")
+        else:
+            print(f"no commit: {r.note}")
+
+
+if __name__ == "__main__":
+    main()

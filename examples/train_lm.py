@@ -1,0 +1,112 @@
+"""End-to-end driver: train a ~100M-param qwen2-family model for a few hundred
+steps on CPU with the full production stack — data pipeline, AdamW + cosine
+schedule, microbatched grad accumulation, checkpointing, fault-tolerant
+restart, and the evolved attention genome plumbed into the model.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+  PYTHONPATH=src python examples/train_lm.py --steps 300 --resume   # restart
+  PYTHONPATH=src python examples/train_lm.py --simulate-crash 120   # FT demo
+"""
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import Block
+from repro.configs.registry import get_arch
+from repro.data.pipeline import TokenPipeline
+from repro.launch.train import init_train_state, make_train_step
+from repro.optim import AdamWConfig
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results", "train_lm")
+
+
+def model_100m():
+    """qwen2-family scaled to ~100M params (12L, d=768, vocab 32k)."""
+    base = get_arch("qwen2-7b")
+    return dataclasses.replace(
+        base, name="qwen2-100m", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=4, d_head=64, d_ff=2048, vocab_size=32768, remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--simulate-crash", type=int, default=0,
+                    help="raise at this step once (fault-tolerance demo)")
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "int8_ef"])
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    n_params = cfg.param_count()
+    print(f"{cfg.name}: {n_params / 1e6:.1f}M params, "
+          f"{args.batch}x{args.seq} tokens/step, "
+          f"{args.microbatches} microbatches, compression={args.compression}")
+
+    opt = AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps,
+                      weight_decay=0.1)
+    step_fn = jax.jit(make_train_step(
+        cfg, opt, n_microbatches=args.microbatches,
+        compression=args.compression, compute_dtype=jnp.float32))
+
+    pipe = TokenPipeline(cfg, args.seq, args.batch, seed=0)
+    ckpt = Checkpointer(OUT, keep=2)
+
+    start = 0
+    if args.resume and ckpt.latest_step() is not None:
+        start, tree, extra = ckpt.restore()
+        params, opt_state, residual = (
+            tree["params"], tree["opt_state"], tree.get("residual"))
+        import repro.optim as optim
+        opt_state = optim.AdamWState(opt_state["step"], opt_state["mu"],
+                                     opt_state["nu"])
+        pipe.load_state_dict(extra["pipeline"])
+        print(f"resumed from step {start}")
+    else:
+        params, opt_state, residual = init_train_state(
+            cfg, jax.random.PRNGKey(0), compression=args.compression)
+
+    crashed = {"done": False}
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        if args.simulate_crash and step == args.simulate_crash \
+                and not crashed["done"]:
+            crashed["done"] = True
+            print(f"[simulated crash at step {step}; restart with --resume]")
+            raise SystemExit(17)
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        params, opt_state, residual, m = step_fn(params, opt_state, residual,
+                                                 batch)
+        losses.append(float(m["loss"]))
+        if step % 20 == 0 or step == args.steps - 1:
+            tok_s = args.batch * args.seq * (step - start + 1) / (time.time() - t0)
+            print(f"step {step:4d}  loss {losses[-1]:.4f}  "
+                  f"lr {float(m['lr']):.2e}  gnorm {float(m['grad_norm']):.2f} "
+                  f" {tok_s:,.0f} tok/s")
+        if step and step % 50 == 0:
+            ckpt.save(step, {"params": params,
+                             "opt_state": opt_state._asdict(),
+                             "residual": residual},
+                      extra={"pipeline": pipe.state_dict(),
+                             "loss": losses[-1]})
+
+    uniform = float(np.log(cfg.vocab_size))
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(uniform baseline {uniform:.3f})")
+    assert losses[-1] < losses[0], "training did not improve"
+
+
+if __name__ == "__main__":
+    main()

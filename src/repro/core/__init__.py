@@ -1,0 +1,21 @@
+from repro.core.agent import AgentPolicy, Directive, ScriptedAgent, VariationResult
+from repro.core.evolution import ContinuousEvolution, EvolutionReport
+from repro.core.knowledge import KnowledgeBase
+from repro.core.perfmodel import (BenchConfig, estimate, expert_reference,
+                                  fa_reference, gqa_suite, mha_suite)
+from repro.core.population import Commit, Lineage
+from repro.core.scoring import Scorer, ScoreVector
+from repro.core.search_space import KernelGenome, seed_genome
+from repro.core.supervisor import Supervisor
+from repro.core.toolbelt import Toolbelt
+from repro.core.variation import (AgenticVariationOperator, PlanExecuteSummarize,
+                                  SingleShotMutation)
+
+__all__ = [
+    "AgentPolicy", "Directive", "ScriptedAgent", "VariationResult",
+    "ContinuousEvolution", "EvolutionReport", "KnowledgeBase",
+    "BenchConfig", "estimate", "expert_reference", "fa_reference",
+    "gqa_suite", "mha_suite", "Commit", "Lineage", "Scorer", "ScoreVector",
+    "KernelGenome", "seed_genome", "Supervisor", "Toolbelt",
+    "AgenticVariationOperator", "PlanExecuteSummarize", "SingleShotMutation",
+]

@@ -1,0 +1,91 @@
+"""Continuous evolution (paper §3.3): a loop that periodically produces new
+committed versions without human intervention, with supervisor interventions
+on stagnation and commit-per-version persistence.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.agent import Directive
+from repro.core.knowledge import KnowledgeBase
+from repro.core.population import Lineage
+from repro.core.scoring import Scorer
+from repro.core.supervisor import Supervisor
+from repro.core.toolbelt import Toolbelt
+from repro.core.variation import AgenticVariationOperator
+
+
+@dataclass
+class EvolutionReport:
+    commits: int
+    steps: int
+    internal_attempts: int
+    interventions: int
+    tool_stats: dict
+    best_geomean: float
+    wall_seconds: float
+    traces: list = field(default_factory=list)
+
+
+class ContinuousEvolution:
+    def __init__(self, scorer: Optional[Scorer] = None,
+                 operator=None, supervisor: Optional[Supervisor] = None,
+                 lineage: Optional[Lineage] = None,
+                 persist_path: Optional[str] = None):
+        self.scorer = scorer or Scorer()
+        self.kb = KnowledgeBase()
+        self.lineage = lineage or Lineage()
+        self.tools = Toolbelt(self.scorer, self.kb, self.lineage)
+        self.operator = operator or AgenticVariationOperator()
+        self.supervisor = supervisor or Supervisor()
+        self.persist_path = persist_path
+
+    @classmethod
+    def resume(cls, persist_path: str, **kw) -> "ContinuousEvolution":
+        lineage = Lineage.load(persist_path) if os.path.exists(persist_path) else None
+        return cls(lineage=lineage, persist_path=persist_path, **kw)
+
+    def run(self, max_steps: int = 60, target_commits: Optional[int] = None,
+            wall_budget_s: Optional[float] = None, verbose: bool = False
+            ) -> EvolutionReport:
+        t0 = time.time()
+        steps = attempts = 0
+        traces = []
+        start_commits = len(self.lineage)
+        for step in range(max_steps):
+            if target_commits is not None and \
+                    len(self.lineage) - start_commits >= target_commits:
+                break
+            if wall_budget_s is not None and time.time() - t0 > wall_budget_s:
+                break
+            steps += 1
+            directive = self.supervisor.check(self.lineage)
+            result = self.operator.vary(self.tools, directive)
+            attempts += result.internal_attempts
+            traces.append({"step": step, "directive": directive.note,
+                           "committed": result.committed, "note": result.note,
+                           "attempts": result.internal_attempts,
+                           "trace": [list(t) for t in result.trace]})
+            if result.committed:
+                self.lineage.update(result.genome, result.score, result.note,
+                                    result.internal_attempts)
+                if self.persist_path:
+                    self.lineage.save(self.persist_path)
+            self.supervisor.observe(result.committed)
+            if verbose:
+                head = self.lineage.best()
+                print(f"[step {step:3d}] committed={result.committed} "
+                      f"best={head.geomean if head else 0:.1f} TFLOPS "
+                      f"attempts={result.internal_attempts}  {result.note[:80]}")
+        best = self.lineage.best()
+        return EvolutionReport(
+            commits=len(self.lineage) - start_commits, steps=steps,
+            internal_attempts=attempts,
+            interventions=self.supervisor.interventions,
+            tool_stats=self.tools.stats(),
+            best_geomean=best.geomean if best else 0.0,
+            wall_seconds=time.time() - t0, traces=traces)

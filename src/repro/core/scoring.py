@@ -1,0 +1,159 @@
+"""The AVO scoring function ``f``.
+
+``f(x) = (f_1(x), ..., f_n(x))`` — one entry per benchmark configuration
+(paper §3.1).  A candidate failing *numerical correctness* scores zero on
+every configuration regardless of throughput; a candidate that is infeasible
+on a configuration (VMEM overflow — the TPU analogue of a launch failure)
+scores zero on that configuration.
+
+Correctness is executed for real: the genome is materialized into its Pallas
+kernel and run in ``interpret=True`` mode on CPU against the ``ref.py``
+oracle, on a reduced proxy shape (full 32k shapes are not runnable in the
+interpreter; the kernel's behaviour is shape-generic).  Throughput comes from
+``perfmodel.estimate`` — see that module's docstring for the machine model.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import perfmodel
+from repro.core.perfmodel import BenchConfig, Profile, estimate, mha_suite
+from repro.core.search_space import KernelGenome
+
+CORRECTNESS_TOL = 2e-5
+
+
+@dataclass
+class ScoreVector:
+    config_names: tuple
+    values: tuple                 # TFLOPS per config (0 = failed/infeasible)
+    correct: bool
+    failure: str = ""
+    profiles: dict = field(default_factory=dict)   # name -> Profile
+
+    @property
+    def geomean(self) -> float:
+        vals = [v for v in self.values]
+        if not vals or any(v <= 0 for v in vals):
+            return 0.0
+        return float(np.exp(np.mean(np.log(vals))))
+
+    def dominant_bottleneck(self) -> str:
+        """Aggregate bottleneck across configs, weighted by modelled time."""
+        agg: dict[str, float] = {}
+        for p in self.profiles.values():
+            if not p.feasible:
+                agg["vmem"] = agg.get("vmem", 0.0) + 1.0
+                continue
+            for term, t in (("mxu", p.t_mxu), ("vpu", p.t_vpu_exposed),
+                            ("dma", p.t_dma_exposed), ("overhead", p.t_overhead),
+                            ("bubble", p.t_bubble)):
+                agg[term] = agg.get(term, 0.0) + t
+        return max(agg, key=agg.get) if agg else "mxu"
+
+
+def _correctness_proxy_shapes(suite: Sequence[BenchConfig]):
+    """Small executable shapes covering the mask/GQA space of the suite."""
+    shapes = []
+    has_gqa = any(c.n_heads != c.n_kv_heads for c in suite)
+    for causal in sorted({c.causal for c in suite}):
+        windows = sorted({c.window for c in suite}, key=lambda w: (w is None, w))
+        for window in windows:
+            w = None if window is None else 48
+            shapes.append(dict(B=1, Hq=4, Hkv=(2 if has_gqa else 4),
+                               S=160, D=64, causal=causal, window=w))
+    return shapes
+
+
+class Scorer:
+    """Callable scoring function with per-genome memoization."""
+
+    def __init__(self, suite: Optional[Sequence[BenchConfig]] = None,
+                 check_correctness: bool = True, rng_seed: int = 0):
+        self.suite = list(suite) if suite is not None else mha_suite()
+        self.check_correctness = check_correctness
+        self._cache: dict[str, ScoreVector] = {}
+        self._rng = np.random.default_rng(rng_seed)
+        self.n_evaluations = 0
+        self._proxy_inputs = None
+
+    # -- correctness ----------------------------------------------------------
+    def _proxy_data(self):
+        if self._proxy_inputs is None:
+            import jax.numpy as jnp
+            shapes = _correctness_proxy_shapes(self.suite)
+            data = []
+            for sh in shapes:
+                q = jnp.asarray(self._rng.normal(size=(sh["B"], sh["Hq"], sh["S"], sh["D"])),
+                                jnp.float32)
+                k = jnp.asarray(self._rng.normal(size=(sh["B"], sh["Hkv"], sh["S"], sh["D"])),
+                                jnp.float32)
+                v = jnp.asarray(self._rng.normal(size=(sh["B"], sh["Hkv"], sh["S"], sh["D"])),
+                                jnp.float32)
+                data.append((sh, q, k, v))
+            self._proxy_inputs = data
+        return self._proxy_inputs
+
+    def check(self, genome: KernelGenome) -> tuple[bool, str]:
+        """Execute the genome's kernel (interpret mode) against the oracle."""
+        import jax.numpy as jnp
+        from repro.kernels.flash_attention import flash_attention
+        from repro.kernels.ref import mha_reference
+        kw = genome.kernel_kwargs()
+        # proxy shapes are small; scale blocks down proportionally so the
+        # structural path (grid/loop/skip/branch) is still exercised
+        kw["block_q"] = max(16, min(kw["block_q"], 2048) // 16)
+        kw["block_k"] = max(16, min(kw["block_k"], 2048) // 16)
+        for sh, q, k, v in self._proxy_data():
+            try:
+                o = flash_attention(q, k, v, causal=sh["causal"], window=sh["window"],
+                                    interpret=True, **kw)
+            except Exception as e:  # trace/lowering failure
+                return False, f"kernel raised: {type(e).__name__}: {e}"
+            r = mha_reference(q, k, v, causal=sh["causal"], window=sh["window"])
+            err = float(jnp.max(jnp.abs(o - r)))
+            if not math.isfinite(err) or err > CORRECTNESS_TOL:
+                return False, (f"numerical mismatch vs oracle: max|err|={err:.2e} "
+                               f"on {sh}")
+        return True, ""
+
+    # -- scoring ----------------------------------------------------------------
+    def __call__(self, genome: KernelGenome) -> ScoreVector:
+        key = genome.key()
+        if key in self._cache:
+            return self._cache[key]
+        self.n_evaluations += 1
+
+        if self.check_correctness:
+            ok, why = self.check(genome)
+            if not ok:
+                sv = ScoreVector(tuple(c.name for c in self.suite),
+                                 tuple(0.0 for _ in self.suite), False, why)
+                self._cache[key] = sv
+                return sv
+
+        values, profiles = [], {}
+        for cfg in self.suite:
+            p = estimate(genome, cfg)
+            profiles[cfg.name] = p
+            values.append(p.tflops if p.feasible else 0.0)
+        failure = ""
+        if any(v == 0.0 for v in values):
+            bad = [c.name for c, v in zip(self.suite, values) if v == 0.0]
+            failure = "infeasible on: " + ", ".join(
+                f"{n} ({profiles[n].infeasible_reason})" for n in bad)
+        sv = ScoreVector(tuple(c.name for c in self.suite), tuple(values),
+                         True, failure, profiles)
+        self._cache[key] = sv
+        return sv
+
+    def baselines(self) -> dict:
+        """Expert (cuDNN-analogue) and FA-reference scores on this suite."""
+        return {
+            "expert": tuple(perfmodel.expert_reference(c) for c in self.suite),
+            "fa_reference": tuple(perfmodel.fa_reference(c) for c in self.suite),
+        }

@@ -1,0 +1,52 @@
+"""Self-supervision (paper §3.3): detect stalls and unproductive cycles in
+the long-running evolution and intervene by steering the search.
+
+Stall      = no committed improvement in `patience` consecutive variation
+             steps (the agent 'exhausted its current line of exploration').
+Cycle      = the same bottleneck attacked repeatedly with no commit.
+
+On trigger, the supervisor reviews the trajectory and emits a Directive that
+redirects exploration: first widening the candidate pool ('explore'), then
+rotating focus to the least-recently-attacked bottleneck ('refocus').
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.agent import Directive
+from repro.core.population import Lineage
+
+_ALL_TAGS = ("mxu", "vpu", "dma", "overhead", "bubble")
+
+
+@dataclass
+class Supervisor:
+    patience: int = 3
+    interventions: int = 0
+    log: list = field(default_factory=list)
+    _steps_since_commit: int = 0
+    _focus_rotation: int = 0
+
+    def observe(self, committed: bool) -> None:
+        self._steps_since_commit = 0 if committed else self._steps_since_commit + 1
+
+    def check(self, lineage: Lineage) -> Directive:
+        if self._steps_since_commit < self.patience:
+            return Directive()
+        self.interventions += 1
+        # review the trajectory: what has already been tried?
+        recent_notes = " ".join(c.note for c in lineage.commits[-8:])
+        if self._steps_since_commit < 2 * self.patience:
+            d = Directive(kind="explore",
+                          note=(f"intervention #{self.interventions}: plateau for "
+                                f"{self._steps_since_commit} steps — widen the "
+                                f"candidate pool across all subsystems"),
+                          exploration_depth=self._steps_since_commit)
+        else:
+            tag = _ALL_TAGS[self._focus_rotation % len(_ALL_TAGS)]
+            self._focus_rotation += 1
+            d = Directive(kind="refocus", focus_tags=(tag,),
+                          note=(f"intervention #{self.interventions}: rotate focus "
+                                f"to '{tag}' (recent commits: {recent_notes[:120]})"))
+        self.log.append(d.note)
+        return d

@@ -1,0 +1,77 @@
+"""The agent's tool interface (paper Fig. 2: previous solutions, evaluation
+utilities, tools, persistent memory).
+
+Every call is counted — the paper reports "over 500 optimization directions"
+of internal exploration; ``stats()`` reproduces that accounting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.knowledge import KnowledgeBase
+from repro.core.population import Lineage
+from repro.core.scoring import Scorer, ScoreVector
+from repro.core.search_space import KernelGenome
+
+
+@dataclass
+class ToolCall:
+    tool: str
+    detail: str = ""
+
+
+class Toolbelt:
+    def __init__(self, scorer: Scorer, kb: KnowledgeBase, lineage: Lineage):
+        self.scorer = scorer
+        self.kb = kb
+        self.lineage = lineage
+        self.calls: list[ToolCall] = []
+        # persistent memory across variation steps: refuted edits per context
+        self.memory_refuted: set = set()
+        self.memory_notes: list[str] = []
+
+    # -- lineage access (the P_t the agent can consult) -------------------------
+    def best_commit(self):
+        self.calls.append(ToolCall("lineage.best"))
+        return self.lineage.best()
+
+    def recent_commits(self, n: int = 5):
+        self.calls.append(ToolCall("lineage.recent", f"n={n}"))
+        return self.lineage.commits[-n:]
+
+    def diff(self, a: KernelGenome, b: KernelGenome):
+        self.calls.append(ToolCall("lineage.diff"))
+        return a.diff(b)
+
+    # -- evaluation utility f ----------------------------------------------------
+    def evaluate(self, genome: KernelGenome) -> ScoreVector:
+        self.calls.append(ToolCall("evaluate", genome.key()))
+        return self.scorer(genome)
+
+    def profile(self, sv: ScoreVector) -> dict:
+        """Per-config time breakdown — the profiler the agent reads."""
+        self.calls.append(ToolCall("profile"))
+        return {name: p.breakdown() for name, p in sv.profiles.items() if p.feasible}
+
+    # -- knowledge base K ----------------------------------------------------------
+    def consult_kb(self, genome, sv, *tags):
+        self.calls.append(ToolCall("consult_kb", ",".join(tags)))
+        return self.kb.suggestions(genome, sv, self.scorer.suite, *tags)
+
+    # -- persistent memory -----------------------------------------------------------
+    def remember_refuted(self, genome: KernelGenome, edit: dict, why: str):
+        self.memory_refuted.add((genome.key(), tuple(sorted(edit.items()))))
+        self.memory_notes.append(f"refuted {edit} on {genome.key()[:48]}…: {why}")
+
+    def is_refuted(self, genome: KernelGenome, edit: dict) -> bool:
+        return (genome.key(), tuple(sorted(edit.items()))) in self.memory_refuted
+
+    # -- accounting ---------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "tool_calls": len(self.calls),
+            "evaluations": self.scorer.n_evaluations,
+            "kb_consults": self.kb.n_consults,
+            "refuted_memories": len(self.memory_refuted),
+        }

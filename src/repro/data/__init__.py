@@ -1,0 +1,3 @@
+from repro.data.pipeline import PipelineState, TokenPipeline
+
+__all__ = ["PipelineState", "TokenPipeline"]

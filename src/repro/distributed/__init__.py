@@ -1,0 +1,5 @@
+from repro.distributed.context import (
+    batch_axes, div_axis, get_mesh, set_mesh, shard, shard_batch,
+)
+
+__all__ = ["batch_axes", "div_axis", "get_mesh", "set_mesh", "shard", "shard_batch"]

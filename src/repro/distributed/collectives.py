@@ -1,0 +1,69 @@
+"""Distributed-optimization tricks: gradient compression with error feedback.
+
+Cross-pod gradient reduction moves bytes over the (slow) inter-pod links; the
+compression below shrinks those bytes 2x (bf16) or 4x (int8 + error
+feedback), visible directly in the dry-run HLO as smaller all-reduce operand
+types — i.e. the roofline's collective term drops proportionally.
+
+int8 uses per-tensor scale + error feedback (residual carried into the next
+step) so compression noise does not bias the optimizer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_init(grads):
+    """Error-feedback residual buffers (zeros, same structure as grads)."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def compress_bf16(grads):
+    return jax.tree_util.tree_map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads):
+    return jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+
+def compress_int8_ef(grads, residual):
+    """Quantize (grad + residual) to int8 with per-tensor scale; return
+    (quantized int8, scales, new_residual)."""
+    def q(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        qv = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_r = gf - qv.astype(jnp.float32) * scale
+        return qv, scale, new_r
+
+    out = jax.tree_util.tree_map(q, grads, residual)
+    unzip = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+    return unzip(0), unzip(1), unzip(2)
+
+
+def decompress_int8(qgrads, scales):
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, qgrads, scales)
+
+
+def apply_grad_compression(grads, method: str, residual=None):
+    """Round-trip compression applied at the microbatch-reduction boundary.
+
+    Under pjit, grads carry FSDP shardings; casting them before the implicit
+    cross-pod reduction makes XLA emit the all-reduce in the compressed dtype.
+    Returns (grads_f32, new_residual).
+    """
+    if method == "none":
+        return grads, residual
+    if method == "bf16":
+        return decompress_bf16(compress_bf16(grads)), residual
+    if method == "int8_ef":
+        assert residual is not None, "int8_ef needs error-feedback buffers"
+        q, s, new_r = compress_int8_ef(grads, residual)
+        return decompress_int8(q, s), new_r
+    raise ValueError(f"unknown compression {method!r}")

@@ -1,0 +1,73 @@
+"""Mesh context threading for activation sharding constraints.
+
+Models call ``shard_batch(x)`` / ``shard(x, *axes)`` to annotate activations;
+when no mesh is active (CPU tests) these are identity.  The launcher sets the
+mesh before tracing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def batch_axes() -> tuple:
+    """Mesh axes that jointly shard the global batch (pod DP x FSDP data)."""
+    if _MESH is None:
+        return ()
+    names = _MESH.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def model_axis() -> Optional[str]:
+    if _MESH is None or "model" not in _MESH.axis_names:
+        return None
+    return "model"
+
+
+def axis_size(name: str) -> int:
+    if _MESH is None or name not in _MESH.axis_names:
+        return 1
+    return _MESH.shape[name]
+
+
+def div_axis(n: int, axis: str = "model"):
+    """Return ``axis`` if the active mesh can evenly shard a dim of size n."""
+    if _MESH is None or axis not in _MESH.axis_names:
+        return None
+    return axis if n % _MESH.shape[axis] == 0 else None
+
+
+def shard(x, *spec):
+    """with_sharding_constraint under the active mesh (identity without one)."""
+    if _MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*spec)))
+
+
+def shard_batch(x):
+    """Shard dim0 over the batch axes; replicate the rest."""
+    if _MESH is None:
+        return x
+    ba = batch_axes()
+    return shard(x, ba if ba else None, *([None] * (x.ndim - 1)))
+
+
+def shard_activation(x):
+    """(batch, seq, d_model) activations: batch over DP axes, d_model replicated."""
+    if _MESH is None:
+        return x
+    ba = batch_axes()
+    return shard(x, ba if ba else None, *([None] * (x.ndim - 2)), None)

@@ -1,0 +1,153 @@
+"""Parameter / batch sharding rules: pod-DP x FSDP(data) x TP(model).
+
+Rules are name-based over the parameter pytree:
+  * model-parallel (TP) dims: attention head projections, MLP hidden, vocab,
+    MoE experts (EP when the expert count divides the model axis);
+  * FSDP (ZeRO): the remaining largest dim of every weight is sharded over
+    "data" when divisible — parameters, gradients and optimizer state are all
+    stored sharded and all-gathered on use by XLA;
+  * the "pod" axis is pure data parallelism: parameters replicated across
+    pods, gradients all-reduced over ("pod",) — optionally in compressed
+    precision (see collectives.py).
+
+Every rule degrades gracefully: a dim that does not divide its axis stays
+replicated (GSPMD-safe for the dry run on any mesh).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _axis_ok(mesh: Mesh, axis: str, dim: int) -> bool:
+    return axis in mesh.axis_names and dim % mesh.shape[axis] == 0
+
+
+def _spec_for(path: str, shape: tuple, mesh: Mesh, cfg: ArchConfig) -> P:
+    """Assign (TP dim, FSDP dim) by parameter name; stacked layer dims lead."""
+    ndim = len(shape)
+    spec: list = [None] * ndim
+
+    def put(idx: int, axis: str):
+        # each mesh axis may shard at most one positional dim; out-of-range
+        # dims (unusually-shaped params) stay replicated
+        if not (0 <= idx < ndim):
+            return
+        if spec[idx] is None and axis not in spec and _axis_ok(mesh, axis, shape[idx]):
+            spec[idx] = axis
+
+    name = path.split("/")[-1]
+    stacked = path.split("/")[0] in ("dec", "enc")      # leading n_periods dim
+
+    if name in ("embed", "lm_head"):
+        vocab_dim = 0 if name == "embed" else 1
+        put(vocab_dim, "model")
+        put(1 - vocab_dim, "data")
+    elif name in ("wq", "wk", "wv", "c_wq", "c_wk", "c_wv"):
+        put(ndim - 1, "model")                           # head-projection out dim
+        put(ndim - 2, "data")
+    elif name in ("wo", "c_wo"):
+        put(ndim - 2, "model")                           # head dim contracts
+        put(ndim - 1, "data")
+    elif name in ("w_gate", "w_up"):
+        if ndim >= 2 and cfg.moe is not None and len(shape) == 4:
+            put(1, "model")                              # EP over experts
+            put(3, "model")                              # else TP over d_ff
+            put(2, "data")
+        else:
+            put(ndim - 1, "model")
+            put(ndim - 2, "data")
+    elif name == "w_down":
+        if cfg.moe is not None and len(shape) == 4:
+            put(1, "model")
+            put(2, "model")
+            put(3, "data")
+        else:
+            put(ndim - 2, "model")
+            put(ndim - 1, "data")
+    elif name == "router":
+        put(ndim - 2, "data")
+    elif name in ("in_proj", "out_proj"):
+        put(ndim - 1, "model" if name == "in_proj" else "data")
+        put(ndim - 2, "data" if name == "in_proj" else "model")
+    elif ndim >= 2 and max(shape) >= 1024:
+        put(int(max(range(ndim), key=lambda i: shape[i])), "data")
+    # small tensors (norms, biases, conv, A_log, ...) stay replicated
+    if stacked:
+        spec[0] = None                                   # scan dim never sharded
+    return P(*spec)
+
+
+def param_shardings(params, mesh: Mesh, cfg: ArchConfig):
+    """NamedSharding pytree matching ``params``."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def path_str(kp):
+        return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+    specs = {}
+    for kp, leaf in flat:
+        specs[path_str(kp)] = _spec_for(path_str(kp), leaf.shape, mesh, cfg)
+
+    def assign(kp, leaf):
+        return NamedSharding(mesh, specs[path_str(kp)])
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    """Batch dim over (pod, data); everything else replicated."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def assign(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim and leaf.shape[0] % _prod(mesh, dp) == 0:
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(assign, batch)
+
+
+def _prod(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return max(n, 1)
+
+
+def cache_shardings(cache, mesh: Mesh, cfg: ArchConfig):
+    """KV cache: shard the largest dim over (pod,data) — the batch dim for
+    batched decode, the cache-length dim for long_500k (batch=1) — and the
+    largest remaining divisible dim over "model".
+
+    Layout: (n_periods, B, Hkv, L, Dh) for k/v; mamba state (n_per, B, H, P, N).
+    Dim 0 (the scan-over-periods dim) is never sharded.
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dpn = _prod(mesh, dp)
+    mdl = mesh.shape.get("model", 1) if "model" in mesh.axis_names else 1
+
+    def assign(leaf):
+        if leaf.ndim <= 1:
+            return NamedSharding(mesh, P())
+        spec = [None] * leaf.ndim
+        cand = sorted(range(1, leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in cand:
+            if dp and leaf.shape[i] % dpn == 0:
+                spec[i] = dp
+                break
+        for i in cand:
+            if spec[i] is None and mdl > 1 and leaf.shape[i] % mdl == 0:
+                spec[i] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(assign, cache)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)

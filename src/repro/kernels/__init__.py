@@ -1,0 +1,6 @@
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ssd import ssd_chunked
+
+__all__ = ["ops", "ref", "flash_attention", "flash_decode", "ssd_chunked"]

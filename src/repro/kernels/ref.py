@@ -1,0 +1,357 @@
+"""Pure-jnp reference oracles for every kernel in this package.
+
+These are the ground truth that (a) Pallas kernels are allclose-tested
+against in ``tests/``, and (b) the model stack falls back to on CPU (and in
+the 512-device dry-run, where Mosaic cannot lower).  The blocked variants are
+memory-safe at long sequence lengths: they never materialize the full
+``N x N`` score matrix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps exp()/where() NaN-free
+
+
+def _softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+# ---------------------------------------------------------------------------
+# Attention (naive oracle — small shapes only)
+# ---------------------------------------------------------------------------
+
+
+def mha_reference(
+    q: jnp.ndarray,               # (B, Hq, Sq, D)
+    k: jnp.ndarray,               # (B, Hkv, Sk, D)
+    v: jnp.ndarray,               # (B, Hkv, Sk, D)
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Naive attention with full score materialization.  GQA via head repeat.
+
+    ``q_offset`` is the absolute position of q[…, 0, :] (used when scoring a
+    suffix of the sequence against a longer K/V, e.g. decode).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (blocked online-softmax — memory-safe, CPU/dry-run fallback)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_k", "q_offset"),
+)
+def flash_reference_blocked(
+    q: jnp.ndarray,               # (B, Hq, Sq, D)
+    k: jnp.ndarray,               # (B, Hkv, Sk, D)
+    v: jnp.ndarray,               # (B, Hkv, Sk, D)
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    block_k: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """FlashAttention math as a lax.scan over K/V chunks (pure jnp).
+
+    Never materializes more than (B, Hq, Sq, block_k) scores at once, so it is
+    safe at 32k+ sequence lengths; identical math to the Pallas kernel.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    rep = Hq // Hkv
+    scale_ = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    bk = min(block_k, Sk)
+    pad = (-Sk) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = (Sk + pad) // bk
+    kc = k.reshape(B, Hkv, nk, bk, D).transpose(2, 0, 1, 3, 4)  # (nk, B, Hkv, bk, D)
+    vc = v.reshape(B, Hkv, nk, bk, D).transpose(2, 0, 1, 3, 4)
+
+    qf = q.astype(jnp.float32)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+
+    @jax.checkpoint
+    def step(carry, xs):
+        # checkpointed: scores/probabilities are recomputed in the backward
+        # instead of saved per KV block — flash-attention backward semantics;
+        # without this the scan saves (B,H,Sq,bk) tensors x n_blocks (measured
+        # 17 GiB/chip live on seamless train_4k)
+        acc, m, l = carry
+        kb, vb, jblk = xs
+        kb = jnp.repeat(kb, rep, axis=1) if rep > 1 else kb
+        vb = jnp.repeat(vb, rep, axis=1) if rep > 1 else vb
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb.astype(jnp.float32)) * scale_
+        s = _softcap(s, softcap)
+        kpos = jblk * bk + jnp.arange(bk)[None, :]
+        mask = kpos < Sk
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vb.astype(jnp.float32))
+        l = l * alpha + p.sum(axis=-1)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, Hq, Sq, D), jnp.float32)
+    m0 = jnp.full((B, Hq, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kc, vc, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "scale", "chunk_q"),
+)
+def flash_reference_banded(
+    q: jnp.ndarray,               # (B, Hq, S, D)
+    k: jnp.ndarray,               # (B, Hkv, S, D)
+    v: jnp.ndarray,               # (B, Hkv, S, D)
+    *,
+    window: int,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    chunk_q: int = 2048,
+) -> jnp.ndarray:
+    """Causal sliding-window attention over STATIC kv bands.
+
+    Each q-chunk of ``cq`` rows attends a dynamic-start, static-size band of
+    ``window + cq`` keys — the jnp mirror of the Pallas kernel's block_skip
+    grid, so masked-out key blocks cost neither FLOPs nor HBM traffic (the
+    scan-over-all-blocks path touches all S keys per q row; §Perf iter on
+    gemma2 prefill_32k).  Requires causal + window; aligned q/k positions.
+    """
+    B, Hq, S, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert S == Sk, "banded path assumes aligned q/k (prefill)"
+    rep = Hq // Hkv
+    scale_ = scale if scale is not None else 1.0 / (D ** 0.5)
+    cq = min(chunk_q, S)
+    assert S % cq == 0, (S, cq)
+    nq = S // cq
+    band = min(S, window + cq)
+
+    kr = jnp.repeat(k, rep, axis=1) if rep > 1 else k
+    vr = jnp.repeat(v, rep, axis=1) if rep > 1 else v
+    qf = q.astype(jnp.float32)
+
+    @jax.checkpoint
+    def chunk(_, i):
+        # checkpointed: the (cq, band) score tile is recomputed in the bwd
+        q_lo = i * cq
+        start = jnp.maximum(0, q_lo + cq - band)
+        kb = jax.lax.dynamic_slice(kr, (0, 0, start, 0), (B, Hq, band, D))
+        vb = jax.lax.dynamic_slice(vr, (0, 0, start, 0), (B, Hq, band, D))
+        qb = jax.lax.dynamic_slice(qf, (0, 0, q_lo, 0), (B, Hq, cq, D))
+        s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb.astype(jnp.float32)) * scale_
+        s = _softcap(s, softcap)
+        qpos = q_lo + jnp.arange(cq)[:, None]
+        kpos = start + jnp.arange(band)[None, :]
+        mask = (kpos <= qpos) & (kpos > qpos - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        # NOTE (§Perf gemma2 iter3, refuted): casting P to bf16 for the PV
+        # GEMM (flash-kernel convention) was measured to ADD +10% HBM bytes
+        # here — the convert materializes as its own pass in this lowering
+        # instead of fusing into the dot operand.  Kept in f32.
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, vb.astype(jnp.float32))
+        return None, o.astype(q.dtype)
+
+    _, chunks = jax.lax.scan(chunk, None, jnp.arange(nq))   # (nq, B, Hq, cq, D)
+    return chunks.transpose(1, 2, 0, 3, 4).reshape(B, Hq, S, D)
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode (KV-cache) oracle
+# ---------------------------------------------------------------------------
+
+
+def decode_reference(
+    q: jnp.ndarray,               # (B, Hq, D) — one new token per sequence
+    k_cache: jnp.ndarray,         # (B, Hkv, L, D)
+    v_cache: jnp.ndarray,         # (B, Hkv, L, D)
+    valid_len: jnp.ndarray,       # (B,) int32 — entries [0, valid_len) are live
+    *,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    B, Hq, D = q.shape
+    _, Hkv, L, _ = k_cache.shape
+    rep = Hq // Hkv
+    kc = jnp.repeat(k_cache, rep, axis=1) if rep > 1 else k_cache
+    vc = jnp.repeat(v_cache, rep, axis=1) if rep > 1 else v_cache
+    scale_ = scale if scale is not None else 1.0 / (D ** 0.5)
+    s = jnp.einsum("bhd,bhld->bhl", q.astype(jnp.float32), kc.astype(jnp.float32)) * scale_
+    s = _softcap(s, softcap)
+    live = jnp.arange(L)[None, :] < valid_len[:, None]
+    s = jnp.where(live[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhl,bhld->bhd", p, vc.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD oracle (naive recurrence)
+# ---------------------------------------------------------------------------
+
+
+def ssd_reference(
+    x: jnp.ndarray,               # (B, L, H, P)
+    dt: jnp.ndarray,              # (B, L, H)      — already softplus'd
+    A: jnp.ndarray,               # (H,)           — negative decay rates
+    Bm: jnp.ndarray,              # (B, L, G, N)
+    Cm: jnp.ndarray,              # (B, L, G, N)
+    *,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential SSD recurrence:  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T,
+    y_t = C_t . h_t.  Groups broadcast over heads (H % G == 0)."""
+    B, L, H, P = x.shape
+    _, _, G, N = Bm.shape
+    hpg = H // G
+    Bh = jnp.repeat(Bm, hpg, axis=2)  # (B, L, H, N)
+    Ch = jnp.repeat(Cm, hpg, axis=2)
+
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bh.astype(jnp.float32), Ch.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(h, t):
+        decay = jnp.exp(dtf[:, t] * Af[None, :])                      # (B, H)
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dtf[:, t], xf[:, t], Bf[:, t])
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h, Cf[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(L))
+    y = ys.transpose(1, 0, 2, 3)                                      # (B, L, H, P)
+    return y.astype(x.dtype), h
+
+
+def ssd_chunked_reference(
+    x, dt, A, Bm, Cm, *, chunk: int = 64, init_state=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD (the algorithm the Pallas kernel implements) in pure jnp.
+
+    Splits L into chunks; intra-chunk attention-like quadratic term plus
+    inter-chunk state recurrence.  Must match ``ssd_reference``.
+    """
+    B, L, H, P = x.shape
+    _, _, G, N = Bm.shape
+    hpg = H // G
+    Q = chunk
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    Bh = jnp.repeat(Bm, hpg, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, hpg, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    # reshape into chunks: (nc, B, Q, H, ...)
+    def c(t):
+        return t.reshape(B, nc, Q, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    xc, dtc, Bc, Cc = c(xf), c(dtf), c(Bh), c(Ch)
+
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    @jax.checkpoint
+    def chunk_step(h, xs):
+        # checkpointed: the (Q,Q) decay/segment tensors are recomputed in the
+        # backward instead of saved per chunk (live-memory fit)
+        xq, dtq, Bq, Cq = xs                   # (B, Q, H, ...)
+        a = dtq * Af[None, None, :]            # (B, Q, H) log-decay per step
+        cum = jnp.cumsum(a, axis=1)            # inclusive cumulative log-decay
+        total = cum[:, -1]                     # (B, H)
+        # intra-chunk: y_intra[i] = sum_{j<=i} exp(cum_i - cum_j) dt_j (C_i.B_j) x_j
+        seg = cum[:, :, None, :] - cum[:, None, :, :]            # (B, Qi, Qj, H)
+        ii = jnp.arange(Q)
+        causal = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        # mask BEFORE exp: future entries have seg >> 0, and exp->inf at a
+        # masked position poisons the backward pass (0 * inf = NaN in the VJP)
+        decay = jnp.exp(jnp.where(causal, seg, NEG_INF))
+        cb = jnp.einsum("bihn,bjhn->bijh", Cq, Bq)
+        w = cb * decay * dtq[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xq)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bihn,bhpn,bih->bihp", Cq, h,
+                             jnp.exp(cum).transpose(0, 1, 2))
+        # state update: h' = exp(total) h + sum_j exp(total - cum_j) dt_j B_j x_j^T
+        w_state = jnp.exp(total[:, None, :] - cum) * dtq          # (B, Q, H)
+        h_new = h * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bjh,bjhp,bjhn->bhpn", w_state, xq, Bq)
+        return h_new, y_intra + y_inter
+
+    h, ys = jax.lax.scan(chunk_step, h0, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, L, H, P)
+    return y.astype(x.dtype), h
+
+
+def ssd_decode_reference(
+    x_t: jnp.ndarray,             # (B, H, P) one step
+    dt_t: jnp.ndarray,            # (B, H)
+    A: jnp.ndarray,               # (H,)
+    B_t: jnp.ndarray,             # (B, G, N)
+    C_t: jnp.ndarray,             # (B, G, N)
+    state: jnp.ndarray,           # (B, H, P, N)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    B, H, P = x_t.shape
+    G = B_t.shape[1]
+    hpg = H // G
+    Bh = jnp.repeat(B_t, hpg, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C_t, hpg, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32)[None])
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt_t.astype(jnp.float32),
+                     x_t.astype(jnp.float32), Bh)
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y.astype(x_t.dtype), state

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for the Mamba-2 SSD (state-space duality) chunked scan.
+
+The SSD algorithm splits the sequence into chunks of length Q: within a chunk
+the output is an attention-like quadratic form (MXU-friendly); across chunks a
+small (P x N) state is carried recurrently.  Grid: (B, n_head_blocks,
+n_chunks) — the chunk dimension is "arbitrary" and carries the state in VMEM
+scratch, exactly like the flash-attention accumulator.
+
+This kernel inherits AVO's block-shape genome axes (chunk length, heads per
+block) — the attention-specific axes are inapplicable to this attention-free
+family (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import _VMEM, _compiler_params
+
+
+def _ssd_body(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_out_ref, state_ref,
+    *, Q, bh, P, N, nc,
+):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, bh, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, bh)
+    A = a_ref[...].astype(jnp.float32)        # (bh,)
+    Bm = b_ref[0, :, 0].astype(jnp.float32)   # (Q, N)  (group broadcast, G=1 slice)
+    Cm = c_ref[0, :, 0].astype(jnp.float32)   # (Q, N)
+
+    a = dt * A[None, :]                       # (Q, bh) log-decay
+    cum = jnp.cumsum(a, axis=0)               # inclusive
+    total = cum[-1]                           # (bh,)
+
+    # ---- intra-chunk quadratic term (the "duality" GEMM) -------------------
+    cb = jax.lax.dot_general(                 # (Qi, Qj) = C @ B^T
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    seg = cum[:, None, :] - cum[None, :, :]   # (Qi, Qj, bh)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    causal = (ii >= jj)[:, :, None]
+    # mask BEFORE exp — exp(seg)->inf on future entries NaN-poisons the VJP
+    decay = jnp.exp(jnp.where(causal, seg, -1e30))
+    w = cb[:, :, None] * decay * dt[None, :, :]          # (Qi, Qj, bh)
+    y_intra = jnp.einsum("ijh,jhp->ihp", w, x)
+
+    # ---- inter-chunk: carried state contribution ----------------------------
+    state = state_ref[...]                                # (bh, P, N)
+    y_inter = jnp.einsum("in,hpn->ihp", Cm, state) * jnp.exp(cum)[:, :, None]
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # ---- state update --------------------------------------------------------
+    w_state = jnp.exp(total[None, :] - cum) * dt          # (Q, bh)
+    upd = jnp.einsum("jh,jhp,jn->hpn", w_state, x, Bm)
+    state_ref[...] = state * jnp.exp(total)[:, None, None] + upd
+
+    @pl.when(c_idx == nc - 1)
+    def _emit_state():
+        st_out_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_heads", "interpret"))
+def ssd_chunked(
+    x: jnp.ndarray,               # (B, L, H, P)
+    dt: jnp.ndarray,              # (B, L, H) — softplus'd step sizes
+    A: jnp.ndarray,               # (H,) negative decay rates
+    Bm: jnp.ndarray,              # (B, L, G=1, N)
+    Cm: jnp.ndarray,              # (B, L, G=1, N)
+    *,
+    chunk: int = 256,
+    block_heads: int = 8,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y: (B, L, H, P), final_state: (B, H, P, N))."""
+    B, L, H, P = x.shape
+    _, _, G, N = Bm.shape
+    assert G == 1, "kernel handles G=1 (group broadcast done by caller)"
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    bh = min(block_heads, H)
+    assert H % bh == 0, (H, bh)
+    nc, nh = L // Q, H // bh
+
+    y, st = pl.pallas_call(
+        functools.partial(_ssd_body, Q=Q, bh=bh, P=P, N=N, nc=nc),
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, bh, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, bh), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((bh,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, bh, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, bh, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[_VMEM((bh, P, N), jnp.float32)],
+        compiler_params=_compiler_params(("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, st

@@ -1,0 +1,331 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x mesh)
+cell against ShapeDtypeStruct stand-ins (no allocation), prove the sharding is
+coherent, and extract the roofline terms from the compiled artifact.
+
+  python -m repro.launch.dryrun --arch qwen2-7b --cell train_4k
+  python -m repro.launch.dryrun --all                 # full 40-cell matrix x 2 meshes
+  python -m repro.launch.dryrun --all --mesh single   # roofline baselines only
+
+Results are cached one JSON per cell under results/dryrun/ so interrupted
+matrix runs resume where they left off (--force recomputes).
+
+Attention dispatches to the blocked-jnp flash path here (identical math and
+FLOPs to the Pallas kernel): Mosaic cannot lower on the CPU dry-run backend,
+and interpret mode would unroll the 32k grids into the HLO.  See DESIGN.md.
+"""
+import argparse
+import functools
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES_BY_NAME, ShapeCell, cells_for
+from repro.configs.registry import ARCHS, get_arch
+from repro.distributed.context import set_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as S
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# -- TPU v5e hardware constants (per chip) -----------------------------------
+PEAK_FLOPS = 197e12        # bf16 TFLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link (~4 links/chip on a 2D torus)
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\(")
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "pred": 1, "s8": 1, "u8": 1}
+
+
+def _dtype_bytes(tag: str) -> int:
+    return _BYTES.get(tag, 1 if tag.startswith("f8") else 4)
+
+
+def _shape_bytes(tag: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _dtype_bytes(tag)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective in the (post-SPMD) HLO text.
+
+    Works on ``compiled.as_text()``: each collective instruction line carries
+    typed operands, e.g.  ``%ar = f32[512,1024]{1,0} all-reduce(f32[512,1024]
+    {1,0} %fusion.3), replica_groups=...``.
+    """
+    out: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operands = typed shapes after the instruction's open-paren
+        operands = line[m.end():]
+        # strip trailing attributes (replica_groups etc. carry no shapes)
+        operands = operands.split("), ")[0]
+        nbytes = sum(_shape_bytes(t, d) for t, d in _SHAPE_RE.findall(operands))
+        if nbytes == 0:  # fall back to the result shape (lhs of the '=')
+            lhs = line.split("=")[0]
+            nbytes = sum(_shape_bytes(t, d) for t, d in _SHAPE_RE.findall(lhs))
+        out[kind] = out.get(kind, 0) + nbytes
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes": out, "count": count, "total_bytes": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+# Per-cell lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(cfg: ArchConfig, cell: ShapeCell, mesh, *, genome=None,
+               extra: dict | None = None):
+    """Return ``jax.jit(step).lower(*abstract_args)`` for one dry-run cell."""
+    set_mesh(mesh)
+    extra = extra or {}
+    if cell.kind == "train":
+        from repro.launch.train import make_train_step
+        from repro.optim import AdamWState
+        n_micro = extra.get("n_microbatches")
+        if n_micro is None:
+            from repro.launch.train import default_microbatches
+            dp = 1
+            for a in ("pod", "data"):
+                if a in mesh.axis_names:
+                    dp *= mesh.shape[a]
+            mdl = mesh.shape.get("model", 1)
+            n_micro = default_microbatches(
+                cfg, cell.global_batch, seq_len=cell.seq_len,
+                dp_shards=dp,
+                model_shards=(mdl if cfg.vocab_size % mdl == 0 else 1))
+        step = make_train_step(cfg, n_microbatches=n_micro,
+                               compression=extra.get("compression", "none"),
+                               genome=genome, impl=extra.get("impl", "blocked"))
+        param_sds, param_sh = S.param_specs(cfg, mesh)
+        opt_sds = S.opt_specs(param_sds, param_sh)
+        batch_sds = S.batch_specs(cfg, cell, mesh)
+        residual = (jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32, sharding=x.sharding),
+            param_sds) if extra.get("compression") == "int8_ef" else None)
+        jitted = jax.jit(step, donate_argnums=(0, 1))
+        return jitted.lower(param_sds, opt_sds, residual, batch_sds)
+
+    if cell.kind == "prefill":
+        from repro.models import prefill
+        param_sds, param_sh = S.param_specs(cfg, mesh)
+        batch_sds = S.batch_specs(cfg, cell, mesh)
+        extras = {k: v for k, v in batch_sds.items()
+                  if k in ("prefix_embeds", "enc_frames")}
+
+        def prefill_step(params, tokens, **ex):
+            return prefill(params, cfg, tokens, cell.seq_len,
+                           compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+                           impl=extra.get("impl", "blocked"), genome=genome, **ex)
+
+        jitted = jax.jit(prefill_step)
+        return jitted.lower(param_sds, batch_sds["tokens"], **extras)
+
+    if cell.kind == "decode":
+        from repro.models import decode_step
+        param_sds, param_sh = S.param_specs(cfg, mesh)
+        cache_sds = S.cache_specs(cfg, cell, mesh)
+        tok_sds = S.token_specs(cfg, cell, mesh)
+
+        def serve_step(params, cache, token):
+            return decode_step(params, cfg, cache, token,
+                               compute_dtype=jnp.bfloat16,
+                               impl=extra.get("impl", "blocked"), genome=genome)
+
+        jitted = jax.jit(serve_step, donate_argnums=(1,))
+        return jitted.lower(param_sds, cache_sds, tok_sds)
+
+    raise ValueError(f"unknown cell kind {cell.kind!r}")
+
+
+def analyze(cfg: ArchConfig, cell: ShapeCell, lowered, compiled, mesh) -> dict:
+    """Extract the three roofline terms + memory analysis from one compile.
+
+    FLOPs/bytes/collectives come from the structural HLO walker
+    (``hlo_analysis.py`` — trip-count-aware, validated against hand counts);
+    the raw ``cost_analysis()`` numbers are recorded alongside for reference
+    (XLA:CPU counts while bodies once, so they undercount scanned programs).
+    All analyzer numbers are PER CHIP (the partitioned module's view).
+    """
+    from repro.launch.hlo_analysis import HloAnalysis
+
+    n_chips = mesh.devices.size
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+        "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes", 0),
+    }
+    h = HloAnalysis(compiled.as_text())
+    s = h.summary()
+
+    flops = s["flops"]                      # per chip
+    bytes_accessed = s["bytes_accessed"]    # per chip
+    coll_total = s["collective_total_bytes"]
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_total / ICI_BW
+
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    n_active = cfg.active_param_count()
+    model_flops = (6 if cell.kind == "train" else 2) * n_active * tokens
+
+    return {
+        "arch": cfg.name, "cell": cell.name, "mesh": list(mesh.axis_sizes),
+        "n_chips": n_chips,
+        "hlo_flops": flops, "hlo_bytes": bytes_accessed,
+        "hlo_dot_flops": s["dot_flops"],
+        "collectives": {"bytes": s["collective_bytes"],
+                        "count": s["collective_count"],
+                        "total_bytes": coll_total},
+        "top_collective_sites": [
+            [site[:140], b] for site, b in h.top_collective_sites(8)],
+        "memory": mem,
+        "cost_analysis_raw": {"flops": float(ca.get("flops", 0.0)),
+                              "bytes_accessed": float(ca.get("bytes accessed", 0.0))},
+        "terms_s": {"compute": compute_s, "memory": memory_s,
+                    "collective": collective_s},
+        "dominant": max(("compute", "memory", "collective"),
+                        key=lambda k: {"compute": compute_s, "memory": memory_s,
+                                       "collective": collective_s}[k]),
+        "model_flops": model_flops,
+        "model_flops_per_chip": model_flops / n_chips,
+        "useful_flops_frac": (model_flops / n_chips) / (flops if flops else 1.0),
+    }
+
+
+def run_cell(arch: str, cell_name: str, *, multi_pod: bool, force: bool = False,
+             genome=None, extra: dict | None = None, out_dir: str = RESULTS_DIR,
+             tag: str = "") -> dict:
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{cell_name}__{mesh_tag}{tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_arch(arch)
+    cell = SHAPES_BY_NAME[cell_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    extra = dict(extra or {})
+    # auto-fit: if the compiled train step's live temp exceeds HBM, double
+    # the microbatch count and recompile (the estimator cannot see every
+    # backward workspace; the compiled artifact is ground truth)
+    hbm_limit = 15.5 * 2**30
+    prev_temp = None
+    for attempt in range(4):
+        lowered = lower_cell(cfg, cell, mesh, genome=genome, extra=extra)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        temp = getattr(ma, "temp_size_in_bytes", 0)
+        if cell.kind != "train" or temp <= hbm_limit:
+            break
+        if prev_temp is not None and temp > prev_temp * 0.9:
+            # more microbatches are not shrinking the live set (an
+            # nm-invariant buffer dominates) — stop and report as-is
+            break
+        prev_temp = temp
+        from repro.launch.train import default_microbatches
+        cur = extra.get("n_microbatches")
+        if cur is None:
+            dp = 1
+            for a in ("pod", "data"):
+                if a in mesh.axis_names:
+                    dp *= mesh.shape[a]
+            mdl = mesh.shape.get("model", 1)
+            cur = default_microbatches(
+                cfg, cell.global_batch, seq_len=cell.seq_len, dp_shards=dp,
+                model_shards=(mdl if cfg.vocab_size % mdl == 0 else 1))
+        nxt = cur * 2
+        if cell.global_batch % nxt:
+            break
+        print(f"  [auto-fit] {arch}/{cell_name}: temp "
+              f"{temp / 2**30:.1f} GiB > 15.5 GiB at nm={cur}; retry nm={nxt}",
+              flush=True)
+        extra["n_microbatches"] = nxt
+    t_lower = time.time() - t0
+    t_compile = 0.0
+    rec = analyze(cfg, cell, lowered, compiled, mesh)
+    if extra.get("n_microbatches"):
+        rec["n_microbatches"] = extra["n_microbatches"]
+    rec["wall_s"] = {"lower": round(t_lower, 1), "compile": round(t_compile, 1)}
+    if genome is not None:
+        rec["genome"] = dict(genome)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def iter_matrix():
+    for arch in sorted(ARCHS):
+        for cell in cells_for(arch):
+            yield arch, cell.name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="architecture id (see configs/registry.py)")
+    ap.add_argument("--cell", help="shape cell name", default=None)
+    ap.add_argument("--all", action="store_true", help="full assigned matrix")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    if args.all:
+        todo = list(iter_matrix())
+    else:
+        assert args.arch, "--arch or --all required"
+        cells = [args.cell] if args.cell else [c.name for c in cells_for(args.arch)]
+        todo = [(args.arch, c) for c in cells]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch, cell in todo:
+        for multi_pod in meshes:
+            tag = "pod2" if multi_pod else "pod1"
+            try:
+                rec = run_cell(arch, cell, multi_pod=multi_pod,
+                               force=args.force, out_dir=args.out)
+                t = rec["terms_s"]
+                print(f"OK   {arch:22s} {cell:12s} {tag}  "
+                      f"compute={t['compute']:.3e}s memory={t['memory']:.3e}s "
+                      f"coll={t['collective']:.3e}s dominant={rec['dominant']:10s} "
+                      f"useful={rec['useful_flops_frac']:.2f} "
+                      f"wall={rec.get('wall_s')}", flush=True)
+            except Exception as e:  # a failing cell is a bug in our sharding
+                failures.append((arch, cell, tag, repr(e)[:300]))
+                print(f"FAIL {arch:22s} {cell:12s} {tag}  {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nall cells compiled")
+
+
+if __name__ == "__main__":
+    main()

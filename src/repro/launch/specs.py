@@ -1,0 +1,91 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape-cell) pair.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these.  ``input_specs`` covers the model inputs; ``state_specs`` covers
+params/optimizer; ``cache_specs`` covers decode caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        param_shardings, replicated)
+from repro.models import init_decode_cache, init_params
+from repro.optim import adamw_init
+
+
+def _sds(tree, shardings=None):
+    if shardings is None:
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        tree, shardings)
+
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh) -> dict:
+    """Model-input ShapeDtypeStructs for a train/prefill batch."""
+    B, S = cell.global_batch, cell.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.modality == "vision" and cfg.n_prefix_embeds:
+        batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_prefix_embeds, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_dec:
+        batch["enc_frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    sh = batch_shardings(batch, mesh)
+    return jax.tree_util.tree_map(
+        lambda b, s: jax.ShapeDtypeStruct(b.shape, b.dtype, sharding=s), batch, sh)
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh):
+    """Abstract params + their shardings (no allocation: eval_shape)."""
+    abstract = jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+    sh = param_shardings(abstract, mesh, cfg)
+    return _sds(abstract, sh), sh
+
+
+def opt_specs(param_sds, param_sh):
+    abstract = jax.eval_shape(adamw_init, param_sds)
+    mesh = jax.tree_util.tree_leaves(param_sh)[0].mesh
+
+    def assign(x):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, P()))
+
+    # mu/nu mirror params; step replicated
+    mu = jax.tree_util.tree_map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        abstract.mu, param_sh)
+    nu = jax.tree_util.tree_map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        abstract.nu, param_sh)
+    from repro.optim import AdamWState
+    return AdamWState(assign(abstract.step), mu, nu)
+
+
+def cache_specs(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh):
+    """Decode cache ShapeDtypeStructs (cache of length seq_len, batch B)."""
+    B, S = cell.global_batch, cell.seq_len
+    enc_len = min(S, 4096) if cfg.enc_dec else 0
+    abstract = jax.eval_shape(
+        functools.partial(init_decode_cache, cfg, B, S, enc_len=enc_len))
+    sh = cache_shardings(abstract, mesh, cfg)
+    return _sds(abstract, sh)
+
+
+def token_specs(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    spec = P(dp) if cell.global_batch % n == 0 else P()
+    return jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32,
+                                sharding=NamedSharding(mesh, spec))

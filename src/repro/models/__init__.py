@@ -1,0 +1,8 @@
+from repro.models.transformer import (
+    decode_step, encode, init_decode_cache, init_params, lm_logits, lm_loss, prefill,
+)
+
+__all__ = [
+    "decode_step", "encode", "init_decode_cache", "init_params",
+    "lm_logits", "lm_loss", "prefill",
+]

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm, global_norm, schedule)
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "global_norm", "schedule"]

@@ -1,0 +1,83 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule (pure pytree ops).
+
+Optimizer state mirrors the parameter pytree, so under pjit it inherits every
+parameter's sharding — with FSDP-sharded params this is ZeRO-sharded state by
+construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda t: jax.tree_util.tree_map(jnp.zeros_like, t)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+
+def schedule(cfg: AdamWConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+          for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.asarray(sq)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig):
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    grads, gn = clip_by_global_norm(grads, cfg.max_grad_norm)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh, vh = m / b1c, v / b2c
+        new_p = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        return new_p, m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, mu, nu), {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,31 @@
+"""Shared fixtures. Tests run on the single real CPU device — the 512-device
+dry-run env var is set ONLY inside launch/dryrun.py (subprocess), never here."""
+import os
+
+# keep test compiles small/fast and deterministic
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def qkv(rng, B=1, Hq=4, Hkv=2, S=128, D=64, dtype=np.float32):
+    import jax.numpy as jnp
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), dtype)
+    return q, k, v
+
+
+@pytest.fixture(scope="session")
+def tiny_archs():
+    """Reduced configs for all 10 assigned architectures."""
+    from repro.configs.registry import ARCHS
+    return {name: cfg.reduced() for name, cfg in ARCHS.items()}

@@ -1,0 +1,273 @@
+"""Scoring function f, lineage/population, genome space, supervisor,
+variation operators, and the continuous-evolution loop."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (AgenticVariationOperator, ContinuousEvolution,
+                        Directive, KnowledgeBase, Lineage, PlanExecuteSummarize,
+                        Scorer, ScriptedAgent, SingleShotMutation, Supervisor,
+                        Toolbelt)
+from repro.core.perfmodel import BenchConfig, estimate, mha_suite
+from repro.core.search_space import (KernelGenome, full_space, seed_genome)
+
+FAST_SUITE = [BenchConfig("c4k", 8, 16, 16, 4096, causal=True),
+              BenchConfig("n4k", 8, 16, 16, 4096, causal=False)]
+
+
+@pytest.fixture(scope="module")
+def scorer():
+    return Scorer(suite=FAST_SUITE)
+
+
+# -- genome ----------------------------------------------------------------
+
+
+def test_genome_roundtrip():
+    g = KernelGenome(256, 512, "branchless", "block_skip", "deferred", True, True)
+    assert KernelGenome.from_dict(json.loads(g.key())) == g
+
+
+def test_genome_neighbors_single_field():
+    g = seed_genome()
+    for n in g.neighbors():
+        assert n != g
+        assert len(g.diff(n)) == 1
+
+
+def test_full_space_size():
+    n = sum(1 for _ in full_space())
+    assert n == 6 * 5 * 2 * 2 * 2 * 2 * 2 * 2
+
+
+def test_correctness_gate_rejects_bf16_accumulator():
+    """The acc_dtype=bf16 genome is VMEM-cheaper but numerically wrong at the
+    gate's tolerance — f must zero it (paper §3.1: incorrect candidates score
+    zero regardless of throughput)."""
+    s = Scorer(suite=FAST_SUITE)
+    sv = s(seed_genome().with_(acc_dtype="bf16"))
+    assert not sv.correct
+    assert sv.geomean == 0.0
+    assert "mismatch" in sv.failure
+
+
+# -- scoring f ----------------------------------------------------------------
+
+
+def test_score_vector_correct_genome(scorer):
+    sv = scorer(seed_genome())
+    assert sv.correct and sv.geomean > 0
+    assert len(sv.values) == len(FAST_SUITE)
+
+
+def test_score_zero_on_infeasible(scorer):
+    # kv_in_grid=False stages full K/V in VMEM: 2*262144*128*2B = 134 MiB > 128
+    g = KernelGenome(block_q=512, block_k=512, kv_in_grid=False)
+    big = Scorer(suite=[BenchConfig("b", 1, 16, 16, 262144, causal=False)],
+                 check_correctness=False)
+    sv = big(g)
+    assert sv.values == (0.0,) and sv.geomean == 0.0
+    assert "infeasible" in sv.failure
+
+
+def test_scoring_is_memoized(scorer):
+    n0 = scorer.n_evaluations
+    g = KernelGenome(block_q=256)
+    scorer(g)
+    scorer(g)
+    assert scorer.n_evaluations == n0 + 1
+
+
+def test_correctness_gate_executes_kernel():
+    s = Scorer(suite=FAST_SUITE, check_correctness=True)
+    sv = s(seed_genome())
+    assert sv.correct  # interpret-mode run against the oracle passed
+
+
+# -- lineage ----------------------------------------------------------------
+
+
+def test_lineage_update_and_best(scorer):
+    lin = Lineage()
+    svs = [scorer(seed_genome()), scorer(KernelGenome(block_q=256)),
+           scorer(KernelGenome(block_q=256, kv_in_grid=True))]
+    for i, sv in enumerate(svs):
+        c = lin.update(KernelGenome(block_q=64 * (i + 1)), sv, note=f"v{i}")
+        assert c.version == i
+    assert len(lin) == 3
+    assert lin.best().geomean == max(sv.geomean for sv in svs)
+    assert lin.head().version == 2
+
+
+def test_lineage_save_load_roundtrip(tmp_path, scorer):
+    lin = Lineage()
+    lin.update(seed_genome(), scorer(seed_genome()), note="seed")
+    lin.update(KernelGenome(block_q=256), scorer(KernelGenome(block_q=256)),
+               note="bigger q tile", internal_attempts=4)
+    p = str(tmp_path / "lineage.json")
+    lin.save(p)
+    lin2 = Lineage.load(p)
+    assert len(lin2) == len(lin)
+    assert lin2.best().genome == lin.best().genome
+    assert lin2.commits[1].note == "bigger q tile"
+    assert lin2.commits[1].internal_attempts == 4
+
+
+def test_running_best_monotone(scorer):
+    lin = Lineage()
+    for bq in (64, 256, 128, 512):
+        lin.update(KernelGenome(block_q=bq), scorer(KernelGenome(block_q=bq)))
+    rb = lin.running_best()
+    assert all(b >= a for a, b in zip(rb, rb[1:]))
+
+
+# -- knowledge base ----------------------------------------------------------
+
+
+def test_kb_suggestions_are_typed_edits(scorer):
+    kb = KnowledgeBase()
+    g = seed_genome()
+    sv = scorer(g)
+    sugg = kb.suggestions(g, sv, FAST_SUITE, "dma", "mxu")
+    assert sugg, "KB must propose edits for dma/mxu bottlenecks"
+    for s in sugg:
+        g.with_(**s.edit)            # every suggestion must be applicable
+        assert s.rationale and s.fact_id
+
+
+def test_kb_consult_filters_by_tag():
+    kb = KnowledgeBase()
+    dma_facts = kb.consult("dma")
+    assert dma_facts and all("dma" in f.tags for f in dma_facts)
+
+
+# -- supervisor ----------------------------------------------------------------
+
+
+def test_supervisor_triggers_after_patience():
+    sup = Supervisor(patience=3)
+    lin = Lineage()
+    for _ in range(2):
+        sup.observe(False)
+    assert sup.check(lin).kind == "none"
+    sup.observe(False)
+    d = sup.check(lin)
+    assert d.kind == "explore" and sup.interventions == 1
+    for _ in range(3):
+        sup.observe(False)
+    assert sup.check(lin).kind == "refocus"
+
+
+def test_supervisor_resets_on_commit():
+    sup = Supervisor(patience=2)
+    sup.observe(False)
+    sup.observe(True)
+    sup.observe(False)
+    assert sup.check(Lineage()).kind == "none"
+
+
+# -- variation operators ----------------------------------------------------------
+
+
+def _tools(scorer):
+    return Toolbelt(scorer, KnowledgeBase(), Lineage())
+
+
+def test_agentic_operator_bootstraps_then_improves(scorer):
+    tools = _tools(scorer)
+    op = AgenticVariationOperator(ScriptedAgent(max_inner_steps=8))
+    r0 = op.vary(tools)
+    assert r0.committed and r0.genome == seed_genome()
+    tools.lineage.update(r0.genome, r0.score, r0.note)
+    r1 = op.vary(tools)
+    assert r1.committed, r1.note
+    assert r1.score.geomean > r0.score.geomean
+    assert r1.internal_attempts >= 1
+    assert any(kind == "eval" for kind, _ in r1.trace)
+
+
+def test_agent_repairs_infeasible_candidates():
+    """On a 32k suite the big-block edits overflow VMEM; the agent must
+    either repair them or route around — and still make progress."""
+    suite = [BenchConfig("c32k", 1, 16, 16, 32768, causal=True)]
+    sc = Scorer(suite=suite, check_correctness=False)
+    tools = _tools(sc)
+    op = AgenticVariationOperator(ScriptedAgent(max_inner_steps=10))
+    r = op.vary(tools)
+    tools.lineage.update(r.genome, r.score, r.note)
+    for _ in range(4):
+        r = op.vary(tools)
+        if r.committed:
+            tools.lineage.update(r.genome, r.score, r.note)
+    assert tools.lineage.best().geomean > 0
+
+
+def test_single_shot_no_feedback_loop(scorer):
+    tools = _tools(scorer)
+    op = SingleShotMutation(seed=1)
+    r0 = op.vary(tools)
+    tools.lineage.update(r0.genome, r0.score, r0.note)
+    r1 = op.vary(tools)
+    assert r1.internal_attempts == 1          # single turn, by construction
+
+
+def test_pes_three_phases(scorer):
+    tools = _tools(scorer)
+    op = PlanExecuteSummarize()
+    r0 = op.vary(tools)
+    tools.lineage.update(r0.genome, r0.score, r0.note)
+    r1 = op.vary(tools)
+    assert op.summaries                        # summarize phase ran
+    assert r1.internal_attempts == 1
+
+
+# -- continuous evolution ----------------------------------------------------------
+
+
+def test_evolution_monotone_lineage():
+    evo = ContinuousEvolution(scorer=Scorer(suite=FAST_SUITE))
+    rep = evo.run(max_steps=8)
+    assert rep.commits >= 2
+    rb = evo.lineage.running_best()
+    assert all(b >= a for a, b in zip(rb, rb[1:]))
+    assert rep.best_geomean == rb[-1]
+
+
+def test_evolution_persistence_resume(tmp_path):
+    p = str(tmp_path / "lineage.json")
+    evo = ContinuousEvolution(scorer=Scorer(suite=FAST_SUITE), persist_path=p)
+    evo.run(max_steps=4)
+    n = len(evo.lineage)
+    evo2 = ContinuousEvolution.resume(p, scorer=Scorer(suite=FAST_SUITE))
+    assert len(evo2.lineage) == n
+    evo2.run(max_steps=2)
+    assert len(evo2.lineage) >= n
+
+
+def test_supervisor_intervenes_on_stalling_operator():
+    """An operator that never improves must trigger interventions, and the
+    directives must reach the operator."""
+    seen = []
+
+    class StallingOp:
+        name = "stall"
+
+        def vary(self, tools, directive=Directive()):
+            seen.append(directive.kind)
+            if tools.best_commit() is None:
+                g = seed_genome()
+                sv = tools.evaluate(g)
+                from repro.core.agent import VariationResult
+                return VariationResult(g, sv, True, "seed", 1)
+            from repro.core.agent import VariationResult
+            return VariationResult(None, None, False, "stuck", 1)
+
+    evo = ContinuousEvolution(scorer=Scorer(suite=FAST_SUITE),
+                              operator=StallingOp(),
+                              supervisor=Supervisor(patience=2))
+    rep = evo.run(max_steps=10)
+    assert rep.interventions >= 1
+    assert "explore" in seen or "refocus" in seen

@@ -1,0 +1,229 @@
+"""Distribution substrate: sharding rules (property-tested), gradient
+compression, fault tolerance (heartbeats / stragglers / resilient runner),
+and checkpointing (atomicity, retention, resume)."""
+import os
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_arch
+from repro.distributed import collectives
+from repro.distributed.fault_tolerance import (FaultPolicy, HeartbeatMonitor,
+                                               ResilientRunner)
+from repro.distributed.sharding import _spec_for
+from repro.checkpoint import Checkpointer
+
+
+class FakeMesh:
+    """Duck-typed mesh for _spec_for (axis_names + shape only)."""
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+
+
+MESHES = [FakeMesh(data=16, model=16), FakeMesh(pod=2, data=16, model=16),
+          FakeMesh(data=4, model=2), FakeMesh(data=1, model=1)]
+
+PARAM_NAMES = ["embed", "lm_head", "wq", "wk", "wv", "wo", "w_gate", "w_up",
+               "w_down", "router", "in_proj", "out_proj", "norm", "bias"]
+
+
+@settings(max_examples=120, deadline=None)
+@given(
+    name=st.sampled_from(PARAM_NAMES),
+    prefix=st.sampled_from(["dec", "enc", ""]),
+    mesh_i=st.integers(0, len(MESHES) - 1),
+    shape=st.lists(st.sampled_from([1, 4, 16, 64, 256, 1024, 4096, 150528]),
+                   min_size=1, max_size=4),
+)
+def test_spec_invariants(name, prefix, mesh_i, shape):
+    """For ANY parameter name/shape/mesh: (1) no mesh axis used twice,
+    (2) every sharded dim divisible by its axis size, (3) leading stacked
+    (scan) dim never sharded."""
+    mesh = MESHES[mesh_i]
+    cfg = get_arch("mixtral-8x22b")
+    path = (prefix + "/" if prefix else "") + name
+    spec = _spec_for(path, tuple(shape), mesh, cfg)
+    flat = [a for a in spec if a is not None]
+    assert len(flat) == len(set(flat)), f"duplicate axis in {spec}"
+    for i, axis in enumerate(spec):
+        if axis is None:
+            continue
+        assert shape[i] % mesh.shape[axis] == 0, (path, shape, spec)
+    if prefix in ("dec", "enc") and spec:
+        assert spec[0] is None
+
+
+def test_param_shardings_cover_tree():
+    from repro.distributed.sharding import param_shardings
+    from repro.models import init_params
+    cfg = get_arch("qwen2-7b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sh = param_shardings(params, mesh, cfg)
+    assert jax.tree_util.tree_structure(sh) == jax.tree_util.tree_structure(params)
+
+
+# -- gradient compression ----------------------------------------------------
+
+
+def test_bf16_compression_roundtrip():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)),
+                          jnp.float32)}
+    dec = collectives.decompress_bf16(collectives.compress_bf16(g))
+    err = float(jnp.abs(dec["w"] - g["w"]).max())
+    assert err < 0.01
+
+
+def test_int8_error_feedback_reduces_bias():
+    """With error feedback the *accumulated* quantization error stays bounded
+    and the mean compressed gradient converges to the true mean."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    residual = {"g": jnp.zeros_like(g_true)}
+    acc = jnp.zeros_like(g_true)
+    n = 40
+    for _ in range(n):
+        q, scales, residual = collectives.compress_int8_ef({"g": g_true},
+                                                           residual)
+        dec = collectives.decompress_int8(q, scales)
+        acc = acc + dec["g"]
+    np.testing.assert_allclose(acc / n, g_true, atol=0.02)
+
+
+def test_apply_grad_compression_none_is_identity():
+    g = {"w": jnp.ones((4,))}
+    out, res = collectives.apply_grad_compression(g, "none", None)
+    np.testing.assert_array_equal(out["w"], g["w"])
+    assert res is None
+
+
+@pytest.mark.parametrize("mode", ["bf16", "int8_ef"])
+def test_apply_grad_compression_small_error(mode):
+    g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(256,)),
+                          jnp.float32)}
+    res = collectives.compress_init(g) if mode == "int8_ef" else None
+    out, _ = collectives.apply_grad_compression(g, mode, res)
+    assert float(jnp.abs(out["w"] - g["w"]).mean()) < 0.02
+
+
+# -- fault tolerance ----------------------------------------------------------
+
+
+def test_heartbeat_dead_host_detection():
+    t = [0.0]
+    mon = HeartbeatMonitor(n_hosts=4, dead_after_s=10.0, clock=lambda: t[0])
+    for h in range(4):
+        mon.beat(h, step=1)
+    t[0] = 5.0
+    for h in (0, 1, 2):
+        mon.beat(h, step=2)
+    assert mon.dead_hosts() == []
+    t[0] = 12.0        # host 3 silent for 12s > 10s; hosts 0-2 only 7s
+    assert mon.dead_hosts() == [3]
+
+
+def test_straggler_detection():
+    t = [0.0]
+    mon = HeartbeatMonitor(n_hosts=3, dead_after_s=1e9, straggler_factor=2.0,
+                           clock=lambda: t[0])
+    # hosts 0,1 step every 1s; host 2 beats once then goes silent (but alive)
+    mon.beat(2, 1)
+    for step in range(1, 6):
+        t[0] = float(step)
+        mon.beat(0, step)
+        mon.beat(1, step)
+    assert 2 in mon.stragglers()
+    assert 0 not in mon.stragglers()
+
+
+def test_resilient_runner_restarts_from_checkpoint(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    policy = FaultPolicy(max_restarts=3, checkpoint_every=2)
+    crashes = {"left": 2}
+
+    def step_fn(state, step):
+        if step == 5 and crashes["left"] > 0:
+            crashes["left"] -= 1
+            raise RuntimeError("simulated node failure")
+        return {"x": state["x"] + 1.0}
+
+    runner = ResilientRunner(
+        ck, policy,
+        save_state_fn=lambda s: ({"x": np.asarray(s["x"])}, {}),
+        load_state_fn=lambda tree, extra: {"x": jnp.asarray(tree["x"])})
+    final, end_step = runner.run({"x": jnp.asarray(0.0)}, step_fn,
+                                 start_step=0, n_steps=8)
+    assert float(final["x"]) == 8.0 and end_step == 8
+    assert runner.restarts == 2
+    assert any(e.startswith("restored@") for e in runner.events)
+
+
+def test_resilient_runner_gives_up_after_max_restarts(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    policy = FaultPolicy(max_restarts=1, checkpoint_every=1)
+
+    def bad_step(state, step):
+        raise RuntimeError("always fails")
+
+    runner = ResilientRunner(ck, policy,
+                             save_state_fn=lambda s: (dict(s), {}),
+                             load_state_fn=lambda tree, extra: dict(tree))
+    with pytest.raises(RuntimeError, match="restarts"):
+        runner.run({"x": 0}, bad_step, start_step=0, n_steps=3)
+
+
+# -- checkpointing ----------------------------------------------------------
+
+
+def _state():
+    return {"params": {"w": np.arange(12, dtype=np.float32).reshape(3, 4)},
+            "opt": {"mu": np.zeros((3, 4), np.float32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(10, _state(), extra={"loss": 1.5})
+    step, state, extra = ck.restore()
+    assert step == 10
+    np.testing.assert_array_equal(state["params"]["w"], _state()["params"]["w"])
+    assert extra["loss"] == 1.5
+
+
+def test_checkpoint_retention(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state())
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_atomicity_ignores_partial(tmp_path):
+    """A torn write (no manifest / tmp dir) must be invisible to restore."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state())
+    # simulate a crashed writer: partial dir without manifest
+    os.makedirs(tmp_path / "step_00000002.tmp", exist_ok=True)
+    (tmp_path / "step_00000002.tmp" / "garbage.npz").write_bytes(b"xx")
+    assert ck.latest_step() == 1
+    step, _, _ = ck.restore()
+    assert step == 1
+
+
+def test_checkpoint_corrupt_manifest_detected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    p = ck.save(3, _state())
+    # corrupt a shard
+    for f in os.listdir(p):
+        if f.endswith(".npz"):
+            with open(os.path.join(p, f), "r+b") as fh:
+                fh.seek(10)
+                fh.write(b"\xde\xad")
+            break
+    with pytest.raises(Exception):
+        ck.restore(3)

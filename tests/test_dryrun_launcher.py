@@ -1,0 +1,30 @@
+"""End-to-end launcher coverage: run one real dry-run cell in a subprocess
+(the 512-device env var must be set before jax init, hence not in-process)
+and validate the record it writes."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_one_cell_subprocess(tmp_path, mesh):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-780m",
+         "--cell", "decode_32k", "--mesh", mesh, "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=1200, cwd=REPO)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    tag = "pod2" if mesh == "multi" else "pod1"
+    rec = json.load(open(tmp_path / f"mamba2-780m__decode_32k__{tag}.json"))
+    assert rec["n_chips"] == (512 if mesh == "multi" else 256)
+    assert rec["hlo_flops"] > 0
+    assert rec["terms_s"]["memory"] > 0
+    assert rec["dominant"] in ("compute", "memory", "collective")
+    assert rec["memory"]["temp_bytes"] < 16 * 2**30
+    assert 0 < rec["useful_flops_frac"] < 5.0

@@ -1,0 +1,197 @@
+"""Pallas flash-attention kernel vs the pure-jnp oracle (interpret=True).
+
+Sweeps every genome axis, shapes (incl. ragged/padded), dtypes, masking
+(causal / sliding-window / softcap), GQA ratios, and the gqa_pack path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import mha_reference, flash_reference_blocked
+
+TOL = dict(atol=2e-5, rtol=2e-5)
+BTOL = dict(atol=2e-2, rtol=2e-2)   # bf16
+
+
+def _qkv(seed, B, Hq, Hkv, Sq, Sk, D, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Sk, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Sk, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("kv_in_grid", [True, False])
+@pytest.mark.parametrize("rescale_mode", ["branchless", "branched"])
+@pytest.mark.parametrize("mask_mode", ["dense", "block_skip"])
+@pytest.mark.parametrize("div_mode", ["deferred", "eager"])
+def test_genome_axes_causal(kv_in_grid, rescale_mode, mask_mode, div_mode):
+    q, k, v = _qkv(0, 1, 2, 2, 256, 256, 64)
+    ref = mha_reference(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          kv_in_grid=kv_in_grid, rescale_mode=rescale_mode,
+                          mask_mode=mask_mode, div_mode=div_mode, interpret=True)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("S", [128, 192, 320])     # incl. non-multiples of block
+def test_shapes_padding(causal, S):
+    q, k, v = _qkv(1, 2, 4, 4, S, S, 64)
+    ref = mha_reference(q, k, v, causal=causal)
+    out = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128,
+                          interpret=True)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 1), (4, 2), (8, 2), (6, 3)])
+@pytest.mark.parametrize("gqa_pack", [False, True])
+def test_gqa_ratios(Hq, Hkv, gqa_pack):
+    q, k, v = _qkv(2, 1, Hq, Hkv, 128, 128, 64)
+    ref = mha_reference(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          gqa_pack=gqa_pack, interpret=True)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+def test_gqa_pack_wrap_boundary():
+    """Packed q rows wrap the true sequence; tiles spanning the wrap must
+    still mask correctly (block_q > seq so one tile covers several heads)."""
+    q, k, v = _qkv(3, 1, 4, 1, 48, 48, 64)
+    ref = mha_reference(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, block_q=128, block_k=16,
+                          gqa_pack=True, interpret=True)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+@pytest.mark.parametrize("window", [16, 64, 100])
+@pytest.mark.parametrize("mask_mode", ["dense", "block_skip"])
+def test_sliding_window(window, mask_mode):
+    q, k, v = _qkv(4, 1, 2, 2, 192, 192, 64)
+    ref = mha_reference(q, k, v, causal=True, window=window)
+    out = flash_attention(q, k, v, causal=True, window=window, block_q=64,
+                          block_k=64, mask_mode=mask_mode, interpret=True)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+def test_softcap():
+    q, k, v = _qkv(5, 1, 2, 2, 128, 128, 64)
+    ref = mha_reference(q, k, v, causal=True, softcap=50.0)
+    out = flash_attention(q, k, v, causal=True, softcap=50.0, block_q=64,
+                          block_k=64, interpret=True)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+def test_bf16():
+    q, k, v = _qkv(6, 1, 2, 2, 128, 128, 128, jnp.bfloat16)
+    ref = mha_reference(q, k, v, causal=True).astype(jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True).astype(jnp.float32)
+    np.testing.assert_allclose(out, ref, **BTOL)
+
+
+def test_cross_attention_shapes():
+    """Sq != Sk (decoder cross-attn in seamless-m4t)."""
+    q, k, v = _qkv(7, 2, 4, 4, 96, 160, 64)
+    ref = mha_reference(q, k, v, causal=False)
+    out = flash_attention(q, k, v, causal=False, block_q=32, block_k=64,
+                          interpret=True)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+@pytest.mark.parametrize("kv_in_grid", [True, False])
+def test_bf16_accumulator_degrades_accuracy(kv_in_grid):
+    """acc_dtype=bf16 must run, but with error well above the correctness
+    tolerance — the axis exists to exercise the scoring gate."""
+    q, k, v = _qkv(13, 1, 2, 2, 160, 160, 64)
+    ref = mha_reference(q, k, v, causal=True)
+    good = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                           kv_in_grid=kv_in_grid, acc_dtype="f32",
+                           interpret=True)
+    bad = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                          kv_in_grid=kv_in_grid, acc_dtype="bf16",
+                          interpret=True)
+    assert float(jnp.abs(good - ref).max()) < 2e-5
+    assert float(jnp.abs(bad - ref).max()) > 1e-4
+    assert np.isfinite(np.asarray(bad)).all()
+
+
+def test_numerically_extreme_scores():
+    """Online softmax must survive large score magnitudes (running-max path)."""
+    q, k, v = _qkv(8, 1, 2, 2, 128, 128, 64)
+    q = q * 30.0
+    ref = mha_reference(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+def test_blocked_reference_matches_naive():
+    """The dry-run fallback implements identical math to the oracle."""
+    q, k, v = _qkv(9, 2, 4, 2, 200, 200, 64)
+    for causal in (False, True):
+        for window in (None, 64):
+            ref = mha_reference(q, k, v, causal=causal, window=window)
+            out = flash_reference_blocked(q, k, v, causal=causal, window=window,
+                                          block_k=64)
+            np.testing.assert_allclose(out, ref, **TOL)
+
+
+@pytest.mark.parametrize("window,cq,S", [(32, 64, 256), (64, 64, 256),
+                                         (100, 128, 384)])
+def test_banded_swa_reference(window, cq, S):
+    """The q-chunked banded SWA path must equal the naive oracle."""
+    from repro.kernels.ref import flash_reference_banded
+    q, k, v = _qkv(11, 2, 4, 2, S, S, 64)
+    ref = mha_reference(q, k, v, causal=True, window=window)
+    out = flash_reference_banded(q, k, v, window=window, chunk_q=cq)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+def test_banded_swa_with_softcap():
+    from repro.kernels.ref import flash_reference_banded
+    q, k, v = _qkv(12, 1, 2, 2, 256, 256, 64)
+    ref = mha_reference(q, k, v, causal=True, window=48, softcap=30.0)
+    out = flash_reference_banded(q, k, v, window=48, softcap=30.0, chunk_q=64)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+def test_blocked_reference_q_offset():
+    """Suffix-scoring (q_offset) used by chunked prefill."""
+    q, k, v = _qkv(10, 1, 2, 2, 128, 128, 64)
+    full = mha_reference(q, k, v, causal=True)
+    tail = flash_reference_blocked(q[:, :, 96:], k, v, causal=True,
+                                   block_k=32, q_offset=96)
+    np.testing.assert_allclose(tail, full[:, :, 96:], **TOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    B=st.integers(1, 2),
+    hq_mult=st.integers(1, 4),
+    Hkv=st.integers(1, 2),
+    S=st.sampled_from([64, 96, 128, 160]),
+    D=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+    bq=st.sampled_from([32, 64, 128]),
+    bk=st.sampled_from([32, 64, 128]),
+    rescale=st.sampled_from(["branchless", "branched"]),
+    mask=st.sampled_from(["dense", "block_skip"]),
+    kv_in_grid=st.booleans(),
+)
+def test_property_kernel_matches_oracle(seed, B, hq_mult, Hkv, S, D, causal,
+                                        bq, bk, rescale, mask, kv_in_grid):
+    """Property: ANY genome point must agree with the oracle on ANY shape —
+    the correctness gate of the scoring function f is exactly this."""
+    Hq = Hkv * hq_mult
+    q, k, v = _qkv(seed, B, Hq, Hkv, S, S, D)
+    ref = mha_reference(q, k, v, causal=causal)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          rescale_mode=rescale, mask_mode=mask,
+                          kv_in_grid=kv_in_grid, interpret=True)
+    np.testing.assert_allclose(out, ref, atol=5e-5, rtol=5e-5)

@@ -1,0 +1,61 @@
+"""flash_decode (single-token KV-cache attention) vs decode_reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ref import decode_reference
+
+TOL = dict(atol=3e-5, rtol=3e-5)
+
+
+def _inputs(seed, B, Hq, Hkv, L, D):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Hkv, L, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Hkv, L, D), jnp.float32)
+    vl = jax.random.randint(ks[3], (B,), 1, L + 1, jnp.int32)
+    return q, kc, vc, vl
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (8, 2), (4, 1)])
+@pytest.mark.parametrize("L", [256, 384, 512])
+def test_decode_matches_reference(Hq, Hkv, L):
+    q, kc, vc, vl = _inputs(0, 2, Hq, Hkv, L, 64)
+    ref = decode_reference(q, kc, vc, vl)
+    out = flash_decode(q, kc, vc, vl, block_k=128, interpret=True)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+def test_decode_full_and_single_token_cache():
+    q, kc, vc, _ = _inputs(1, 2, 4, 2, 256, 64)
+    full = jnp.full((2,), 256, jnp.int32)
+    one = jnp.ones((2,), jnp.int32)
+    np.testing.assert_allclose(
+        flash_decode(q, kc, vc, full, block_k=128, interpret=True),
+        decode_reference(q, kc, vc, full), **TOL)
+    np.testing.assert_allclose(
+        flash_decode(q, kc, vc, one, block_k=128, interpret=True),
+        decode_reference(q, kc, vc, one), **TOL)
+
+
+def test_decode_softcap():
+    q, kc, vc, vl = _inputs(2, 1, 4, 4, 256, 64)
+    ref = decode_reference(q, kc, vc, vl, softcap=30.0)
+    out = flash_decode(q, kc, vc, vl, softcap=30.0, block_k=128, interpret=True)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+def test_decode_equals_last_row_of_prefill_attention():
+    """Decoding token t must equal row t of full causal attention."""
+    from repro.kernels.ref import mha_reference
+    B, H, S, D = 1, 4, 96, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, D), jnp.float32)
+    full = mha_reference(q, k, v, causal=True)
+    out = flash_decode(q[:, :, -1], k, v, jnp.full((B,), S, jnp.int32),
+                       block_k=32, interpret=True)
+    np.testing.assert_allclose(out, full[:, :, -1], **TOL)

@@ -1,0 +1,138 @@
+"""Qualitative properties of the TPU v5e analytic performance model — the
+throughput axis of the AVO scoring function f."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perfmodel import (BenchConfig, EXPERT_GENOME, estimate,
+                                  expert_reference, fa_reference, gqa_suite,
+                                  mha_suite, useful_flops, vmem_usage,
+                                  PEAK_FLOPS, VMEM_BYTES)
+from repro.core.search_space import KernelGenome, seed_genome
+
+CFG = BenchConfig("t", batch=1, n_heads=16, n_kv_heads=16, seq_len=8192,
+                  causal=True)
+CFG_NC = BenchConfig("t", batch=1, n_heads=16, n_kv_heads=16, seq_len=8192,
+                     causal=False)
+GOOD = EXPERT_GENOME
+
+
+def test_deterministic():
+    a, b = estimate(GOOD, CFG), estimate(GOOD, CFG)
+    assert a.tflops == b.tflops and a.total_s == b.total_s
+
+
+def test_never_exceeds_roofline():
+    for g in (seed_genome(), GOOD,
+              KernelGenome(block_q=256, block_k=256, kv_in_grid=True)):
+        for cfg in mha_suite() + gqa_suite():
+            p = estimate(g, cfg)
+            if p.feasible:
+                assert p.tflops * 1e12 <= PEAK_FLOPS * 1.0001
+                assert p.fraction_of_roofline <= 1.0001
+
+
+def test_vmem_overflow_is_infeasible():
+    # staging full K/V (kv_in_grid=False) at 256k seq: 134 MiB > 128 MiB VMEM
+    g = KernelGenome(block_q=512, block_k=512, kv_in_grid=False)
+    cfg = BenchConfig("t", 1, 16, 16, 262144, head_dim=128, causal=False)
+    p = estimate(g, cfg)
+    assert vmem_usage(g, cfg) > VMEM_BYTES
+    assert not p.feasible and p.tflops == 0.0
+    assert "VMEM" in p.infeasible_reason
+
+
+def test_block_skip_beats_dense_on_causal():
+    dense = estimate(GOOD.with_(mask_mode="dense"), CFG)
+    skip = estimate(GOOD.with_(mask_mode="block_skip"), CFG)
+    assert skip.total_s < dense.total_s
+
+
+def test_mask_mode_irrelevant_when_noncausal_is_small():
+    """Non-causal has no skippable blocks; modes should be close."""
+    dense = estimate(GOOD.with_(mask_mode="dense"), CFG_NC)
+    skip = estimate(GOOD.with_(mask_mode="block_skip"), CFG_NC)
+    assert abs(dense.total_s - skip.total_s) / dense.total_s < 0.30
+
+
+def test_branchless_beats_branched_noncausal():
+    """Paper §5.1: the branch bubble dominates the multiply-by-one cost on
+    fully unmasked iterations (non-causal)."""
+    br = estimate(GOOD.with_(rescale_mode="branched"), CFG_NC)
+    bl = estimate(GOOD.with_(rescale_mode="branchless"), CFG_NC)
+    assert bl.total_s < br.total_s
+
+
+def test_pipeline_overlap_helps():
+    """Paper §5.2 analogue: kv_in_grid pipelining beats the serial loop."""
+    ser = estimate(GOOD.with_(kv_in_grid=False), CFG)
+    par = estimate(GOOD.with_(kv_in_grid=True), CFG)
+    assert par.total_s < ser.total_s
+
+
+def test_gqa_pack_reduces_kv_traffic():
+    cfg = BenchConfig("g", 1, 32, 4, 8192, causal=True)
+    unpacked = estimate(GOOD.with_(gqa_pack=False), cfg)
+    packed = estimate(GOOD.with_(gqa_pack=True), cfg)
+    assert packed.t_dma_exposed <= unpacked.t_dma_exposed + 1e-12
+
+
+def test_useful_flops_causal_is_half():
+    uf_c = useful_flops(CFG)
+    uf_nc = useful_flops(CFG_NC)
+    S = CFG.seq_len
+    assert uf_c / uf_nc == pytest.approx((S + 1) / (2 * S), rel=1e-6)
+
+
+def test_window_reduces_useful_flops():
+    w = BenchConfig("w", 1, 16, 16, 8192, causal=True, window=1024)
+    assert useful_flops(w) < useful_flops(CFG)
+
+
+def test_suites_match_paper():
+    mha = mha_suite()
+    assert len(mha) == 8                        # 4 seq lens x {causal, non}
+    assert all(c.batch * c.seq_len == 32768 for c in mha)
+    assert all(c.n_heads == 16 and c.head_dim == 128 for c in mha)
+    gqa = gqa_suite()
+    assert len(gqa) == 16                       # 2 kv cfgs x 4 lens x 2 masks
+    assert all(c.n_heads == 32 for c in gqa)
+    assert {c.n_kv_heads for c in gqa} == {4, 8}
+
+
+def test_expert_beats_seed_everywhere():
+    for cfg in mha_suite():
+        assert expert_reference(cfg) > estimate(seed_genome(), cfg).tflops
+
+
+def test_expert_and_fa_are_strong():
+    """The 'vendor library' lines must sit in a plausible fraction-of-peak
+    band on the big configs (FA4 on B200 reaches ~70%+ of peak)."""
+    for cfg in mha_suite():
+        if cfg.seq_len >= 16384:
+            e = expert_reference(cfg)
+            assert 0.45 * 197 < e < 197
+
+
+@settings(max_examples=40, deadline=None)
+@given(bq=st.sampled_from([64, 128, 256, 512]),
+       bk=st.sampled_from([128, 256, 512]),
+       rm=st.sampled_from(["branchless", "branched"]),
+       mm=st.sampled_from(["dense", "block_skip"]),
+       dm=st.sampled_from(["deferred", "eager"]),
+       kg=st.booleans(), gp=st.booleans(),
+       s=st.sampled_from([4096, 8192, 16384]),
+       causal=st.booleans())
+def test_property_profile_consistency(bq, bk, rm, mm, dm, kg, gp, s, causal):
+    g = KernelGenome(bq, bk, rm, mm, dm, kg, gp)
+    cfg = BenchConfig("p", 32768 // s, 16, 16, s, causal=causal)
+    p = estimate(g, cfg)
+    if not p.feasible:
+        assert p.tflops == 0.0
+        return
+    parts = p.t_mxu + p.t_vpu_exposed + p.t_dma_exposed + p.t_overhead + p.t_bubble
+    assert p.total_s > 0 and parts > 0
+    # components never exceed the total by more than rounding
+    assert parts <= p.total_s * 1.02 + 1e-9
+    assert p.bottleneck() in ("mxu", "vpu", "dma", "overhead", "bubble")
