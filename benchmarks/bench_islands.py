@@ -1,0 +1,198 @@
+"""Island-model engine vs the serial loop: scenario-sweep wall-clock race.
+
+The workload is the full scenario family — MHA, GQA, and decode shapes
+(30 benchmark configs).  Two ways to cover it:
+
+  serial    one ContinuousEvolution generalist lineage evolving a single
+            genome against the 30-config union suite;
+  islands   4 specialist islands (mha / gqa / decode / mha-explorer), each
+            evolving against its own cheap sub-suite, with cross-suite
+            migration (the paper's §4.3 transfer) and a shared refuted-edit
+            memory + scorer cache.
+
+The *coverage geomean* — geomean over all 30 configs of the throughput the
+system currently achieves on each (serial: its best genome; islands: each
+config under the best island targeting that config's suite) — is the
+running-best score.  The race: wall-clock seconds until the coverage reaches
+the serial run's own final coverage.  Also reports commits/sec, evaluation
+counts, cache sharing, and checks killed-run resume identity.
+
+  PYTHONPATH=src python benchmarks/bench_islands.py
+  PYTHONPATH=src python benchmarks/bench_islands.py --steps 48 --islands 4
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import chart, emit  # noqa: E402
+
+from repro.core import (ContinuousEvolution, IslandEvolution, Scorer,
+                        scenario_specs, suite_by_name)  # noqa: E402
+
+UNION = "mha+gqa+decode"
+
+
+def geomean(vals):
+    if not vals or any(v <= 0 for v in vals):
+        return 0.0
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def run_serial(steps: int):
+    """Generalist lineage on the union suite; per-commit coverage timeline."""
+    suite = suite_by_name(UNION)
+    evo = ContinuousEvolution(scorer=Scorer(suite=suite))
+    timeline = []   # (wall_s, coverage_geomean)
+    t0 = time.perf_counter()
+
+    def on_commit(island):
+        b = island.lineage.best()
+        timeline.append((time.perf_counter() - t0, b.geomean))
+
+    evo.island.on_commit = on_commit
+    rep = evo.run(max_steps=steps)
+    wall = time.perf_counter() - t0
+    return dict(kind="serial", report=rep, timeline=timeline, wall=wall,
+                final_coverage=max((c for _, c in timeline), default=0.0),
+                evaluations=evo.scorer.n_evaluations, commits=rep.commits)
+
+
+def run_islands(steps_per_island: int, n_islands: int, seed: int,
+                wall_budget_s=None, persist_path=None):
+    """Specialist islands; coverage reconstructed from the commit-event log."""
+    specs = scenario_specs()[:n_islands]
+    eng = IslandEvolution(specs=specs, migration_interval=2, seed=seed,
+                          persist_path=persist_path)
+    suite_of = {isl.name: tuple(c.name for c in isl.scorer.suite)
+                for isl in eng.islands}
+    t0 = time.perf_counter()
+    rep = eng.run(max_steps=steps_per_island, wall_budget_s=wall_budget_s)
+    wall = time.perf_counter() - t0
+
+    # per-suite owner = best island targeting that suite, replayed over time
+    best_by_island: dict[str, tuple] = {}
+    timeline = []
+    for ev in sorted(eng.commit_events, key=lambda e: e["t"]):
+        best_by_island[ev["island"]] = (ev["geomean"], ev["values"])
+        per_suite: dict[tuple, tuple] = {}
+        for name, (gm, values) in best_by_island.items():
+            key = suite_of[name]
+            if key not in per_suite or gm > per_suite[key][0]:
+                per_suite[key] = (gm, values)
+        covered = {}
+        for key, (_, values) in per_suite.items():
+            for cfg_name, v in zip(key, values):
+                covered[cfg_name] = v
+        all_cfgs = {c.name for c in suite_by_name(UNION)}
+        if set(covered) == all_cfgs:
+            timeline.append((ev["t"], geomean(list(covered.values()))))
+        else:
+            timeline.append((ev["t"], 0.0))   # not all suites covered yet
+    return dict(kind="islands", report=rep, timeline=timeline, wall=wall,
+                engine=eng,
+                final_coverage=max((c for _, c in timeline), default=0.0),
+                evaluations=rep.evaluations, commits=rep.commits)
+
+
+def time_to(timeline, target):
+    for t, c in timeline:
+        if c >= target:
+            return t
+    return None
+
+
+def check_resume_identity(seed: int) -> bool:
+    """Kill-and-resume: persisted state must reproduce lineages exactly."""
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "arch.json")
+        eng = IslandEvolution(specs=scenario_specs(), migration_interval=2,
+                              seed=seed, persist_path=p)
+        eng.run(max_steps=4)
+        fp = {i.name: [(c.genome.key(), c.geomean, c.note)
+                       for c in i.lineage.commits] for i in eng.islands}
+        eng.close()                                    # "kill"
+        resumed = IslandEvolution.resume(p, specs=scenario_specs(),
+                                         migration_interval=2, seed=seed)
+        ok = all([(c.genome.key(), c.geomean, c.note)
+                  for c in i.lineage.commits] == fp[i.name]
+                 for i in resumed.islands)
+        resumed.close()
+        return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40,
+                    help="serial step budget (islands get the same total)")
+    ap.add_argument("--islands", type=int, default=4, choices=(3, 4),
+                    help="3 = one specialist per suite, 4 = + mha explorer "
+                         "(the scenario preset defines exactly 4 islands)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    print(f"== serial generalist on '{UNION}' "
+          f"({len(suite_by_name(UNION))} configs), {args.steps} steps ==")
+    serial = run_serial(args.steps)
+    target = serial["final_coverage"]
+    t_serial = time_to(serial["timeline"], target)
+    print(f"serial: coverage {target:.1f} TFLOPS reached at t={t_serial:.1f}s "
+          f"(total wall {serial['wall']:.1f}s, {serial['evaluations']} evals)")
+
+    # same budget: the islands get the wall-clock the serial run consumed
+    # (and never more steps per island than the serial lineage got in total)
+    print(f"\n== {args.islands} specialist islands, wall budget "
+          f"{serial['wall']:.0f}s (= serial), <= {args.steps} steps each ==")
+    isl = run_islands(args.steps, args.islands, args.seed,
+                      wall_budget_s=serial["wall"])
+    t_isl = time_to(isl["timeline"], target)
+    rep = isl["report"]
+    reached = f"{t_isl:.1f}s" if t_isl is not None else "never"
+    print(f"islands: target coverage {target:.1f} reached at t={reached} "
+          f"(total wall {isl['wall']:.1f}s, final coverage "
+          f"{isl['final_coverage']:.1f}, {rep.evaluations} evals, "
+          f"{rep.cache_hits} cache hits, "
+          f"{rep.migrations_accepted} migrations)")
+
+    rows = [["serial", f"{target:.2f}", f"{t_serial:.2f}",
+             f"{serial['wall']:.2f}", serial["commits"],
+             f"{serial['commits'] / serial['wall']:.3f}",
+             serial["evaluations"], 0],
+            ["islands", f"{isl['final_coverage']:.2f}",
+             f"{t_isl:.2f}" if t_isl is not None else "",
+             f"{isl['wall']:.2f}", isl["commits"],
+             f"{isl['commits'] / isl['wall']:.3f}",
+             rep.evaluations, rep.cache_hits]]
+    emit("islands", ["engine", "final_coverage_tflops", "time_to_target_s",
+                     "wall_s", "commits", "commits_per_s", "evaluations",
+                     "cache_hits"], rows)
+
+    chart("time to serial-final coverage (s, lower is better)",
+          [("serial", t_serial),
+           ("islands", t_isl if t_isl is not None else 0.0)])
+    chart("commits per second",
+          [("serial", serial["commits"] / serial["wall"]),
+           ("islands", isl["commits"] / isl["wall"])])
+
+    resume_ok = check_resume_identity(args.seed)
+    print(f"killed-run resume identity: {'OK' if resume_ok else 'FAILED'}")
+
+    if t_isl is not None and t_isl < t_serial:
+        print(f"\nSPEEDUP: islands reached coverage {target:.1f} in "
+              f"{t_isl:.1f}s vs serial {t_serial:.1f}s "
+              f"({t_serial / t_isl:.2f}x)")
+    else:
+        print("\nNO SPEEDUP on this run/host")
+    isl["engine"].close()
+    return 0 if (resume_ok and t_isl is not None and t_isl < t_serial) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,6 +9,7 @@ Sections:
   trajectory  Fig. 5/6 — evolution trajectory, running-best geomean
   ablation    Table 1 — the three representative optimizations
   operators   Fig. 1  — AVO vs fixed-pipeline variation operators
+  islands     (ours)  — island-model engine vs serial loop, scenario sweep
   roofline    (brief) — dry-run roofline table, if results/dryrun exists
 """
 from __future__ import annotations
@@ -17,7 +18,8 @@ import argparse
 import sys
 import time
 
-SECTIONS = ["mha", "gqa", "trajectory", "ablation", "operators", "roofline"]
+SECTIONS = ["mha", "gqa", "trajectory", "ablation", "operators", "islands",
+            "roofline"]
 
 
 def main() -> None:
@@ -48,6 +50,9 @@ def main() -> None:
             elif name == "operators":
                 from benchmarks import bench_operators
                 bench_operators.main(["--budget", "30" if args.fast else "60"])
+            elif name == "islands":
+                from benchmarks import bench_islands
+                bench_islands.main(["--steps", "24" if args.fast else "40"])
             elif name == "roofline":
                 from repro.launch import roofline
                 roofline.main([])

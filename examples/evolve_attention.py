@@ -1,34 +1,30 @@
 """The paper's experiment: continuous autonomous evolution of the attention
-kernel (single lineage, supervisor-assisted), scaled from 7 GPU-days to
-CPU-minutes.  Persists the lineage (the git-commit-per-version analogue) and
-prints the Fig. 5/6-style trajectory.
+kernel, scaled from 7 GPU-days to CPU-minutes.  Persists the lineage (the
+git-commit-per-version analogue) and prints the Fig. 5/6-style trajectory.
 
+Serial (paper §3.3, single lineage):
   PYTHONPATH=src python examples/evolve_attention.py                # MHA
   PYTHONPATH=src python examples/evolve_attention.py --gqa          # GQA transfer
   PYTHONPATH=src python examples/evolve_attention.py --commits 40   # paper-scale lineage
+
+Island-model parallel (N concurrent lineages, migration, shared memory):
+  PYTHONPATH=src python examples/evolve_attention.py --islands 4
+  PYTHONPATH=src python examples/evolve_attention.py --islands 4 --scenario-sweep
 """
 import argparse
 import os
 
 import numpy as np
 
-from repro.core import (AgenticVariationOperator, ContinuousEvolution, Scorer,
-                        ScriptedAgent)
+from repro.core import (AgenticVariationOperator, ContinuousEvolution,
+                        IslandEvolution, Scorer, ScriptedAgent, scenario_specs)
 from repro.core.perfmodel import expert_reference, fa_reference, gqa_suite, mha_suite
 from repro.core.population import Lineage
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--commits", type=int, default=12)
-    ap.add_argument("--max-steps", type=int, default=80)
-    ap.add_argument("--gqa", action="store_true",
-                    help="adapt the evolved MHA kernel to GQA (paper §4.3)")
-    args = ap.parse_args()
-
-    os.makedirs(OUT, exist_ok=True)
+def run_serial(args):
     if args.gqa:
         mha_path = os.path.join(OUT, "lineage_mha.json")
         seed = (Lineage.load(mha_path).best().genome
@@ -55,6 +51,61 @@ def main():
           f"(expert line {exp:.1f}, FA line {fa:.1f})")
     print(f"best genome: {evo.lineage.best().genome}")
     print(f"lineage persisted to {path}")
+
+
+def run_islands(args):
+    # one file per mode: sweep and homogeneous runs must not resume each other
+    if args.scenario_sweep:
+        path = os.path.join(OUT, "archipelago_sweep.json")
+        engine = IslandEvolution.resume(path, specs=scenario_specs(),
+                                        seed=args.seed,
+                                        prefetch=args.prefetch)
+        print("scenario-sweep: islands "
+              + ", ".join(i.name for i in engine.islands))
+    else:
+        path = os.path.join(OUT, "archipelago.json")
+        engine = IslandEvolution.resume(path, n_islands=args.islands,
+                                        suite=mha_suite(), seed=args.seed,
+                                        prefetch=args.prefetch)
+        print(f"{args.islands} islands on the MHA suite, diverse inits")
+
+    rep = engine.run(max_steps=args.max_steps,
+                     target_commits=args.commits, verbose=True)
+    print(f"\n{rep.commits} commits across {len(engine.islands)} islands / "
+          f"{rep.internal_attempts} internal attempts / "
+          f"{rep.migrations_accepted} migrations accepted")
+    print(f"evaluations: {rep.evaluations} paid, {rep.cache_hits} shared-cache hits")
+    print(f"global best: {rep.best_geomean:.1f} TFLOPS on '{rep.best_island}'")
+    print(f"scenario coverage geomean: {rep.coverage_geomean:.1f} TFLOPS")
+    for name, r in rep.islands.items():
+        print(f"  {name:14s} commits={r.commits:3d} best={r.best_geomean:7.1f} "
+              f"interventions={r.interventions}")
+    print(f"archipelago persisted to {path} (+ per-island files)")
+    engine.close()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--commits", type=int, default=12)
+    ap.add_argument("--max-steps", type=int, default=80)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--gqa", action="store_true",
+                    help="adapt the evolved MHA kernel to GQA (paper §4.3)")
+    ap.add_argument("--islands", type=int, default=0,
+                    help="run N islands in parallel instead of one lineage")
+    ap.add_argument("--scenario-sweep", action="store_true",
+                    help="one specialist island per suite (mha/gqa/decode)")
+    ap.add_argument("--prefetch", type=int, default=0,
+                    help="speculatively batch-evaluate this many KB candidate "
+                         "edits per island step (cache warming on the scorer "
+                         "executor; search results are unchanged)")
+    args = ap.parse_args()
+
+    os.makedirs(OUT, exist_ok=True)
+    if args.islands or args.scenario_sweep:
+        run_islands(args)
+    else:
+        run_serial(args)
 
 
 if __name__ == "__main__":

@@ -1,21 +1,28 @@
 from repro.core.agent import AgentPolicy, Directive, ScriptedAgent, VariationResult
 from repro.core.evolution import ContinuousEvolution, EvolutionReport
+from repro.core.islands import (Island, IslandEvolution, IslandReport,
+                                IslandSpec, default_specs, scenario_specs)
 from repro.core.knowledge import KnowledgeBase
-from repro.core.perfmodel import (BenchConfig, estimate, expert_reference,
-                                  fa_reference, gqa_suite, mha_suite)
+from repro.core.perfmodel import (BenchConfig, decode_suite, estimate,
+                                  expert_reference, fa_reference, gqa_suite,
+                                  mha_suite, suite_by_name)
 from repro.core.population import Commit, Lineage
-from repro.core.scoring import Scorer, ScoreVector
+from repro.core.scoring import BatchScorer, Scorer, ScoreVector
 from repro.core.search_space import KernelGenome, seed_genome
 from repro.core.supervisor import Supervisor
-from repro.core.toolbelt import Toolbelt
+from repro.core.toolbelt import RefutedMemory, Toolbelt
 from repro.core.variation import (AgenticVariationOperator, PlanExecuteSummarize,
-                                  SingleShotMutation)
+                                  SingleShotMutation, make_operator)
 
 __all__ = [
     "AgentPolicy", "Directive", "ScriptedAgent", "VariationResult",
     "ContinuousEvolution", "EvolutionReport", "KnowledgeBase",
-    "BenchConfig", "estimate", "expert_reference", "fa_reference",
-    "gqa_suite", "mha_suite", "Commit", "Lineage", "Scorer", "ScoreVector",
-    "KernelGenome", "seed_genome", "Supervisor", "Toolbelt",
+    "Island", "IslandEvolution", "IslandReport", "IslandSpec",
+    "default_specs", "scenario_specs",
+    "BenchConfig", "decode_suite", "estimate", "expert_reference",
+    "fa_reference", "gqa_suite", "mha_suite", "suite_by_name",
+    "Commit", "Lineage", "BatchScorer", "Scorer", "ScoreVector",
+    "KernelGenome", "seed_genome", "Supervisor", "RefutedMemory", "Toolbelt",
     "AgenticVariationOperator", "PlanExecuteSummarize", "SingleShotMutation",
+    "make_operator",
 ]

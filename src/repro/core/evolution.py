@@ -1,48 +1,72 @@
 """Continuous evolution (paper §3.3): a loop that periodically produces new
 committed versions without human intervention, with supervisor interventions
 on stagnation and commit-per-version persistence.
+
+``ContinuousEvolution`` is the single-island special case of the island
+engine (islands.py): it drives exactly one :class:`Island` serially.  The
+N-island parallel regime — migration, shared refuted memory, batched scoring
+— lives in :class:`repro.core.islands.IslandEvolution`.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
-from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Sequence
 
-from repro.core.agent import Directive
-from repro.core.knowledge import KnowledgeBase
+from repro.core.islands import EvolutionReport, Island
+from repro.core.perfmodel import BenchConfig, suite_by_name
 from repro.core.population import Lineage
 from repro.core.scoring import Scorer
 from repro.core.supervisor import Supervisor
-from repro.core.toolbelt import Toolbelt
 from repro.core.variation import AgenticVariationOperator
 
-
-@dataclass
-class EvolutionReport:
-    commits: int
-    steps: int
-    internal_attempts: int
-    interventions: int
-    tool_stats: dict
-    best_geomean: float
-    wall_seconds: float
-    traces: list = field(default_factory=list)
+__all__ = ["ContinuousEvolution", "EvolutionReport"]
 
 
 class ContinuousEvolution:
     def __init__(self, scorer: Optional[Scorer] = None,
                  operator=None, supervisor: Optional[Supervisor] = None,
                  lineage: Optional[Lineage] = None,
-                 persist_path: Optional[str] = None):
-        self.scorer = scorer or Scorer()
-        self.kb = KnowledgeBase()
-        self.lineage = lineage or Lineage()
-        self.tools = Toolbelt(self.scorer, self.kb, self.lineage)
-        self.operator = operator or AgenticVariationOperator()
-        self.supervisor = supervisor or Supervisor()
+                 persist_path: Optional[str] = None,
+                 target_suite: Optional[str] = None):
+        """``target_suite`` names a scenario suite from the perfmodel registry
+        ('mha', 'gqa', 'decode', or a '+'-union); ignored when an explicit
+        ``scorer`` is given."""
+        if scorer is None:
+            suite: Optional[Sequence[BenchConfig]] = \
+                suite_by_name(target_suite) if target_suite else None
+            scorer = Scorer(suite=suite)
+        self.island = Island(
+            name="main", scorer=scorer,
+            operator=operator or AgenticVariationOperator(),
+            supervisor=supervisor or Supervisor(),
+            lineage=lineage, persist_path=persist_path)
         self.persist_path = persist_path
+
+    # -- single-island aliases (the public API predates the island engine) ------
+    @property
+    def scorer(self):
+        return self.island.scorer
+
+    @property
+    def kb(self):
+        return self.island.kb
+
+    @property
+    def lineage(self):
+        return self.island.lineage
+
+    @property
+    def tools(self):
+        return self.island.tools
+
+    @property
+    def operator(self):
+        return self.island.operator
+
+    @property
+    def supervisor(self):
+        return self.island.supervisor
 
     @classmethod
     def resume(cls, persist_path: str, **kw) -> "ContinuousEvolution":
@@ -53,39 +77,30 @@ class ContinuousEvolution:
             wall_budget_s: Optional[float] = None, verbose: bool = False
             ) -> EvolutionReport:
         t0 = time.time()
-        steps = attempts = 0
-        traces = []
-        start_commits = len(self.lineage)
-        for step in range(max_steps):
+        isl = self.island
+        start_commits = len(isl.lineage)
+        start_steps = isl.steps
+        start_attempts = isl.internal_attempts
+        for _ in range(max_steps):
             if target_commits is not None and \
-                    len(self.lineage) - start_commits >= target_commits:
+                    len(isl.lineage) - start_commits >= target_commits:
                 break
             if wall_budget_s is not None and time.time() - t0 > wall_budget_s:
                 break
-            steps += 1
-            directive = self.supervisor.check(self.lineage)
-            result = self.operator.vary(self.tools, directive)
-            attempts += result.internal_attempts
-            traces.append({"step": step, "directive": directive.note,
-                           "committed": result.committed, "note": result.note,
-                           "attempts": result.internal_attempts,
-                           "trace": [list(t) for t in result.trace]})
-            if result.committed:
-                self.lineage.update(result.genome, result.score, result.note,
-                                    result.internal_attempts)
-                if self.persist_path:
-                    self.lineage.save(self.persist_path)
-            self.supervisor.observe(result.committed)
+            result = isl.step()
             if verbose:
-                head = self.lineage.best()
-                print(f"[step {step:3d}] committed={result.committed} "
+                head = isl.lineage.best()
+                print(f"[step {isl.steps - start_steps - 1:3d}] "
+                      f"committed={result.committed} "
                       f"best={head.geomean if head else 0:.1f} TFLOPS "
                       f"attempts={result.internal_attempts}  {result.note[:80]}")
-        best = self.lineage.best()
+        best = isl.lineage.best()
         return EvolutionReport(
-            commits=len(self.lineage) - start_commits, steps=steps,
-            internal_attempts=attempts,
-            interventions=self.supervisor.interventions,
-            tool_stats=self.tools.stats(),
+            commits=len(isl.lineage) - start_commits,
+            steps=isl.steps - start_steps,
+            internal_attempts=isl.internal_attempts - start_attempts,
+            interventions=isl.supervisor.interventions,
+            tool_stats=isl.tools.stats(),
             best_geomean=best.geomean if best else 0.0,
-            wall_seconds=time.time() - t0, traces=traces)
+            wall_seconds=time.time() - t0,
+            traces=isl.traces[start_steps:])

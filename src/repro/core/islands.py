@@ -1,0 +1,555 @@
+"""Island-model parallel evolution: many concurrent lineages, one search.
+
+The paper's §3.3 runs a *single* continuous lineage.  This engine scales that
+regime out: N islands each drive their own :class:`Lineage` with their own
+variation operator (AVO / single-shot / plan-execute-summarize can be mixed
+per island) and optionally their own target scenario suite (MHA, GQA, decode
+shapes — see ``perfmodel.suite_by_name``).  Between epochs the engine
+
+  * **migrates** each island's best commit to its ring neighbour — the
+    migrant is re-scored on the recipient's suite and accepted only on strict
+    improvement (cross-suite migration is exactly the paper's §4.3 transfer:
+    an MHA-evolved genome warm-starts the GQA island);
+  * **publishes** island-local refuted-edit memory into the shared
+    :class:`RefutedMemory`, so an edit one island has falsified is never
+    re-trialled on another;
+  * **persists** the whole archipelago (aggregate JSON + one file per island)
+    with atomic replace, so a killed run resumes exactly where it stopped.
+
+Candidate evaluation is batched: all islands on one suite share a
+:class:`BatchScorer` (shared memo cache + ``concurrent.futures`` executor),
+and island epochs themselves run on a thread pool.
+
+Determinism: operators are seeded per island, the Scorer is a deterministic
+function of the genome, and refuted-memory sharing is synchronized at the
+epoch barrier — during an epoch each island reads a *frozen snapshot* of the
+shared memory plus its own additions (:class:`EpochMemoryView`), so results
+do not depend on thread scheduling.  A fixed seed reproduces the same
+per-island lineages, commit for commit.
+
+``ContinuousEvolution`` (evolution.py) is the single-island special case of
+:class:`Island` + this engine's serial driver.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence, Union
+
+from repro.core.knowledge import KnowledgeBase
+from repro.core.perfmodel import BenchConfig, suite_by_name
+from repro.core.population import Commit, Lineage, atomic_write_json
+from repro.core.scoring import BatchScorer, Scorer
+from repro.core.search_space import KernelGenome, seed_genome
+from repro.core.supervisor import Supervisor
+from repro.core.toolbelt import RefutedMemory, Toolbelt
+from repro.core.variation import make_operator
+
+ARCHIPELAGO_FORMAT = "archipelago.v1"
+
+
+@dataclass
+class EvolutionReport:
+    commits: int
+    steps: int
+    internal_attempts: int
+    interventions: int
+    tool_stats: dict
+    best_geomean: float
+    wall_seconds: float
+    traces: list = field(default_factory=list)
+
+
+@dataclass
+class IslandReport:
+    """Aggregate + per-island accounting for one engine run.
+
+    Aggregate counters (commits, steps, internal_attempts, evaluations,
+    cache_hits) are deltas for THIS run() call; the per-island
+    EvolutionReports carry island-lifetime numbers (incl. resumed commits).
+    """
+    islands: dict                 # name -> EvolutionReport
+    commits: int
+    steps: int
+    internal_attempts: int
+    migrations_accepted: int
+    best_island: str
+    best_geomean: float
+    coverage_geomean: float
+    evaluations: int
+    cache_hits: int
+    wall_seconds: float
+
+
+class EpochMemoryView:
+    """Island-local view over a shared :class:`RefutedMemory`.
+
+    Reads see the shared set as frozen at the last epoch barrier, plus this
+    island's own additions; writes stay local until :meth:`publish`.  This
+    keeps cross-island memory sharing deterministic under threading: what an
+    island knows depends only on the epoch number, never on thread timing.
+    """
+
+    def __init__(self, shared: RefutedMemory):
+        self.shared = shared
+        self._frozen = shared.snapshot()
+        self._local: set = set()
+        self.notes: list[str] = []
+
+    def add(self, entry, note: str = "") -> None:
+        self._local.add(entry)
+        if note:
+            self.notes.append(note)
+
+    def __contains__(self, entry) -> bool:
+        return entry in self._local or entry in self._frozen
+
+    def __len__(self) -> int:
+        return len(self._local) + sum(1 for e in self._frozen
+                                      if e not in self._local)
+
+    def publish(self) -> None:
+        """Epoch barrier: push local refutations into the shared memory and
+        re-freeze against everything published so far."""
+        self.shared.merge(self._local)
+        self._local.clear()
+        self._frozen = self.shared.snapshot()
+
+
+@dataclass
+class IslandSpec:
+    """Declarative island description; the engine builds the machinery."""
+    name: str = ""
+    operator: Union[str, object] = "avo"      # avo | single-shot | pes | instance
+    target_suite: Optional[str] = None        # perfmodel suite name; None = engine default
+    init_genome: Optional[KernelGenome] = None  # diverse initialization point
+    agent_kwargs: dict = field(default_factory=dict)
+
+
+class Island:
+    """One lineage + its operator, supervisor, and toolbelt.
+
+    ``ContinuousEvolution`` wraps exactly one of these; ``IslandEvolution``
+    schedules N of them against shared scoring/memory.
+    """
+
+    def __init__(self, name: str, scorer, operator=None,
+                 supervisor: Optional[Supervisor] = None,
+                 lineage: Optional[Lineage] = None,
+                 kb: Optional[KnowledgeBase] = None,
+                 memory=None,
+                 persist_path: Optional[str] = None,
+                 on_commit: Optional[Callable] = None,
+                 prefetch_k: int = 0):
+        self.name = name
+        self.scorer = scorer
+        self.lineage = lineage if lineage is not None else Lineage()
+        self.kb = kb or KnowledgeBase()
+        self.tools = Toolbelt(scorer, self.kb, self.lineage, memory=memory)
+        self.operator = operator or make_operator("avo")
+        self.supervisor = supervisor or Supervisor()
+        self.persist_path = persist_path
+        self.on_commit = on_commit
+        self.prefetch_k = prefetch_k
+        self.steps = 0
+        self.internal_attempts = 0
+        self.migrants_accepted = 0
+        self.traces: list[dict] = []
+
+    # -- the variation step ------------------------------------------------------
+    def _prefetch_candidates(self) -> None:
+        """Speculatively warm the shared scorer cache with the KB's top edit
+        candidates for the current best — pure cache warming on the batch
+        executor, so search behaviour (and determinism) is untouched."""
+        best = self.lineage.best()
+        if best is None or not hasattr(self.scorer, "prefetch"):
+            return
+        sv = self.scorer(best.genome)                 # cached
+        sugg = self.kb.suggestions(best.genome, sv, self.scorer.suite,
+                                   sv.dominant_bottleneck())
+        sugg = sorted(sugg, key=lambda s: -s.predicted_gain)[:self.prefetch_k]
+        self.scorer.prefetch([best.genome.with_(**s.edit) for s in sugg])
+
+    def step(self):
+        """One supervised variation step; commits on improvement."""
+        if self.prefetch_k:
+            self._prefetch_candidates()
+        directive = self.supervisor.check(self.lineage)
+        result = self.operator.vary(self.tools, directive)
+        self.steps += 1
+        self.internal_attempts += result.internal_attempts
+        self.traces.append({
+            "step": self.steps - 1, "directive": directive.note,
+            "committed": result.committed, "note": result.note,
+            "attempts": result.internal_attempts,
+            "trace": [list(t) for t in result.trace]})
+        if result.committed:
+            self.lineage.update(result.genome, result.score, result.note,
+                                result.internal_attempts)
+            if self.persist_path:
+                self.lineage.save(self.persist_path)
+            if self.on_commit:
+                self.on_commit(self)
+        self.supervisor.observe(result.committed)
+        return result
+
+    # -- migration ---------------------------------------------------------------
+    def accept_migrant(self, commit: Commit, donor: str) -> bool:
+        """Re-score a donor's best genome on THIS island's suite; adopt it only
+        on strict improvement (migration can never lose the local best)."""
+        sv = self.tools.evaluate(commit.genome)
+        best = self.lineage.best()
+        if sv.correct and sv.geomean > (best.geomean if best else 0.0):
+            self.lineage.update(
+                commit.genome, sv,
+                f"migrant from {donor}: {commit.note[:80]}", 0)
+            self.migrants_accepted += 1
+            if self.persist_path:
+                self.lineage.save(self.persist_path)
+            if self.on_commit:
+                self.on_commit(self)
+            return True
+        return False
+
+    # -- accounting ---------------------------------------------------------------
+    def best_geomean(self) -> float:
+        b = self.lineage.best()
+        return b.geomean if b else 0.0
+
+    def report(self, wall_seconds: float = 0.0) -> EvolutionReport:
+        return EvolutionReport(
+            commits=len(self.lineage), steps=self.steps,
+            internal_attempts=self.internal_attempts,
+            interventions=self.supervisor.interventions,
+            tool_stats=self.tools.stats(),
+            best_geomean=self.best_geomean(),
+            wall_seconds=wall_seconds, traces=self.traces)
+
+
+def default_specs(n_islands: int, seed: int = 0) -> list[IslandSpec]:
+    """Homogeneous-suite default: AVO everywhere, diverse initialization.
+
+    Island 0 starts from the paper's naive-but-correct x0; the others start
+    from distinct single-field neighbours of x0 (standard island-model diverse
+    init), chosen deterministically from the seed.
+    """
+    import random
+    inits = [None,
+             seed_genome().with_(kv_in_grid=True),
+             seed_genome().with_(mask_mode="block_skip"),
+             seed_genome().with_(rescale_mode="branchless"),
+             seed_genome().with_(block_q=256),
+             seed_genome().with_(div_mode="deferred"),
+             seed_genome().with_(block_k=256),
+             seed_genome().with_(block_q=64)]
+    rng = random.Random(seed)
+    order = inits[1:]
+    rng.shuffle(order)
+    pool = [None] + order
+    return [IslandSpec(name=f"island{i}",
+                       init_genome=pool[i % len(pool)])
+            for i in range(n_islands)]
+
+
+def scenario_specs() -> list[IslandSpec]:
+    """Scenario-sweep preset: one specialist island per suite family."""
+    return [
+        IslandSpec(name="mha", target_suite="mha"),
+        IslandSpec(name="gqa", target_suite="gqa"),
+        IslandSpec(name="decode", target_suite="decode"),
+        IslandSpec(name="mha-explorer", target_suite="mha",
+                   init_genome=seed_genome().with_(kv_in_grid=True)),
+    ]
+
+
+class IslandEvolution:
+    """N-island parallel evolution engine (see module docstring)."""
+
+    def __init__(self, n_islands: int = 4,
+                 specs: Optional[Sequence[IslandSpec]] = None,
+                 suite: Optional[Sequence[BenchConfig]] = None,
+                 migration_interval: int = 4,
+                 persist_path: Optional[str] = None,
+                 max_workers: Optional[int] = None,
+                 seed: int = 0,
+                 supervisor_patience: int = 3,
+                 prefetch: int = 0):
+        """``prefetch`` > 0 speculatively batch-evaluates that many KB
+        candidate edits per island step on the scorer executor (cache warming
+        only — lineages are identical with or without it, it can only trade
+        extra evaluations for wall-clock overlap)."""
+        self.specs = list(specs) if specs is not None else \
+            default_specs(n_islands, seed=seed)
+        if not self.specs:
+            raise ValueError("need at least one island "
+                             f"(n_islands={n_islands}, specs={specs})")
+        self.migration_interval = max(1, migration_interval)
+        self.persist_path = persist_path
+        self.seed = seed
+        self.memory = RefutedMemory()
+        self.migrations_accepted = 0
+        self._events_lock = threading.Lock()
+        self.commit_events: list[dict] = []   # {"t","island","geomean","coverage"}
+        self._t0 = None
+
+        n = len(self.specs)
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=max_workers or min(8, n), thread_name_prefix="island")
+        self._scorer_pool = scorer_pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=max_workers or min(8, n), thread_name_prefix="scorer")
+
+        # one shared BatchScorer per distinct suite, all on one executor
+        self.scorers: dict[str, BatchScorer] = {}
+
+        def scorer_for(suite_name: Optional[str]) -> BatchScorer:
+            key = suite_name or "default"
+            if key not in self.scorers:
+                cfgs = suite_by_name(suite_name) if suite_name else suite
+                self.scorers[key] = BatchScorer(Scorer(suite=cfgs),
+                                                executor=scorer_pool)
+            return self.scorers[key]
+
+        self.islands: list[Island] = []
+        for i, spec in enumerate(self.specs):
+            name = spec.name or f"island{i}"
+            agent_kwargs = dict(spec.agent_kwargs)
+            if spec.init_genome is not None and "seed" not in agent_kwargs:
+                agent_kwargs["seed"] = spec.init_genome
+            operator = make_operator(spec.operator, seed=seed + i,
+                                     agent_kwargs=agent_kwargs)
+            self.islands.append(Island(
+                name=name,
+                scorer=scorer_for(spec.target_suite),
+                operator=operator,
+                supervisor=Supervisor(patience=supervisor_patience,
+                                      focus_offset=i),
+                memory=EpochMemoryView(self.memory),
+                persist_path=self._island_path(name),
+                on_commit=self._record_commit,
+                prefetch_k=prefetch))
+
+    # -- persistence paths --------------------------------------------------------
+    def _island_path(self, name: str) -> Optional[str]:
+        if not self.persist_path:
+            return None
+        root, ext = os.path.splitext(self.persist_path)
+        return f"{root}.{name}{ext or '.json'}"
+
+    # -- event log (bench instrumentation) ---------------------------------------
+    def _record_commit(self, island: Island) -> None:
+        b = island.lineage.best()
+        with self._events_lock:
+            self.commit_events.append({
+                "t": 0.0 if self._t0 is None else time.time() - self._t0,
+                "island": island.name,
+                "geomean": island.best_geomean(),
+                "values": tuple(b.values) if b else (),
+            })
+
+    # -- aggregate metrics --------------------------------------------------------
+    def best(self) -> tuple[Optional[str], Optional[Commit]]:
+        """Global best commit across islands (by the island's own suite)."""
+        winner, commit = None, None
+        for isl in self.islands:
+            b = isl.lineage.best()
+            if b is not None and (commit is None or b.geomean > commit.geomean):
+                winner, commit = isl.name, b
+        return winner, commit
+
+    def best_geomean(self) -> float:
+        _, c = self.best()
+        return c.geomean if c else 0.0
+
+    def coverage_values(self) -> list[float]:
+        """Per-config throughput under each config's OWNING island's best
+        genome — the scenario-coverage vector.  Islands sharing one suite are
+        deduplicated: the suite's owner is its best-scoring island, so each
+        config contributes exactly once."""
+        best_per_suite: dict[int, tuple[float, Optional[Commit], Island]] = {}
+        for isl in self.islands:
+            key = id(isl.scorer)      # one shared scorer per distinct suite
+            b = isl.lineage.best()
+            gm = b.geomean if b else 0.0
+            cur = best_per_suite.get(key)
+            if cur is None or gm > cur[0]:
+                best_per_suite[key] = (gm, b, isl)
+        out: list[float] = []
+        for _, b, isl in best_per_suite.values():
+            out.extend(b.values if b else [0.0] * len(isl.scorer.suite))
+        return out
+
+    def coverage_geomean(self) -> float:
+        import math
+        vals = self.coverage_values()
+        if not vals or any(v <= 0 for v in vals):
+            return 0.0
+        return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+    # -- the engine loop ----------------------------------------------------------
+    def run(self, max_steps: int = 40,
+            target_commits: Optional[int] = None,
+            wall_budget_s: Optional[float] = None,
+            verbose: bool = False) -> IslandReport:
+        """Run every island for up to ``max_steps`` steps (per island), with a
+        migration + memory-publish barrier every ``migration_interval`` steps."""
+        t0 = time.time()
+        self._t0 = t0 if self._t0 is None else self._t0
+        start_steps = [isl.steps for isl in self.islands]
+        start_commits = sum(len(isl.lineage) for isl in self.islands)
+        start_attempts = sum(isl.internal_attempts for isl in self.islands)
+        start_evals = sum(s.n_evaluations for s in self.scorers.values())
+        start_hits = sum(s.cache_hits for s in self.scorers.values())
+        self._bootstrap_batch()
+        done = 0
+        while done < max_steps:
+            if wall_budget_s is not None and time.time() - t0 > wall_budget_s:
+                break
+            if target_commits is not None and \
+                    sum(len(isl.lineage) for isl in self.islands) \
+                    - start_commits >= target_commits:
+                break
+            chunk = min(self.migration_interval, max_steps - done)
+
+            def epoch(island, k=chunk):
+                for _ in range(k):
+                    island.step()
+
+            futures = [self._pool.submit(epoch, isl) for isl in self.islands]
+            for f in futures:
+                f.result()
+            done += chunk
+            self._barrier()
+            if verbose:
+                name, b = self.best()
+                print(f"[epoch @{done:3d} steps/island] best={b.geomean if b else 0:.1f} "
+                      f"TFLOPS on {name}  coverage={self.coverage_geomean():.1f} "
+                      f"migrations={self.migrations_accepted}")
+
+        wall = time.time() - t0
+        name, b = self.best()
+        return IslandReport(
+            islands={isl.name: isl.report(wall) for isl in self.islands},
+            commits=sum(len(isl.lineage) for isl in self.islands) - start_commits,
+            steps=sum(isl.steps - s0 for isl, s0 in
+                      zip(self.islands, start_steps)),
+            internal_attempts=sum(isl.internal_attempts
+                                  for isl in self.islands) - start_attempts,
+            migrations_accepted=self.migrations_accepted,
+            best_island=name or "", best_geomean=b.geomean if b else 0.0,
+            coverage_geomean=self.coverage_geomean(),
+            evaluations=sum(s.n_evaluations
+                            for s in self.scorers.values()) - start_evals,
+            cache_hits=sum(s.cache_hits
+                           for s in self.scorers.values()) - start_hits,
+            wall_seconds=wall)
+
+    def _bootstrap_batch(self) -> None:
+        """Batch-evaluate the starting genomes of all not-yet-seeded islands
+        through their shared scorers' executors — the suites' first (and
+        coldest) evaluations overlap instead of serializing."""
+        by_scorer: dict[int, tuple[BatchScorer, list[KernelGenome]]] = {}
+        for isl, spec in zip(self.islands, self.specs):
+            if len(isl.lineage) or not hasattr(isl.scorer, "map"):
+                continue
+            genomes = by_scorer.setdefault(id(isl.scorer), (isl.scorer, []))[1]
+            genomes.append(spec.init_genome if spec.init_genome is not None
+                           else seed_genome())
+        futures = [self._pool.submit(scorer.map, genomes)
+                   for scorer, genomes in by_scorer.values()]
+        for f in futures:
+            f.result()
+
+    def _barrier(self) -> None:
+        """Epoch barrier: publish refuted memory, migrate ring-wise, persist."""
+        for isl in self.islands:
+            mem = isl.tools.memory_refuted
+            if isinstance(mem, EpochMemoryView):
+                mem.publish()
+        n = len(self.islands)
+        if n > 1:
+            # snapshot donors first so a hop this epoch can't chain N times
+            bests = [isl.lineage.best() for isl in self.islands]
+            for i, b in enumerate(bests):
+                if b is None:
+                    continue
+                recipient = self.islands[(i + 1) % n]
+                if recipient.accept_migrant(b, self.islands[i].name):
+                    self.migrations_accepted += 1
+        if self.persist_path:
+            self.save(self.persist_path)
+
+    # -- persistence ----------------------------------------------------------------
+    def save(self, path: str) -> None:
+        payload = {
+            "format": ARCHIPELAGO_FORMAT,
+            "seed": self.seed,
+            "migration_interval": self.migration_interval,
+            "migrations_accepted": self.migrations_accepted,
+            "islands": [
+                {"name": isl.name,
+                 "suite": spec.target_suite or "default",
+                 "operator": (spec.operator if isinstance(spec.operator, str)
+                              else getattr(spec.operator, "name", "custom")),
+                 "lineage": isl.lineage.to_payload()}
+                for isl, spec in zip(self.islands, self.specs)],
+        }
+        atomic_write_json(path, payload)
+
+    def load_state(self, path: str) -> None:
+        """Restore island lineages (matched by name) from an archipelago file.
+
+        The aggregate file is written at epoch barriers, but each island also
+        persists its own lineage on every commit — so after a mid-epoch kill
+        the per-island file can be AHEAD of the aggregate.  Whichever is
+        longer wins: no durably persisted commit is ever dropped."""
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("format") != ARCHIPELAGO_FORMAT:
+            raise ValueError(f"{path}: not an archipelago file")
+        by_name = {d["name"]: d for d in payload["islands"]}
+        for isl, spec in zip(self.islands, self.specs):
+            suite_names = tuple(c.name for c in isl.scorer.suite)
+
+            def scored_on_this_suite(lineage: Optional[Lineage]) -> bool:
+                # never adopt history scored on a different suite: geomeans
+                # and value vectors would silently mix incomparable configs
+                return lineage is not None and (
+                    not lineage.config_names
+                    or tuple(lineage.config_names) == suite_names)
+
+            d = by_name.get(isl.name)
+            if d is not None and \
+                    d.get("suite", "default") != (spec.target_suite or "default"):
+                d = None
+            restored = Lineage.from_payload(d["lineage"]) if d else None
+            if not scored_on_this_suite(restored):
+                restored = None
+            ip = self._island_path(isl.name)
+            if ip and os.path.exists(ip):
+                try:
+                    per_island = Lineage.load(ip)
+                except (OSError, ValueError, KeyError):
+                    per_island = None        # torn/foreign file: aggregate wins
+                if scored_on_this_suite(per_island) and (
+                        restored is None or len(per_island) > len(restored)):
+                    restored = per_island
+            if restored is not None:
+                isl.lineage.commits = restored.commits
+                isl.lineage.config_names = restored.config_names
+        self.migrations_accepted = payload.get("migrations_accepted", 0)
+
+    @classmethod
+    def resume(cls, persist_path: str, **kw) -> "IslandEvolution":
+        """Rebuild an engine and pick up exactly where a killed run stopped."""
+        engine = cls(persist_path=persist_path, **kw)
+        if os.path.exists(persist_path):
+            engine.load_state(persist_path)
+        return engine
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True, cancel_futures=True)
+        self._scorer_pool.shutdown(wait=True, cancel_futures=True)

@@ -91,6 +91,36 @@ def gqa_suite() -> list[BenchConfig]:
     return out
 
 
+def decode_suite() -> list[BenchConfig]:
+    """Chunked-decode / chunked-prefill shapes: short causal chunks at large
+    batch, GQA 32q/8kv, with and without a sliding window — the serving-side
+    scenario family (total tokens fixed at 32k, like the other suites)."""
+    out = []
+    for window in (None, 1024):
+        for s in (1024, 2048, 4096):
+            b = 32768 // s
+            tag = "full" if window is None else f"w{window}"
+            out.append(BenchConfig(f"decode_{tag}_s{s}", b, 32, 8, s,
+                                   causal=True, window=window))
+    return out
+
+
+SUITES = {"mha": mha_suite, "gqa": gqa_suite, "decode": decode_suite}
+
+
+def suite_by_name(name: str) -> list[BenchConfig]:
+    """Scenario-suite registry: 'mha' | 'gqa' | 'decode', or a '+'-joined
+    union like 'mha+gqa+decode' (the generalist target)."""
+    parts = [p.strip() for p in name.split("+") if p.strip()]
+    unknown = [p for p in parts if p not in SUITES]
+    if unknown or not parts:
+        raise ValueError(f"unknown suite {name!r}; known: {sorted(SUITES)}")
+    out: list[BenchConfig] = []
+    for p in parts:
+        out.extend(SUITES[p]())
+    return out
+
+
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------

@@ -92,20 +92,36 @@ class Lineage:
                 "notes": [c.note for c in self.commits]}
 
     # -- persistence --------------------------------------------------------------
+    def to_payload(self) -> dict:
+        return {"config_names": list(self.config_names),
+                "commits": [c.to_json() for c in self.commits]}
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "Lineage":
+        ln = cls(tuple(payload["config_names"]))
+        ln.commits = [Commit.from_json(c) for c in payload["commits"]]
+        return ln
+
     def save(self, path: str) -> None:
-        payload = {"config_names": list(self.config_names),
-                   "commits": [c.to_json() for c in self.commits]}
-        d = os.path.dirname(os.path.abspath(path))
-        os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(payload, f, indent=1)
-        os.replace(tmp, path)     # atomic commit
+        atomic_write_json(path, self.to_payload())
 
     @classmethod
     def load(cls, path: str) -> "Lineage":
         with open(path) as f:
-            payload = json.load(f)
-        ln = cls(tuple(payload["config_names"]))
-        ln.commits = [Commit.from_json(c) for c in payload["commits"]]
-        return ln
+            return cls.from_payload(json.load(f))
+
+
+def atomic_write_json(path: str, payload: dict) -> None:
+    """Write-to-temp + rename, so a killed writer never leaves a torn file
+    (the islands engine and Lineage both persist through this)."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1)
+        os.replace(tmp, path)     # atomic commit
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise

@@ -14,7 +14,9 @@ interpreter; the kernel's behaviour is shape-generic).  Throughput comes from
 """
 from __future__ import annotations
 
+import concurrent.futures
 import math
+import threading
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -79,6 +81,7 @@ class Scorer:
         self._cache: dict[str, ScoreVector] = {}
         self._rng = np.random.default_rng(rng_seed)
         self.n_evaluations = 0
+        self._count_lock = threading.Lock()
         self._proxy_inputs = None
 
     # -- correctness ----------------------------------------------------------
@@ -126,15 +129,21 @@ class Scorer:
         key = genome.key()
         if key in self._cache:
             return self._cache[key]
-        self.n_evaluations += 1
+        sv = self._score_uncached(genome)
+        self._cache[key] = sv
+        return sv
+
+    def _score_uncached(self, genome: KernelGenome) -> ScoreVector:
+        """Pay the full evaluation cost, bypassing the memo cache (BatchScorer
+        manages the cache itself and calls this directly)."""
+        with self._count_lock:       # BatchScorer calls this from many threads
+            self.n_evaluations += 1
 
         if self.check_correctness:
             ok, why = self.check(genome)
             if not ok:
-                sv = ScoreVector(tuple(c.name for c in self.suite),
-                                 tuple(0.0 for _ in self.suite), False, why)
-                self._cache[key] = sv
-                return sv
+                return ScoreVector(tuple(c.name for c in self.suite),
+                                   tuple(0.0 for _ in self.suite), False, why)
 
         values, profiles = [], {}
         for cfg in self.suite:
@@ -146,10 +155,8 @@ class Scorer:
             bad = [c.name for c, v in zip(self.suite, values) if v == 0.0]
             failure = "infeasible on: " + ", ".join(
                 f"{n} ({profiles[n].infeasible_reason})" for n in bad)
-        sv = ScoreVector(tuple(c.name for c in self.suite), tuple(values),
-                         True, failure, profiles)
-        self._cache[key] = sv
-        return sv
+        return ScoreVector(tuple(c.name for c in self.suite), tuple(values),
+                           True, failure, profiles)
 
     def baselines(self) -> dict:
         """Expert (cuDNN-analogue) and FA-reference scores on this suite."""
@@ -157,3 +164,94 @@ class Scorer:
             "expert": tuple(perfmodel.expert_reference(c) for c in self.suite),
             "fa_reference": tuple(perfmodel.fa_reference(c) for c in self.suite),
         }
+
+
+class BatchScorer:
+    """Thread-safe wrapper around a :class:`Scorer` with a shared memo cache
+    and batched candidate evaluation on a ``concurrent.futures`` executor.
+
+    Several islands share one BatchScorer per benchmark suite, so an edit one
+    island has already paid to evaluate (or falsify) is a cache hit everywhere
+    else.  Results are bit-identical to the wrapped Scorer — the Scorer is a
+    deterministic function of the genome — so sharing only changes wall-clock
+    and evaluation counts, never search behaviour.
+
+    Concurrency contract: concurrent calls for the *same* genome collapse into
+    one evaluation (in-flight keys carry an event other callers wait on);
+    concurrent calls for different genomes run in parallel.
+    """
+
+    def __init__(self, base: Optional[Scorer] = None, *,
+                 suite: Optional[Sequence[BenchConfig]] = None,
+                 max_workers: Optional[int] = None,
+                 executor: Optional[concurrent.futures.Executor] = None):
+        self.base = base if base is not None else Scorer(suite=suite)
+        self._lock = threading.Lock()
+        self._inflight: dict[str, threading.Event] = {}
+        self.cache_hits = 0
+        self._own_executor = executor is None
+        self._executor = executor or concurrent.futures.ThreadPoolExecutor(
+            max_workers=max_workers or 4, thread_name_prefix="batch-scorer")
+        if self.base.check_correctness:
+            # build the RNG-derived proxy inputs eagerly: the lazy build
+            # mutates the scorer's RNG and must not race across threads
+            self.base._proxy_data()
+
+    # -- delegation --------------------------------------------------------------
+    @property
+    def suite(self):
+        return self.base.suite
+
+    @property
+    def n_evaluations(self) -> int:
+        return self.base.n_evaluations
+
+    def baselines(self) -> dict:
+        return self.base.baselines()
+
+    # -- thread-safe scoring -----------------------------------------------------
+    def __call__(self, genome: KernelGenome) -> ScoreVector:
+        key = genome.key()
+        while True:
+            with self._lock:
+                sv = self.base._cache.get(key)
+                if sv is not None:
+                    self.cache_hits += 1
+                    return sv
+                event = self._inflight.get(key)
+                if event is None:
+                    self._inflight[key] = event = threading.Event()
+                    owner = True
+                else:
+                    owner = False
+            if not owner:
+                event.wait()
+                continue               # re-read the cache (or retry on error)
+            try:
+                sv = self.base._score_uncached(genome)
+                with self._lock:
+                    self.base._cache[key] = sv
+                return sv
+            finally:
+                with self._lock:
+                    del self._inflight[key]
+                event.set()
+
+    def map(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
+        """Evaluate a batch concurrently; order-preserving, duplicates collapse
+        onto one evaluation."""
+        unique: dict[str, KernelGenome] = {}
+        for g in genomes:
+            unique.setdefault(g.key(), g)
+        futures = {k: self._executor.submit(self, g) for k, g in unique.items()}
+        return [futures[g.key()].result() for g in genomes]
+
+    def prefetch(self, genomes: Sequence[KernelGenome]) -> None:
+        """Fire-and-forget cache warming for speculative candidates."""
+        for g in genomes:
+            if g.key() not in self.base._cache:
+                self._executor.submit(self, g)
+
+    def close(self) -> None:
+        if self._own_executor:
+            self._executor.shutdown(wait=True, cancel_futures=True)

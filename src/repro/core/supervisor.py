@@ -22,7 +22,8 @@ _ALL_TAGS = ("mxu", "vpu", "dma", "overhead", "bubble")
 @dataclass
 class Supervisor:
     patience: int = 3
-    interventions: int = 0
+    focus_offset: int = 0    # islands start the refocus rotation at different
+    interventions: int = 0   # tags so stalled islands diverge, not pile up
     log: list = field(default_factory=list)
     _steps_since_commit: int = 0
     _focus_rotation: int = 0
@@ -43,7 +44,8 @@ class Supervisor:
                                 f"candidate pool across all subsystems"),
                           exploration_depth=self._steps_since_commit)
         else:
-            tag = _ALL_TAGS[self._focus_rotation % len(_ALL_TAGS)]
+            tag = _ALL_TAGS[(self.focus_offset + self._focus_rotation)
+                            % len(_ALL_TAGS)]
             self._focus_rotation += 1
             d = Directive(kind="refocus", focus_tags=(tag,),
                           note=(f"intervention #{self.interventions}: rotate focus "

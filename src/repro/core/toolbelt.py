@@ -3,11 +3,16 @@ utilities, tools, persistent memory).
 
 Every call is counted — the paper reports "over 500 optimization directions"
 of internal exploration; ``stats()`` reproduces that accounting.
+
+The refuted-edit memory is a first-class object (``RefutedMemory``) so it can
+be *shared*: in the island engine several Toolbelts point at one memory and an
+edit falsified on one island is never re-trialled on another.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Iterable, Optional, Sequence
 
 from repro.core.knowledge import KnowledgeBase
 from repro.core.population import Lineage
@@ -21,15 +26,53 @@ class ToolCall:
     detail: str = ""
 
 
+class RefutedMemory:
+    """Thread-safe set of refuted (genome, edit) pairs.
+
+    A single instance may back many Toolbelts concurrently (island engine);
+    all mutation happens under a lock.  ``snapshot``/``merge`` support the
+    epoch-synchronized sharing the island engine uses for determinism.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: set = set()
+        self.notes: list[str] = []
+
+    def add(self, entry, note: str = "") -> None:
+        with self._lock:
+            self._entries.add(entry)
+            if note:
+                self.notes.append(note)
+
+    def __contains__(self, entry) -> bool:
+        with self._lock:
+            return entry in self._entries
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def snapshot(self) -> frozenset:
+        with self._lock:
+            return frozenset(self._entries)
+
+    def merge(self, entries: Iterable) -> None:
+        with self._lock:
+            self._entries.update(entries)
+
+
 class Toolbelt:
-    def __init__(self, scorer: Scorer, kb: KnowledgeBase, lineage: Lineage):
+    def __init__(self, scorer: Scorer, kb: KnowledgeBase, lineage: Lineage,
+                 memory: Optional[RefutedMemory] = None):
         self.scorer = scorer
         self.kb = kb
         self.lineage = lineage
         self.calls: list[ToolCall] = []
+        self.n_evaluate_calls = 0     # this belt's requests (incl. cache hits)
         # persistent memory across variation steps: refuted edits per context
-        self.memory_refuted: set = set()
-        self.memory_notes: list[str] = []
+        self.memory_refuted = memory if memory is not None else RefutedMemory()
+        self.memory_notes = self.memory_refuted.notes
 
     # -- lineage access (the P_t the agent can consult) -------------------------
     def best_commit(self):
@@ -47,7 +90,17 @@ class Toolbelt:
     # -- evaluation utility f ----------------------------------------------------
     def evaluate(self, genome: KernelGenome) -> ScoreVector:
         self.calls.append(ToolCall("evaluate", genome.key()))
+        self.n_evaluate_calls += 1
         return self.scorer(genome)
+
+    def evaluate_many(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
+        """Batched evaluation: one call, many candidates.  Dispatches to the
+        scorer's executor-backed ``map`` when available (BatchScorer)."""
+        self.calls.append(ToolCall("evaluate_many", f"n={len(genomes)}"))
+        self.n_evaluate_calls += len(genomes)
+        if hasattr(self.scorer, "map"):
+            return self.scorer.map(genomes)
+        return [self.scorer(g) for g in genomes]
 
     def profile(self, sv: ScoreVector) -> dict:
         """Per-config time breakdown — the profiler the agent reads."""
@@ -60,18 +113,27 @@ class Toolbelt:
         return self.kb.suggestions(genome, sv, self.scorer.suite, *tags)
 
     # -- persistent memory -----------------------------------------------------------
+    @staticmethod
+    def _memory_key(genome: KernelGenome, edit: dict):
+        return (genome.key(), tuple(sorted(edit.items())))
+
     def remember_refuted(self, genome: KernelGenome, edit: dict, why: str):
-        self.memory_refuted.add((genome.key(), tuple(sorted(edit.items()))))
-        self.memory_notes.append(f"refuted {edit} on {genome.key()[:48]}…: {why}")
+        self.memory_refuted.add(
+            self._memory_key(genome, edit),
+            f"refuted {edit} on {genome.key()[:48]}…: {why}")
 
     def is_refuted(self, genome: KernelGenome, edit: dict) -> bool:
-        return (genome.key(), tuple(sorted(edit.items()))) in self.memory_refuted
+        return self._memory_key(genome, edit) in self.memory_refuted
 
     # -- accounting ---------------------------------------------------------------------
     def stats(self) -> dict:
+        """``evaluations`` is the scorer's paid-evaluation total — for a
+        shared BatchScorer that is the whole suite group, not just this belt;
+        ``evaluate_calls`` is this belt's own request count."""
         return {
             "tool_calls": len(self.calls),
             "evaluations": self.scorer.n_evaluations,
+            "evaluate_calls": self.n_evaluate_calls,
             "kb_consults": self.kb.n_consults,
             "refuted_memories": len(self.memory_refuted),
         }

@@ -107,3 +107,20 @@ class PlanExecuteSummarize:
         trace.append(("summarize", self.summaries[-1]))
         return VariationResult(cand, sv, committed,
                                f"PES {sugg[0].fact_id}: {sugg[0].edit}", 1, trace)
+
+
+def make_operator(spec="avo", seed: int = 0, agent_kwargs: Optional[dict] = None):
+    """Operator registry: build a variation operator from a spec string
+    ('avo' | 'single-shot' | 'pes') or pass an instance through unchanged.
+    Used by the island engine to mix operators across islands."""
+    if not isinstance(spec, str):
+        return spec
+    name = spec.lower().replace("_", "-")
+    if name in ("avo", "agentic"):
+        return AgenticVariationOperator(ScriptedAgent(**(agent_kwargs or {})))
+    if name in ("single-shot", "singleshot"):
+        return SingleShotMutation(seed=seed)
+    if name in ("pes", "plan-execute-summarize"):
+        return PlanExecuteSummarize()
+    raise ValueError(f"unknown operator spec {spec!r}; "
+                     "known: avo, single-shot, pes")

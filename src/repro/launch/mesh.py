@@ -14,8 +14,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     axis is pure data parallelism across ICI-disjoint pods (DCN-linked)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    if hasattr(jax.sharding, "AxisType"):     # jax >= 0.5 explicit-axes API
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):

@@ -247,6 +247,116 @@ def test_evolution_persistence_resume(tmp_path):
     assert len(evo2.lineage) >= n
 
 
+def test_agent_repair_path_consults_kb_on_vmem_infeasible():
+    """Force a VMEM-infeasible candidate: _repair must consult the KB's vmem
+    facts and return a feasible genome."""
+    suite = [BenchConfig("c256k", 1, 16, 16, 262144, causal=False)]
+    sc = Scorer(suite=suite, check_correctness=False)
+    tools = _tools(sc)
+    agent = ScriptedAgent()
+    bad = KernelGenome(block_q=512, block_k=512, kv_in_grid=False)
+    sv = sc(bad)
+    assert sv.geomean == 0.0 and "infeasible" in sv.failure
+    trace = []
+    repaired = agent._repair(tools, bad, sv.failure, trace)
+    assert any(c.tool == "consult_kb" and "vmem" in c.detail
+               for c in tools.calls), "repair must consult the KB's vmem facts"
+    assert any(kind == "repair" for kind, _ in trace)
+    assert repaired is not None
+    assert sc(repaired).geomean > 0.0
+
+
+def test_agent_repair_gives_up_on_unrepairable_failure():
+    sc = Scorer(suite=FAST_SUITE, check_correctness=False)
+    tools = _tools(sc)
+    agent = ScriptedAgent()
+    trace = []
+    out = agent._repair(tools, seed_genome(), "kernel raised: TypeError", trace)
+    assert out is None
+    assert any(kind == "diagnose" for kind, _ in trace)
+
+
+def test_refuted_memory_blocks_retrial(scorer):
+    """Once remember_refuted records an edit, the agent's candidate filter
+    must drop it — the edit is never re-trialled (except under an explicit
+    'explore' directive, which re-examines stale refutations by design)."""
+    tools = _tools(scorer)
+    agent = ScriptedAgent()
+    r0 = agent.run_variation(tools)
+    tools.lineage.update(r0.genome, r0.score, r0.note)
+    best = tools.best_commit()
+    sv = tools.evaluate(best.genome)
+    tags = (sv.dominant_bottleneck(),)
+    sugg = tools.consult_kb(best.genome, sv, *tags)
+    assert sugg
+    for s in sugg:
+        tools.remember_refuted(best.genome, s.edit, "test-refuted")
+        assert tools.is_refuted(best.genome, s.edit)
+    filtered = agent._candidates(tools, best.genome, sv, tags, Directive(), [])
+    refuted_edits = {tuple(sorted(s.edit.items())) for s in sugg}
+    assert all(tuple(sorted(s.edit.items())) not in refuted_edits
+               for s in filtered)
+    # explore directives deliberately re-admit refuted edits (fresh context)
+    explored = agent._candidates(tools, best.genome, sv, tags,
+                                 Directive(kind="explore", note="widen"), [])
+    assert any(tuple(sorted(s.edit.items())) in refuted_edits
+               for s in explored)
+
+
+# -- persistence -------------------------------------------------------------------
+
+
+def test_lineage_save_is_atomic_replace(tmp_path, scorer):
+    """Saving over an existing file goes through write-to-temp + rename: no
+    partial state is ever visible and no temp droppings survive."""
+    p = tmp_path / "lineage.json"
+    lin = Lineage()
+    lin.update(seed_genome(), scorer(seed_genome()), note="v0")
+    lin.save(str(p))
+    first = p.read_text()
+    lin.update(KernelGenome(block_q=256), scorer(KernelGenome(block_q=256)),
+               note="v1")
+    lin.save(str(p))
+    assert p.read_text() != first
+    assert len(Lineage.load(str(p))) == 2
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+
+
+def test_lineage_load_ignores_stray_tmp(tmp_path, scorer):
+    """A torn write from a killed process (stray .tmp) must not corrupt the
+    committed file."""
+    p = tmp_path / "lineage.json"
+    lin = Lineage()
+    lin.update(seed_genome(), scorer(seed_genome()), note="v0")
+    lin.save(str(p))
+    (tmp_path / "garbage.tmp").write_text("{ torn json")
+    lin2 = Lineage.load(str(p))
+    assert len(lin2) == 1 and lin2.commits[0].note == "v0"
+
+
+def test_resume_picks_up_exactly_where_killed_run_stopped(tmp_path):
+    """The persisted lineage after a 'kill' equals the in-memory lineage
+    commit-for-commit, and a resumed evolution continues from it."""
+    p = str(tmp_path / "lineage.json")
+    evo = ContinuousEvolution(scorer=Scorer(suite=FAST_SUITE), persist_path=p)
+    evo.run(max_steps=5)
+    killed_state = [(c.version, c.genome.key(), c.geomean, c.note, c.parent,
+                     c.internal_attempts) for c in evo.lineage.commits]
+    assert killed_state
+    del evo                                        # "kill" the process
+
+    evo2 = ContinuousEvolution.resume(p, scorer=Scorer(suite=FAST_SUITE))
+    resumed_state = [(c.version, c.genome.key(), c.geomean, c.note, c.parent,
+                      c.internal_attempts) for c in evo2.lineage.commits]
+    assert resumed_state == killed_state
+    evo2.run(max_steps=3)
+    assert len(evo2.lineage) >= len(killed_state)
+    # the continuation extends the old history, never rewrites it
+    assert [(c.version, c.genome.key()) for c in
+            evo2.lineage.commits[:len(killed_state)]] == \
+        [(v, k) for v, k, *_ in killed_state]
+
+
 def test_supervisor_intervenes_on_stalling_operator():
     """An operator that never improves must trigger interventions, and the
     directives must reach the operator."""

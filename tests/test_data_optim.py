@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import get_arch
 from repro.data.pipeline import TokenPipeline
@@ -37,8 +36,8 @@ def test_labels_shifted_from_same_stream():
     assert b["tokens"].shape == b["labels"].shape == (4, 16)
 
 
-@settings(max_examples=10, deadline=None)
-@given(num_shards=st.sampled_from([1, 2, 4, 8]), step=st.integers(0, 5))
+@pytest.mark.parametrize("num_shards", [1, 2, 4, 8])
+@pytest.mark.parametrize("step", [0, 2, 5])
 def test_elastic_resharding_is_exact(num_shards, step):
     """Union of shard batches == the single-host global batch, at any step,
     for any shard count — restart/elastic-scale safety."""

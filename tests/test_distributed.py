@@ -2,13 +2,13 @@
 compression, fault tolerance (heartbeats / stragglers / resilient runner),
 and checkpointing (atomicity, retention, resume)."""
 import os
+import random
 import types
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import get_arch
 from repro.distributed import collectives
@@ -32,14 +32,20 @@ PARAM_NAMES = ["embed", "lm_head", "wq", "wk", "wv", "wo", "w_gate", "w_up",
                "w_down", "router", "in_proj", "out_proj", "norm", "bias"]
 
 
-@settings(max_examples=120, deadline=None)
-@given(
-    name=st.sampled_from(PARAM_NAMES),
-    prefix=st.sampled_from(["dec", "enc", ""]),
-    mesh_i=st.integers(0, len(MESHES) - 1),
-    shape=st.lists(st.sampled_from([1, 4, 16, 64, 256, 1024, 4096, 150528]),
-                   min_size=1, max_size=4),
-)
+def _spec_cases(n=120, rng_seed=0):
+    """Deterministic seeded sample over (param name, prefix, mesh, shape) —
+    the same 120 cases every run, no hypothesis dependency."""
+    r = random.Random(rng_seed)
+    dims = [1, 4, 16, 64, 256, 1024, 4096, 150528]
+    cases = []
+    for _ in range(n):
+        shape = [r.choice(dims) for _ in range(r.randint(1, 4))]
+        cases.append((r.choice(PARAM_NAMES), r.choice(["dec", "enc", ""]),
+                      r.randrange(len(MESHES)), shape))
+    return cases
+
+
+@pytest.mark.parametrize("name,prefix,mesh_i,shape", _spec_cases())
 def test_spec_invariants(name, prefix, mesh_i, shape):
     """For ANY parameter name/shape/mesh: (1) no mesh axis used twice,
     (2) every sharded dim divisible by its axis size, (3) leading stacked
@@ -63,8 +69,7 @@ def test_param_shardings_cover_tree():
     from repro.models import init_params
     cfg = get_arch("qwen2-7b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
     sh = param_shardings(params, mesh, cfg)
     assert jax.tree_util.tree_structure(sh) == jax.tree_util.tree_structure(params)
 

@@ -117,8 +117,7 @@ def test_collective_bytes_semantics():
 def test_real_collectives_on_sharded_program():
     """End-to-end: psum over 1-device mesh emits no cross-device traffic, but
     the analyzer still parses the module without error."""
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("d",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     x = jax.ShapeDtypeStruct((64, 64), jnp.float32,
                              sharding=NamedSharding(mesh, P("d")))

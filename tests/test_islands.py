@@ -1,0 +1,359 @@
+"""Island-model parallel evolution engine: determinism, migration, shared
+scorer cache / refuted memory, batched scoring, persistence + resume."""
+import json
+import os
+
+import pytest
+
+from repro.core import (BatchScorer, ContinuousEvolution, IslandEvolution,
+                        IslandSpec, KernelGenome, RefutedMemory, Scorer,
+                        Toolbelt, seed_genome)
+from repro.core.islands import EpochMemoryView, Island
+from repro.core.knowledge import KnowledgeBase
+from repro.core.perfmodel import BenchConfig, suite_by_name
+from repro.core.population import Lineage
+
+FAST_SUITE = [BenchConfig("c4k", 8, 16, 16, 4096, causal=True),
+              BenchConfig("n4k", 8, 16, 16, 4096, causal=False)]
+
+
+def _lineage_fingerprint(lineage):
+    return [(c.genome.key(), round(c.geomean, 9), c.note) for c in lineage.commits]
+
+
+def _run_engine(**kw):
+    max_steps = kw.pop("max_steps", 6)
+    defaults = dict(n_islands=3, suite=FAST_SUITE, migration_interval=2, seed=11)
+    defaults.update(kw)
+    eng = IslandEvolution(**defaults)
+    try:
+        rep = eng.run(max_steps=max_steps)
+    finally:
+        eng.close()
+    return eng, rep
+
+
+# -- BatchScorer ----------------------------------------------------------------
+
+
+def test_batch_scorer_matches_serial_scorer():
+    plain = Scorer(suite=FAST_SUITE)
+    batch = BatchScorer(Scorer(suite=FAST_SUITE))
+    genomes = [seed_genome(), seed_genome().with_(block_q=256),
+               seed_genome().with_(kv_in_grid=True)]
+    for g in genomes:
+        assert batch(g).values == plain(g).values
+    batch.close()
+
+
+def test_batch_scorer_map_preserves_order_and_dedupes():
+    batch = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
+    g1, g2 = seed_genome(), seed_genome().with_(block_q=256)
+    svs = batch.map([g1, g2, g1, g2, g1])
+    assert [sv.values for sv in svs] == \
+        [batch(g1).values, batch(g2).values, batch(g1).values,
+         batch(g2).values, batch(g1).values]
+    # 5 requests, 2 distinct genomes -> 2 paid evaluations
+    assert batch.n_evaluations == 2
+    batch.close()
+
+
+def test_batch_scorer_concurrent_same_genome_single_eval():
+    import concurrent.futures as cf
+    batch = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
+    g = seed_genome().with_(block_q=512)
+    # hammer the same genome from many threads WITHOUT map()'s dedup: the
+    # in-flight protocol must still collapse everything onto one evaluation
+    with cf.ThreadPoolExecutor(8) as ex:
+        svs = list(ex.map(batch, [g] * 16))
+    assert len({sv.values for sv in svs}) == 1
+    assert batch.n_evaluations == 1
+    assert batch.cache_hits == 15
+    batch.close()
+
+
+# -- shared refuted memory -------------------------------------------------------
+
+
+def test_refuted_memory_shared_across_toolbelts():
+    mem = RefutedMemory()
+    sc = Scorer(suite=FAST_SUITE, check_correctness=False)
+    t1 = Toolbelt(sc, KnowledgeBase(), Lineage(), memory=mem)
+    t2 = Toolbelt(sc, KnowledgeBase(), Lineage(), memory=mem)
+    g, edit = seed_genome(), {"block_q": 256}
+    t1.remember_refuted(g, edit, "regressed")
+    assert t2.is_refuted(g, edit)
+    assert t2.stats()["refuted_memories"] == 1
+
+
+def test_epoch_memory_view_isolates_until_publish():
+    shared = RefutedMemory()
+    a, b = EpochMemoryView(shared), EpochMemoryView(shared)
+    a.add(("k", ("e",)), "note")
+    assert ("k", ("e",)) in a
+    assert ("k", ("e",)) not in b          # not visible mid-epoch
+    a.publish()
+    assert ("k", ("e",)) not in b          # b still frozen pre-publish
+    b.publish()                            # barrier refreshes b's snapshot
+    assert ("k", ("e",)) in b
+    assert len(shared) == 1
+
+
+# -- engine: determinism ---------------------------------------------------------
+
+
+def test_islands_deterministic_under_fixed_seed():
+    eng1, _ = _run_engine()
+    eng2, _ = _run_engine()
+    for a, b in zip(eng1.islands, eng2.islands):
+        assert _lineage_fingerprint(a.lineage) == _lineage_fingerprint(b.lineage)
+
+
+def test_islands_different_seeds_diverge_inits():
+    # diverse initialization is seed-dependent for the default specs
+    from repro.core.islands import default_specs
+    inits1 = [s.init_genome for s in default_specs(4, seed=0)]
+    inits2 = [s.init_genome for s in default_specs(4, seed=1)]
+    assert inits1[0] is None and inits2[0] is None     # island0 is always x0
+    assert inits1 != inits2
+
+
+# -- engine: migration -----------------------------------------------------------
+
+
+def test_migration_preserves_global_best():
+    eng, rep = _run_engine()
+    # the aggregate best equals the max over island bests: migration copies
+    # commits, never removes them
+    assert rep.best_geomean == pytest.approx(
+        max(isl.best_geomean() for isl in eng.islands))
+    assert rep.best_geomean > 0
+
+
+def test_migrant_adopted_only_on_strict_improvement():
+    sc = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
+    strong = Island("strong", sc)
+    weak = Island("weak", sc)
+    g_good = KernelGenome(block_q=512, block_k=1024, rescale_mode="branchless",
+                          mask_mode="block_skip", div_mode="deferred",
+                          kv_in_grid=True)
+    sv = sc(g_good)
+    strong.lineage.update(g_good, sv, "hand-planted best")
+    weak.lineage.update(seed_genome(), sc(seed_genome()), "seed")
+    assert weak.accept_migrant(strong.lineage.best(), "strong")
+    assert weak.best_geomean() == pytest.approx(strong.best_geomean())
+    # re-offering the same commit is no longer a strict improvement
+    assert not weak.accept_migrant(strong.lineage.best(), "strong")
+    # and the strong island never adopts the weak seed
+    assert not strong.accept_migrant(weak.lineage.commits[0], "weak")
+    sc.close()
+
+
+def test_cross_suite_migration_rescoring():
+    """A migrant is re-scored on the recipient's suite: values must come from
+    the recipient suite, not the donor's."""
+    sc_mha = BatchScorer(Scorer(suite=suite_by_name("mha"),
+                                check_correctness=False))
+    sc_dec = BatchScorer(Scorer(suite=suite_by_name("decode"),
+                                check_correctness=False))
+    donor = Island("mha", sc_mha)
+    recipient = Island("decode", sc_dec)
+    g = KernelGenome(block_q=256, block_k=512, rescale_mode="branchless",
+                     mask_mode="block_skip", kv_in_grid=True)
+    donor.lineage.update(g, sc_mha(g), "evolved on mha")
+    assert recipient.accept_migrant(donor.lineage.best(), "mha")
+    b = recipient.lineage.best()
+    assert len(b.values) == len(sc_dec.suite)
+    assert b.values == sc_dec(g).values
+    sc_mha.close(); sc_dec.close()
+
+
+# -- engine: shared scorer cache --------------------------------------------------
+
+
+def test_shared_cache_cheaper_than_independent_runs():
+    """N islands sharing one scorer must pay for strictly fewer evaluations
+    than N independent serial runs of the same islands."""
+    n = 3
+    eng, rep = _run_engine(n_islands=n)
+    shared_evals = rep.evaluations
+    assert rep.cache_hits > 0
+
+    independent = 0
+    from repro.core.islands import default_specs
+    for spec in default_specs(n, seed=11):
+        agent_kwargs = {}
+        if spec.init_genome is not None:
+            agent_kwargs["seed"] = spec.init_genome
+        from repro.core.variation import make_operator
+        evo = ContinuousEvolution(
+            scorer=Scorer(suite=FAST_SUITE),
+            operator=make_operator("avo", agent_kwargs=agent_kwargs))
+        evo.run(max_steps=6)
+        independent += evo.scorer.n_evaluations
+    assert shared_evals < independent
+
+
+# -- persistence / resume ---------------------------------------------------------
+
+
+def test_archipelago_save_load_roundtrip(tmp_path):
+    p = str(tmp_path / "arch.json")
+    eng, _ = _run_engine(persist_path=p)
+    assert os.path.exists(p)
+    with open(p) as f:
+        payload = json.load(f)
+    assert payload["format"] == "archipelago.v1"
+    assert len(payload["islands"]) == len(eng.islands)
+
+    eng2 = IslandEvolution(n_islands=3, suite=FAST_SUITE,
+                           migration_interval=2, seed=11, persist_path=p)
+    try:
+        eng2.load_state(p)
+        for a, b in zip(eng.islands, eng2.islands):
+            assert _lineage_fingerprint(a.lineage) == _lineage_fingerprint(b.lineage)
+    finally:
+        eng2.close()
+
+
+def test_killed_run_resumes_with_identical_lineages(tmp_path):
+    """Persisted state at the barrier IS the whole search state of the
+    lineages: resuming from it reproduces them exactly and keeps going."""
+    p = str(tmp_path / "arch.json")
+    eng, _ = _run_engine(persist_path=p)
+    fingerprints = {isl.name: _lineage_fingerprint(isl.lineage)
+                    for isl in eng.islands}
+    del eng                                       # "kill" the run
+
+    resumed = IslandEvolution.resume(p, n_islands=3, suite=FAST_SUITE,
+                                     migration_interval=2, seed=11)
+    try:
+        for isl in resumed.islands:
+            assert _lineage_fingerprint(isl.lineage) == fingerprints[isl.name]
+        n_before = {isl.name: len(isl.lineage) for isl in resumed.islands}
+        resumed.run(max_steps=2)
+        for isl in resumed.islands:
+            assert len(isl.lineage) >= n_before[isl.name]
+    finally:
+        resumed.close()
+
+
+def test_per_island_files_written(tmp_path):
+    p = str(tmp_path / "arch.json")
+    eng, _ = _run_engine(persist_path=p)
+    for isl in eng.islands:
+        ip = str(tmp_path / f"arch.{isl.name}.json")
+        assert os.path.exists(ip)
+        ln = Lineage.load(ip)
+        assert _lineage_fingerprint(ln) == _lineage_fingerprint(isl.lineage)
+
+
+def test_prefetch_is_pure_cache_warming():
+    """prefetch>0 may pay extra speculative evaluations but must leave the
+    search itself untouched: identical lineages with and without it."""
+    eng_off, _ = _run_engine(n_islands=2)
+    eng_on, rep_on = _run_engine(n_islands=2, prefetch=4)
+    for a, b in zip(eng_off.islands, eng_on.islands):
+        assert _lineage_fingerprint(a.lineage) == _lineage_fingerprint(b.lineage)
+    assert rep_on.cache_hits > 0
+
+
+def test_toolbelt_evaluate_many_batches_through_scorer():
+    batch = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
+    tools = Toolbelt(batch, KnowledgeBase(), Lineage())
+    genomes = [seed_genome(), seed_genome().with_(block_q=256), seed_genome()]
+    svs = tools.evaluate_many(genomes)
+    assert [sv.values for sv in svs] == [batch(g).values for g in genomes]
+    assert batch.n_evaluations == 2                 # duplicates collapsed
+    assert any(c.tool == "evaluate_many" for c in tools.calls)
+    batch.close()
+
+
+def test_resume_prefers_fresher_per_island_file(tmp_path):
+    """A mid-epoch kill leaves per-island files ahead of the aggregate;
+    resume must keep the longer per-island history, losing no commit."""
+    p = str(tmp_path / "arch.json")
+    eng, _ = _run_engine(persist_path=p)
+    victim = eng.islands[0]
+    agg_len = len(victim.lineage)
+    # simulate commits landing after the last barrier: extend ONLY the
+    # per-island file
+    extended = Lineage.from_payload(victim.lineage.to_payload())
+    extra_sv = victim.scorer(seed_genome().with_(block_q=64, block_k=1024))
+    extended.update(seed_genome().with_(block_q=64, block_k=1024), extra_sv,
+                    "post-barrier commit")
+    extended.save(str(tmp_path / f"arch.{victim.name}.json"))
+
+    resumed = IslandEvolution.resume(p, n_islands=3, suite=FAST_SUITE,
+                                     migration_interval=2, seed=11)
+    try:
+        isl0 = next(i for i in resumed.islands if i.name == victim.name)
+        assert len(isl0.lineage) == agg_len + 1
+        assert isl0.lineage.commits[-1].note == "post-barrier commit"
+    finally:
+        resumed.close()
+
+
+def test_coverage_dedupes_islands_sharing_a_suite():
+    """Two islands on one suite contribute that suite's configs once, under
+    the better island's best genome."""
+    sc = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
+    eng = IslandEvolution(specs=[IslandSpec(name="a"), IslandSpec(name="b")],
+                          suite=FAST_SUITE, seed=0)
+    try:
+        # plant different bests on the SAME shared suite
+        shared = eng.islands[0].scorer
+        weak, strong = seed_genome(), KernelGenome(
+            block_q=512, block_k=1024, rescale_mode="branchless",
+            mask_mode="block_skip", div_mode="deferred", kv_in_grid=True)
+        eng.islands[0].lineage.update(weak, shared(weak), "weak")
+        eng.islands[1].lineage.update(strong, shared(strong), "strong")
+        vals = eng.coverage_values()
+        assert len(vals) == len(FAST_SUITE)          # one contribution, not two
+        assert tuple(vals) == shared(strong).values  # the better island owns it
+    finally:
+        eng.close()
+        sc.close()
+
+
+def test_resume_rejects_history_from_different_suite(tmp_path):
+    """Resuming an island under a different target suite must NOT adopt the
+    old history: its values/geomeans are incomparable across suites."""
+    p = str(tmp_path / "arch.json")
+    eng = IslandEvolution(specs=[IslandSpec(name="a", target_suite="mha")],
+                          migration_interval=2, seed=1, persist_path=p)
+    try:
+        eng.run(max_steps=2)
+        assert len(eng.islands[0].lineage) > 0
+    finally:
+        eng.close()
+
+    resumed = IslandEvolution.resume(
+        p, specs=[IslandSpec(name="a", target_suite="decode")],
+        migration_interval=2, seed=1)
+    try:
+        assert len(resumed.islands[0].lineage) == 0   # fresh, not mixed
+    finally:
+        resumed.close()
+
+
+# -- suite specialization ----------------------------------------------------------
+
+
+def test_target_suite_threading():
+    specs = [IslandSpec(name="mha", target_suite="mha"),
+             IslandSpec(name="decode", target_suite="decode")]
+    eng = IslandEvolution(specs=specs, migration_interval=2, seed=3)
+    try:
+        names = {isl.name: tuple(c.name for c in isl.scorer.suite)
+                 for isl in eng.islands}
+        assert all(n.startswith("mha_") for n in names["mha"])
+        assert all(n.startswith("decode_") for n in names["decode"])
+        assert eng.scorers["mha"] is not eng.scorers["decode"]
+    finally:
+        eng.close()
+
+
+def test_continuous_evolution_target_suite():
+    evo = ContinuousEvolution(target_suite="decode")
+    assert all(c.name.startswith("decode_") for c in evo.scorer.suite)

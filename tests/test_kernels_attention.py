@@ -3,11 +3,12 @@
 Sweeps every genome axis, shapes (incl. ragged/padded), dtypes, masking
 (causal / sliding-window / softcap), GQA ratios, and the gqa_pack path.
 """
+import random
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ref import mha_reference, flash_reference_blocked
@@ -169,21 +170,32 @@ def test_blocked_reference_q_offset():
     np.testing.assert_allclose(tail, full[:, :, 96:], **TOL)
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    seed=st.integers(0, 2**16),
-    B=st.integers(1, 2),
-    hq_mult=st.integers(1, 4),
-    Hkv=st.integers(1, 2),
-    S=st.sampled_from([64, 96, 128, 160]),
-    D=st.sampled_from([32, 64]),
-    causal=st.booleans(),
-    bq=st.sampled_from([32, 64, 128]),
-    bk=st.sampled_from([32, 64, 128]),
-    rescale=st.sampled_from(["branchless", "branched"]),
-    mask=st.sampled_from(["dense", "block_skip"]),
-    kv_in_grid=st.booleans(),
-)
+def _oracle_cases(n=20, rng_seed=0):
+    """Deterministic seeded sample of the genome x shape space (replaces the
+    old hypothesis strategy with the same coverage, no runtime dependency)."""
+    r = random.Random(rng_seed)
+    cases = []
+    for _ in range(n):
+        cases.append((
+            r.randrange(2**16),                          # seed
+            r.randint(1, 2),                             # B
+            r.randint(1, 4),                             # hq_mult
+            r.randint(1, 2),                             # Hkv
+            r.choice([64, 96, 128, 160]),                # S
+            r.choice([32, 64]),                          # D
+            r.choice([False, True]),                     # causal
+            r.choice([32, 64, 128]),                     # bq
+            r.choice([32, 64, 128]),                     # bk
+            r.choice(["branchless", "branched"]),        # rescale
+            r.choice(["dense", "block_skip"]),           # mask
+            r.choice([False, True]),                     # kv_in_grid
+        ))
+    return cases
+
+
+@pytest.mark.parametrize(
+    "seed,B,hq_mult,Hkv,S,D,causal,bq,bk,rescale,mask,kv_in_grid",
+    _oracle_cases())
 def test_property_kernel_matches_oracle(seed, B, hq_mult, Hkv, S, D, causal,
                                         bq, bk, rescale, mask, kv_in_grid):
     """Property: ANY genome point must agree with the oracle on ANY shape —

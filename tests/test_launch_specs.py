@@ -12,8 +12,7 @@ from repro.launch import specs as S
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"))
 
 
 def test_batch_specs_shapes(mesh):

@@ -1,9 +1,10 @@
 """Qualitative properties of the TPU v5e analytic performance model — the
 throughput axis of the AVO scoring function f."""
+import itertools
 import math
+import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.perfmodel import (BenchConfig, EXPERT_GENOME, estimate,
                                   expert_reference, fa_reference, gqa_suite,
@@ -115,15 +116,23 @@ def test_expert_and_fa_are_strong():
             assert 0.45 * 197 < e < 197
 
 
-@settings(max_examples=40, deadline=None)
-@given(bq=st.sampled_from([64, 128, 256, 512]),
-       bk=st.sampled_from([128, 256, 512]),
-       rm=st.sampled_from(["branchless", "branched"]),
-       mm=st.sampled_from(["dense", "block_skip"]),
-       dm=st.sampled_from(["deferred", "eager"]),
-       kg=st.booleans(), gp=st.booleans(),
-       s=st.sampled_from([4096, 8192, 16384]),
-       causal=st.booleans())
+# Deterministic sample of the property space (seeded, no runtime dependency):
+# the same 40 points every run, drawn from the full cartesian product.
+_PROFILE_SPACE = list(itertools.product(
+    [64, 128, 256, 512],               # bq
+    [128, 256, 512],                   # bk
+    ["branchless", "branched"],        # rm
+    ["dense", "block_skip"],           # mm
+    ["deferred", "eager"],             # dm
+    [False, True],                     # kg
+    [False, True],                     # gp
+    [4096, 8192, 16384],               # s
+    [False, True],                     # causal
+))
+_PROFILE_CASES = random.Random(0).sample(_PROFILE_SPACE, 40)
+
+
+@pytest.mark.parametrize("bq,bk,rm,mm,dm,kg,gp,s,causal", _PROFILE_CASES)
 def test_property_profile_consistency(bq, bk, rm, mm, dm, kg, gp, s, causal):
     g = KernelGenome(bq, bk, rm, mm, dm, kg, gp)
     cfg = BenchConfig("p", 32768 // s, 16, 16, s, causal=causal)
