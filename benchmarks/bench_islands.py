@@ -1,4 +1,5 @@
-"""Island-model engine vs the serial loop: scenario-sweep wall-clock race.
+"""Island-model engine vs the serial loop: scenario-sweep wall-clock race,
+plus the evaluation-backend race (thread vs process on a cold batch).
 
 The workload is the full scenario family — MHA, GQA, and decode shapes
 (30 benchmark configs).  Two ways to cover it:
@@ -34,8 +35,9 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 from common import chart, emit  # noqa: E402
 
-from repro.core import (ContinuousEvolution, IslandEvolution, Scorer,
-                        scenario_specs, suite_by_name)  # noqa: E402
+from repro.core import (ContinuousEvolution, IslandEvolution, KernelGenome,
+                        Scorer, make_backend, scenario_specs,
+                        suite_by_name)  # noqa: E402
 
 UNION = "mha+gqa+decode"
 
@@ -44,6 +46,76 @@ def geomean(vals):
     if not vals or any(v <= 0 for v in vals):
         return 0.0
     return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def cold_candidates(n):
+    """n unique genomes with pairwise-distinct kernel *structures* (after the
+    correctness check's block scaling), so every candidate pays a real
+    interpret-mode trace — the evolution-search-like worst case for f."""
+    import itertools
+    seen, out = set(), []
+    for bq, bk, rm, mm, dm, kg in itertools.product(
+            (512, 1024, 2048, 256), (512, 1024, 2048, 256),
+            ("branchless", "branched"), ("dense", "block_skip"),
+            ("deferred", "eager"), (True, False)):
+        sig = (max(16, min(bq, 2048) // 16), max(16, min(bk, 2048) // 16),
+               rm, mm, dm, kg)
+        if sig in seen:
+            continue
+        seen.add(sig)
+        out.append(KernelGenome(bq, bk, rm, mm, dm, kg, False))
+        if len(out) >= n:
+            break
+    return out
+
+
+def run_backend_race(n_candidates):
+    """Thread vs process wall-clock on a cold candidate batch.
+
+    Runs FIRST, while this process has never touched jax: the process
+    backend's workers then fork cheaply from a jax-clean parent, and the
+    thread backend's in-process tracing below is equally cold — neither
+    side inherits the other's jax trace caches (workers are separate
+    processes either way)."""
+    suite = [c for c in suite_by_name("mha") if c.seq_len == 4096]
+    genomes = cold_candidates(n_candidates)
+    print(f"cold batch: {len(genomes)} unique candidates, "
+          f"{len(suite)}-config suite, correctness ON")
+
+    # each side is timed from backend construction through the last result:
+    # the process side pays pool startup + per-worker warm initialization in
+    # its window, the thread side pays its proxy-input build in its own
+    t0 = time.perf_counter()
+    proc = make_backend("process", suite=suite)
+    res_p = proc.map(genomes)
+    t_proc = time.perf_counter() - t0
+    proc.close()
+    print(f"process backend: {t_proc:.1f}s "
+          f"({proc.n_evaluations} paid evaluations)")
+
+    t0 = time.perf_counter()
+    thread = make_backend("thread", suite=suite)
+    res_t = thread.map(genomes)
+    t_thread = time.perf_counter() - t0
+    thread.close()
+    print(f"thread  backend: {t_thread:.1f}s "
+          f"({thread.n_evaluations} paid evaluations)")
+
+    identical = all(a.values == b.values and a.correct == b.correct
+                    for a, b in zip(res_p, res_t))
+    speedup = t_thread / t_proc if t_proc > 0 else 0.0
+    print(f"bit-identical score vectors: {'OK' if identical else 'MISMATCH'}")
+    print(f"process-over-thread speedup: {speedup:.2f}x "
+          f"({os.cpu_count()} cores visible; on a shares-throttled or busy "
+          f"host the measured ratio is contention-sensitive)")
+
+    emit("eval_backends", ["backend", "wall_s", "candidates", "evaluations"],
+         [["process", f"{t_proc:.2f}", len(genomes), proc.n_evaluations],
+          ["thread", f"{t_thread:.2f}", len(genomes), thread.n_evaluations]])
+    chart("cold-batch wall-clock (s, lower is better)",
+          [("thread", t_thread), ("process", t_proc)])
+    return dict(speedup=speedup, identical=identical,
+                t_thread=t_thread, t_proc=t_proc)
 
 
 def run_serial(steps: int):
@@ -136,7 +208,23 @@ def main(argv=None):
                     help="3 = one specialist per suite, 4 = + mha explorer "
                          "(the scenario preset defines exactly 4 islands)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cold-batch", type=int, default=48,
+                    help="candidates in the thread-vs-process backend race "
+                         "(0 skips the race; >=32 for a meaningful read — "
+                         "per-worker warmup amortizes with batch size)")
+    ap.add_argument("--gate", choices=("all", "deterministic"), default="all",
+                    help="what the exit code enforces: 'deterministic' gates "
+                         "only resume identity + backend bit-identity; 'all' "
+                         "adds the islands-beat-serial wall-clock race "
+                         "(contention-sensitive on shared runners)")
     args = ap.parse_args(argv)
+
+    race = None
+    if args.cold_batch:
+        print(f"== eval-backend race: thread vs process, "
+              f"{args.cold_batch} cold candidates ==")
+        race = run_backend_race(args.cold_batch)
+        print()
 
     print(f"== serial generalist on '{UNION}' "
           f"({len(suite_by_name(UNION))} configs), {args.steps} steps ==")
@@ -190,8 +278,20 @@ def main(argv=None):
               f"({t_serial / t_isl:.2f}x)")
     else:
         print("\nNO SPEEDUP on this run/host")
+    if race is not None:
+        verdict = "OK" if (race["identical"] and race["speedup"] >= 1.3) else \
+            "BELOW TARGET"
+        print(f"EVAL-BACKEND SPEEDUP: process {race['speedup']:.2f}x over "
+              f"thread on the cold batch [{verdict}]")
     isl["engine"].close()
-    return 0 if (resume_ok and t_isl is not None and t_isl < t_serial) else 1
+    # deterministic gates: resume identity + backend bit-identity.  The
+    # wall-clock races (islands-beat-serial, >=1.3x backend ratio) are
+    # host-contention-sensitive; only the former is gated, and only under
+    # --gate all (the local default — CI smoke uses --gate deterministic)
+    ok = resume_ok and (race is None or race["identical"])
+    if args.gate == "all":
+        ok = ok and t_isl is not None and t_isl < t_serial
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -9,7 +9,8 @@ Sections:
   trajectory  Fig. 5/6 — evolution trajectory, running-best geomean
   ablation    Table 1 — the three representative optimizations
   operators   Fig. 1  — AVO vs fixed-pipeline variation operators
-  islands     (ours)  — island-model engine vs serial loop, scenario sweep
+  islands     (ours)  — island-model engine vs serial loop, scenario sweep,
+                        + thread-vs-process eval-backend race
   roofline    (brief) — dry-run roofline table, if results/dryrun exists
 """
 from __future__ import annotations
@@ -22,7 +23,7 @@ SECTIONS = ["mha", "gqa", "trajectory", "ablation", "operators", "islands",
             "roofline"]
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=SECTIONS, default=None)
     ap.add_argument("--fast", action="store_true",
@@ -31,35 +32,45 @@ def main() -> None:
     todo = [args.only] if args.only else SECTIONS
 
     t0 = time.time()
+    failed = []
     for name in todo:
         print(f"\n================ {name} ================", flush=True)
-        try:
-            if name == "mha":
-                from benchmarks import bench_mha
-                bench_mha.main(["--published-baselines"])
-            elif name == "gqa":
-                from benchmarks import bench_gqa
-                bench_gqa.main(["--adapt-steps", "3" if args.fast else "6"])
-            elif name == "trajectory":
-                from benchmarks import bench_trajectory
-                bench_trajectory.main(
-                    ["--commits", "6" if args.fast else "12"])
-            elif name == "ablation":
-                from benchmarks import bench_ablation
-                bench_ablation.main([])
-            elif name == "operators":
-                from benchmarks import bench_operators
-                bench_operators.main(["--budget", "30" if args.fast else "60"])
-            elif name == "islands":
-                from benchmarks import bench_islands
-                bench_islands.main(["--steps", "24" if args.fast else "40"])
-            elif name == "roofline":
-                from repro.launch import roofline
-                roofline.main([])
-        except FileNotFoundError as e:
-            print(f"[skipped: {e}]")
-    print(f"\nall sections done in {time.time() - t0:.0f}s")
+        rc = None
+        if name == "mha":
+            from benchmarks import bench_mha
+            rc = bench_mha.main(["--published-baselines"])
+        elif name == "gqa":
+            from benchmarks import bench_gqa
+            rc = bench_gqa.main(["--adapt-steps", "3" if args.fast else "6"])
+        elif name == "trajectory":
+            from benchmarks import bench_trajectory
+            rc = bench_trajectory.main(
+                ["--commits", "6" if args.fast else "12"])
+        elif name == "ablation":
+            from benchmarks import bench_ablation
+            rc = bench_ablation.main([])
+        elif name == "operators":
+            from benchmarks import bench_operators
+            rc = bench_operators.main(
+                ["--budget", "30" if args.fast else "60"])
+        elif name == "islands":
+            from benchmarks import bench_islands
+            rc = bench_islands.main(
+                ["--steps", "24" if args.fast else "40",
+                 "--cold-batch", "8" if args.fast else "48"]
+                + (["--gate", "deterministic"] if args.fast else []))
+        elif name == "roofline":
+            from repro.launch import roofline
+            try:
+                rc = roofline.main([])
+            except FileNotFoundError as e:
+                print(f"[skipped: {e}]")   # needs results/dryrun to exist
+        if rc:                             # sections gate by returning nonzero
+            failed.append(name)
+    print(f"\nall sections done in {time.time() - t0:.0f}s"
+          + (f"; FAILED: {', '.join(failed)}" if failed else ""))
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -10,6 +10,7 @@ Serial (paper §3.3, single lineage):
 Island-model parallel (N concurrent lineages, migration, shared memory):
   PYTHONPATH=src python examples/evolve_attention.py --islands 4
   PYTHONPATH=src python examples/evolve_attention.py --islands 4 --scenario-sweep
+  PYTHONPATH=src python examples/evolve_attention.py --islands 4 --eval-backend process
 """
 import argparse
 import os
@@ -17,7 +18,8 @@ import os
 import numpy as np
 
 from repro.core import (AgenticVariationOperator, ContinuousEvolution,
-                        IslandEvolution, Scorer, ScriptedAgent, scenario_specs)
+                        IslandEvolution, ScriptedAgent, make_backend,
+                        scenario_specs)
 from repro.core.perfmodel import expert_reference, fa_reference, gqa_suite, mha_suite
 from repro.core.population import Lineage
 
@@ -36,8 +38,9 @@ def run_serial(args):
         suite, path = mha_suite(), os.path.join(OUT, "lineage_mha.json")
         operator = AgenticVariationOperator()
 
-    evo = ContinuousEvolution(scorer=Scorer(suite=suite), operator=operator,
-                              persist_path=path)
+    evo = ContinuousEvolution(
+        scorer=make_backend(args.eval_backend, suite=suite),
+        operator=operator, persist_path=path)
     rep = evo.run(max_steps=args.max_steps, target_commits=args.commits,
                   verbose=True)
 
@@ -51,6 +54,7 @@ def run_serial(args):
           f"(expert line {exp:.1f}, FA line {fa:.1f})")
     print(f"best genome: {evo.lineage.best().genome}")
     print(f"lineage persisted to {path}")
+    evo.close()
 
 
 def run_islands(args):
@@ -59,14 +63,16 @@ def run_islands(args):
         path = os.path.join(OUT, "archipelago_sweep.json")
         engine = IslandEvolution.resume(path, specs=scenario_specs(),
                                         seed=args.seed,
-                                        prefetch=args.prefetch)
+                                        prefetch=args.prefetch,
+                                        backend=args.eval_backend)
         print("scenario-sweep: islands "
               + ", ".join(i.name for i in engine.islands))
     else:
         path = os.path.join(OUT, "archipelago.json")
         engine = IslandEvolution.resume(path, n_islands=args.islands,
                                         suite=mha_suite(), seed=args.seed,
-                                        prefetch=args.prefetch)
+                                        prefetch=args.prefetch,
+                                        backend=args.eval_backend)
         print(f"{args.islands} islands on the MHA suite, diverse inits")
 
     rep = engine.run(max_steps=args.max_steps,
@@ -99,7 +105,16 @@ def main():
                     help="speculatively batch-evaluate this many KB candidate "
                          "edits per island step (cache warming on the scorer "
                          "executor; search results are unchanged)")
+    ap.add_argument("--eval-backend", choices=("inline", "thread", "process"),
+                    default=None,
+                    help="evaluation service: inline (serial default), thread "
+                         "(islands default), or process — a warm worker-process "
+                         "pool for real multi-core scaling of the correctness "
+                         "checks.  Bit-identical results; wall-clock only")
     args = ap.parse_args()
+    if args.eval_backend is None:
+        args.eval_backend = ("thread" if args.islands or args.scenario_sweep
+                             else "inline")
 
     os.makedirs(OUT, exist_ok=True)
     if args.islands or args.scenario_sweep:

@@ -1,13 +1,18 @@
 from repro.core.agent import AgentPolicy, Directive, ScriptedAgent, VariationResult
+from repro.core.evals import (BACKENDS, BatchScorer, EvalBackend, EvalSpec,
+                              InlineBackend, ProcessBackend, ScoreCache,
+                              ScoreVector, Scorer, ThreadBackend,
+                              evaluate_genome, make_backend)
 from repro.core.evolution import ContinuousEvolution, EvolutionReport
-from repro.core.islands import (Island, IslandEvolution, IslandReport,
-                                IslandSpec, default_specs, scenario_specs)
+from repro.core.islands import (Archipelago, Island, IslandEvolution,
+                                IslandReport, IslandSpec, default_specs,
+                                scenario_specs)
 from repro.core.knowledge import KnowledgeBase
 from repro.core.perfmodel import (BenchConfig, decode_suite, estimate,
                                   expert_reference, fa_reference, gqa_suite,
-                                  mha_suite, suite_by_name)
+                                  mha_suite, register_suite, registered_suites,
+                                  suite_by_name, unregister_suite)
 from repro.core.population import Commit, Lineage
-from repro.core.scoring import BatchScorer, Scorer, ScoreVector
 from repro.core.search_space import KernelGenome, seed_genome
 from repro.core.supervisor import Supervisor
 from repro.core.toolbelt import RefutedMemory, Toolbelt
@@ -16,12 +21,16 @@ from repro.core.variation import (AgenticVariationOperator, PlanExecuteSummarize
 
 __all__ = [
     "AgentPolicy", "Directive", "ScriptedAgent", "VariationResult",
+    "BACKENDS", "BatchScorer", "EvalBackend", "EvalSpec", "InlineBackend",
+    "ProcessBackend", "ScoreCache", "ScoreVector", "Scorer", "ThreadBackend",
+    "evaluate_genome", "make_backend",
     "ContinuousEvolution", "EvolutionReport", "KnowledgeBase",
-    "Island", "IslandEvolution", "IslandReport", "IslandSpec",
+    "Archipelago", "Island", "IslandEvolution", "IslandReport", "IslandSpec",
     "default_specs", "scenario_specs",
     "BenchConfig", "decode_suite", "estimate", "expert_reference",
-    "fa_reference", "gqa_suite", "mha_suite", "suite_by_name",
-    "Commit", "Lineage", "BatchScorer", "Scorer", "ScoreVector",
+    "fa_reference", "gqa_suite", "mha_suite", "register_suite",
+    "registered_suites", "suite_by_name", "unregister_suite",
+    "Commit", "Lineage",
     "KernelGenome", "seed_genome", "Supervisor", "RefutedMemory", "Toolbelt",
     "AgenticVariationOperator", "PlanExecuteSummarize", "SingleShotMutation",
     "make_operator",

@@ -16,7 +16,7 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.core.scoring import ScoreVector
+from repro.core.evals import ScoreVector
 from repro.core.search_space import KernelGenome, seed_genome
 from repro.core.toolbelt import Toolbelt
 

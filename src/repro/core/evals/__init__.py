@@ -1,0 +1,25 @@
+"""The evaluation service: scoring function, cache, and parallel backends.
+
+Layout:
+  vector.py    ScoreVector — the value of f(x), picklable
+  cache.py     ScoreCache — the explicit memo API every backend shares
+  scorer.py    Scorer / InlineBackend — correctness + perfmodel, in-process
+  worker.py    evaluate_genome / EvalSpec — the pure picklable worker fn
+  backends.py  EvalBackend protocol; thread (BatchScorer) + process backends
+
+``repro.core.scoring`` re-exports the stable names for older call sites.
+"""
+from repro.core.evals.backends import (BACKENDS, BatchScorer, EvalBackend,
+                                       ProcessBackend, ThreadBackend,
+                                       make_backend, make_process_executor)
+from repro.core.evals.cache import ScoreCache
+from repro.core.evals.scorer import CORRECTNESS_TOL, InlineBackend, Scorer
+from repro.core.evals.vector import ScoreVector
+from repro.core.evals.worker import EvalSpec, evaluate_genome, warm_worker
+
+__all__ = [
+    "BACKENDS", "BatchScorer", "CORRECTNESS_TOL", "EvalBackend", "EvalSpec",
+    "InlineBackend", "ProcessBackend", "ScoreCache", "ScoreVector", "Scorer",
+    "ThreadBackend", "evaluate_genome", "make_backend",
+    "make_process_executor", "warm_worker",
+]

@@ -1,0 +1,355 @@
+"""Pluggable evaluation backends: inline, thread, process.
+
+The AVO loop is bounded by how fast the scoring function ``f`` can be paid
+(paper §3.1: every variation step executes correctness + profiling).  The
+island engine's original thread pool is GIL-bound — interpret-mode Pallas
+tracing is Python-heavy — so real multi-core scaling needs worker processes.
+All three backends share one contract (:class:`EvalBackend`) and are
+bit-identical: the Scorer is a deterministic function of the genome, so
+backend choice changes wall-clock only, never search behaviour.
+
+  inline   evaluate in the calling thread (the plain :class:`Scorer` path)
+  thread   shared memo cache + in-flight dedup on a ThreadPoolExecutor —
+           overlaps what little the GIL releases; cheap to share
+  process  ProcessPoolExecutor with per-worker warm initializers, a
+           parent-side shared :class:`ScoreCache`, and parent-side in-flight
+           dedup (concurrent requests for one genome collapse onto one
+           worker task)
+
+Process-start strategy: fork is preferred on POSIX *while the parent has not
+initialized a jax backend* (forking live XLA thread pools can deadlock);
+otherwise spawn.  Under fork the parent pre-imports the jax/kernel modules
+(import only — no backend initialization, hence fork-safe) so every worker
+inherits warm modules instead of paying its own multi-second import.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import multiprocessing
+import os
+import sys
+import threading
+from typing import Optional, Protocol, Sequence, Union, runtime_checkable
+
+from repro.core.evals.cache import ScoreCache
+from repro.core.evals.scorer import InlineBackend, Scorer
+from repro.core.evals.vector import ScoreVector
+from repro.core.evals.worker import (EvalSpec, _prestart_noop, evaluate_genome,
+                                     warm_worker)
+from repro.core.perfmodel import BenchConfig
+from repro.core.search_space import KernelGenome
+
+BACKENDS = ("inline", "thread", "process")
+
+
+@runtime_checkable
+class EvalBackend(Protocol):
+    """What every evaluation backend exposes.  ``__call__`` and ``map`` are
+    the scoring surface; the rest is accounting the engine reports."""
+
+    suite: Sequence[BenchConfig]
+
+    def __call__(self, genome: KernelGenome) -> ScoreVector: ...
+    def map(self, genomes: Sequence[KernelGenome]) -> list: ...
+    def prefetch(self, genomes: Sequence[KernelGenome]) -> None: ...
+    def baselines(self) -> dict: ...
+    def close(self) -> None: ...
+
+
+class BatchScorer:
+    """The ``thread`` backend: a thread-safe wrapper around a :class:`Scorer`
+    with a shared memo cache and batched candidate evaluation on a
+    ``concurrent.futures`` executor.
+
+    Several islands share one BatchScorer per benchmark suite, so an edit one
+    island has already paid to evaluate (or falsify) is a cache hit everywhere
+    else.  Results are bit-identical to the wrapped Scorer — the Scorer is a
+    deterministic function of the genome — so sharing only changes wall-clock
+    and evaluation counts, never search behaviour.
+
+    Concurrency contract: concurrent calls for the *same* genome collapse into
+    one evaluation (in-flight keys carry an event other callers wait on);
+    concurrent calls for different genomes run in parallel.  If the owner's
+    evaluation raises, the exception propagates to the owner's caller, waiters
+    wake, and one of them becomes the new owner and retries.
+    """
+
+    def __init__(self, base: Optional[Scorer] = None, *,
+                 suite: Optional[Sequence[BenchConfig]] = None,
+                 max_workers: Optional[int] = None,
+                 executor: Optional[concurrent.futures.Executor] = None):
+        self.base = base if base is not None else Scorer(suite=suite)
+        self._lock = threading.Lock()
+        self._inflight: dict[str, threading.Event] = {}
+        self._own_executor = executor is None
+        self._executor = executor or concurrent.futures.ThreadPoolExecutor(
+            max_workers=max_workers or 4, thread_name_prefix="batch-scorer")
+        # the lazy proxy build must not race across threads
+        self.base.warm()
+
+    # -- delegation --------------------------------------------------------------
+    @property
+    def suite(self):
+        return self.base.suite
+
+    @property
+    def cache(self) -> ScoreCache:
+        return self.base.cache
+
+    @property
+    def cache_hits(self) -> int:
+        return self.base.cache.hits
+
+    @property
+    def n_evaluations(self) -> int:
+        return self.base.n_evaluations
+
+    @property
+    def in_flight(self) -> tuple:
+        """Snapshot of genome keys currently being evaluated."""
+        with self._lock:
+            return tuple(self._inflight)
+
+    def baselines(self) -> dict:
+        return self.base.baselines()
+
+    # -- thread-safe scoring -----------------------------------------------------
+    def __call__(self, genome: KernelGenome) -> ScoreVector:
+        key = genome.key()
+        cache = self.base.cache
+        while True:
+            with self._lock:
+                sv = cache.get(key)
+                if sv is not None:
+                    return sv
+                event = self._inflight.get(key)
+                if event is None:
+                    self._inflight[key] = event = threading.Event()
+                    owner = True
+                else:
+                    owner = False
+            if not owner:
+                event.wait()
+                continue               # re-read the cache (or retry on error)
+            try:
+                sv = self.base.score_uncached(genome)
+                cache.put(key, sv)
+                return sv
+            finally:
+                with self._lock:
+                    del self._inflight[key]
+                event.set()
+
+    def map(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
+        """Evaluate a batch concurrently; order-preserving, duplicates collapse
+        onto one evaluation."""
+        unique: dict[str, KernelGenome] = {}
+        for g in genomes:
+            unique.setdefault(g.key(), g)
+        futures = {k: self._executor.submit(self, g) for k, g in unique.items()}
+        return [futures[g.key()].result() for g in genomes]
+
+    def prefetch(self, genomes: Sequence[KernelGenome]) -> None:
+        """Fire-and-forget cache warming for speculative candidates.  Skips
+        genomes already cached *or already in flight* — a duplicate submit
+        would collapse onto the in-flight evaluation anyway, but only after
+        wasting an executor slot waiting on it."""
+        for g in genomes:
+            key = g.key()
+            with self._lock:
+                if self.base.cache.peek(key) is not None \
+                        or key in self._inflight:
+                    continue
+            self._executor.submit(self, g)
+
+    def close(self) -> None:
+        if self._own_executor:
+            self._executor.shutdown(wait=True, cancel_futures=True)
+
+
+# the thread backend's canonical name; BatchScorer predates the backend layer
+ThreadBackend = BatchScorer
+
+
+def _jax_fork_unsafe() -> bool:
+    """True when the parent has (or may have) live XLA state that makes
+    forking unsafe.  Import alone is fine; an initialized backend is not."""
+    if "jax" not in sys.modules:
+        return False
+    try:
+        from jax._src import xla_bridge
+        return bool(xla_bridge._backends)
+    except Exception:
+        return True        # cannot tell: be conservative
+
+
+def _resolve_mp_context(mp_context):
+    if mp_context is None:
+        if os.name == "posix" and not _jax_fork_unsafe():
+            return multiprocessing.get_context("fork")
+        return multiprocessing.get_context("spawn")
+    if isinstance(mp_context, str):
+        return multiprocessing.get_context(mp_context)
+    return mp_context
+
+
+def _parent_import_warmup() -> None:
+    """Import (only) the heavy modules a correctness-checking worker needs,
+    so fork children inherit them loaded.  No arrays are created and no jax
+    backend is initialized, so this does not poison later forks."""
+    import jax                                    # noqa: F401
+    import jax.numpy                              # noqa: F401
+    import repro.kernels.flash_attention          # noqa: F401
+    import repro.kernels.ref                      # noqa: F401
+
+
+def make_process_executor(specs: Sequence[EvalSpec],
+                          max_workers: Optional[int] = None,
+                          mp_context=None) -> concurrent.futures.Executor:
+    """A ProcessPoolExecutor whose workers are warm for every given spec.
+
+    Workers are prestarted immediately: under the preferred fork strategy the
+    fork must happen while the parent is still jax-clean, and eager start
+    overlaps worker warmup with whatever the parent does next.
+    """
+    ctx = _resolve_mp_context(mp_context)
+    workers = max_workers or os.cpu_count() or 2
+    if ctx.get_start_method() == "fork" and \
+            any(s.check_correctness for s in specs):
+        _parent_import_warmup()
+    executor = concurrent.futures.ProcessPoolExecutor(
+        max_workers=workers, mp_context=ctx,
+        initializer=warm_worker, initargs=(tuple(specs),))
+    for _ in range(workers):
+        executor.submit(_prestart_noop)
+    return executor
+
+
+class ProcessBackend:
+    """The ``process`` backend: real multi-core scaling for the GIL-bound
+    correctness checks.
+
+    The parent keeps the shared :class:`ScoreCache` and the in-flight future
+    table; workers are pure (see ``worker.py``) and rebuild proxy inputs
+    deterministically from the spec, so results are bit-identical to the
+    inline path.  Concurrent requests for one genome share a single future;
+    a failed evaluation is evicted from the in-flight table (never cached),
+    so callers can retry.
+    """
+
+    def __init__(self, suite: Union[str, Sequence[BenchConfig], None] = None, *,
+                 spec: Optional[EvalSpec] = None,
+                 check_correctness: bool = True, rng_seed: int = 0,
+                 max_workers: Optional[int] = None, mp_context=None,
+                 cache: Optional[ScoreCache] = None,
+                 executor: Optional[concurrent.futures.Executor] = None):
+        self.spec = spec if spec is not None else EvalSpec.resolve(
+            suite, check_correctness, rng_seed)
+        self.cache = cache if cache is not None else ScoreCache()
+        self._lock = threading.Lock()
+        self._futures: dict[str, concurrent.futures.Future] = {}
+        self._paid = 0
+        self._own_executor = executor is None
+        self._executor = executor or make_process_executor(
+            (self.spec,), max_workers=max_workers, mp_context=mp_context)
+        self._baseline_scorer = Scorer(suite=list(self.spec.suite),
+                                       check_correctness=False)
+
+    # -- accounting ---------------------------------------------------------------
+    @property
+    def suite(self):
+        return list(self.spec.suite)
+
+    @property
+    def n_evaluations(self) -> int:
+        """Evaluations dispatched to workers (the paid count)."""
+        with self._lock:
+            return self._paid
+
+    @property
+    def cache_hits(self) -> int:
+        return self.cache.hits
+
+    @property
+    def in_flight(self) -> tuple:
+        with self._lock:
+            return tuple(self._futures)
+
+    def baselines(self) -> dict:
+        return self._baseline_scorer.baselines()
+
+    # -- scoring ------------------------------------------------------------------
+    def submit(self, genome: KernelGenome) -> concurrent.futures.Future:
+        """Cache hit -> completed future; in flight -> the shared future;
+        otherwise dispatch to a worker."""
+        key = genome.key()
+        with self._lock:
+            sv = self.cache.get(key)
+            if sv is not None:
+                done: concurrent.futures.Future = concurrent.futures.Future()
+                done.set_result(sv)
+                return done
+            fut = self._futures.get(key)
+            if fut is not None:
+                return fut
+            fut = self._executor.submit(evaluate_genome, genome, self.spec)
+            self._paid += 1
+            self._futures[key] = fut
+        # outside the lock: an already-completed future runs the callback
+        # synchronously right here, and _on_done takes the lock itself
+        fut.add_done_callback(lambda f, key=key: self._on_done(key, f))
+        return fut
+
+    def _on_done(self, key: str, fut: concurrent.futures.Future) -> None:
+        with self._lock:
+            self._futures.pop(key, None)
+            if not fut.cancelled() and fut.exception() is None:
+                self.cache.put(key, fut.result())
+
+    def __call__(self, genome: KernelGenome) -> ScoreVector:
+        return self.submit(genome).result()
+
+    def map(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
+        """Order-preserving batch evaluation; duplicates share one task."""
+        futures = [self.submit(g) for g in genomes]
+        return [f.result() for f in futures]
+
+    def prefetch(self, genomes: Sequence[KernelGenome]) -> None:
+        for g in genomes:
+            key = g.key()
+            with self._lock:
+                if self.cache.peek(key) is not None or key in self._futures:
+                    continue
+            self.submit(g)
+
+    def close(self) -> None:
+        if self._own_executor:
+            self._executor.shutdown(wait=True, cancel_futures=True)
+
+
+def make_backend(name: str,
+                 suite: Union[str, Sequence[BenchConfig], EvalSpec,
+                              None] = None,
+                 **kw) -> "EvalBackend":
+    """Build an evaluation backend by name — the single dispatch point
+    ('inline' | 'thread' | 'process'; see ``BACKENDS``).
+
+    ``suite`` is a registered suite name, an explicit BenchConfig sequence,
+    a pre-resolved :class:`EvalSpec`, or None (MHA default); remaining
+    keywords go to the backend constructor (e.g. ``executor=`` to share a
+    pool, ``max_workers=``).
+    """
+    spec = EvalSpec.resolve(suite,
+                            kw.pop("check_correctness", True),
+                            kw.pop("rng_seed", 0))
+    if name == "inline":
+        return InlineBackend(suite=list(spec.suite),
+                             check_correctness=spec.check_correctness,
+                             rng_seed=spec.rng_seed, **kw)
+    if name == "thread":
+        return ThreadBackend(Scorer(suite=list(spec.suite),
+                                    check_correctness=spec.check_correctness,
+                                    rng_seed=spec.rng_seed), **kw)
+    if name == "process":
+        return ProcessBackend(spec=spec, **kw)
+    raise ValueError(f"unknown eval backend {name!r}; known: {BACKENDS}")

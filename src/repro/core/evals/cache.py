@@ -1,0 +1,56 @@
+"""Explicit score-cache API shared by every evaluation backend.
+
+One :class:`ScoreCache` memoizes ``genome.key() -> ScoreVector``.  It is the
+*only* supported way to read or seed memoized scores: backends, the island
+engine, and tests all go through this API instead of poking scorer
+internals.  All access is thread-safe; hit/miss accounting is built in so
+shared-cache savings are observable (``IslandReport.cache_hits``).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+from repro.core.evals.vector import ScoreVector
+
+
+class ScoreCache:
+    """Thread-safe ``key -> ScoreVector`` memo with hit/miss accounting."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._data: dict[str, ScoreVector] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str) -> Optional[ScoreVector]:
+        """Counted lookup: increments ``hits`` or ``misses``."""
+        with self._lock:
+            sv = self._data.get(key)
+            if sv is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return sv
+
+    def peek(self, key: str) -> Optional[ScoreVector]:
+        """Uncounted lookup — for speculative checks (prefetch) that should
+        not inflate the hit statistics."""
+        with self._lock:
+            return self._data.get(key)
+
+    def put(self, key: str, sv: ScoreVector) -> None:
+        with self._lock:
+            self._data[key] = sv
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()

@@ -1,0 +1,172 @@
+"""The inline evaluation path: correctness + profiling in the calling process.
+
+Correctness is executed for real: the genome is materialized into its Pallas
+kernel and run in ``interpret=True`` mode on CPU against the ``ref.py``
+oracle, on a reduced proxy shape (full 32k shapes are not runnable in the
+interpreter; the kernel's behaviour is shape-generic).  Throughput comes from
+``perfmodel.estimate`` — see that module's docstring for the machine model.
+
+:class:`Scorer` is a deterministic function of the genome: the proxy inputs
+are rebuilt from ``rng_seed`` alone, so two scorers with the same suite and
+seed — in the same process or different ones — return bit-identical
+:class:`ScoreVector`s.  The process backend leans on exactly this property.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import perfmodel
+from repro.core.evals.cache import ScoreCache
+from repro.core.evals.vector import ScoreVector
+from repro.core.perfmodel import BenchConfig, estimate, mha_suite
+from repro.core.search_space import KernelGenome
+
+CORRECTNESS_TOL = 2e-5
+
+
+def _correctness_proxy_shapes(suite: Sequence[BenchConfig]):
+    """Small executable shapes covering the mask/GQA space of the suite."""
+    shapes = []
+    has_gqa = any(c.n_heads != c.n_kv_heads for c in suite)
+    for causal in sorted({c.causal for c in suite}):
+        windows = sorted({c.window for c in suite}, key=lambda w: (w is None, w))
+        for window in windows:
+            w = None if window is None else 48
+            shapes.append(dict(B=1, Hq=4, Hkv=(2 if has_gqa else 4),
+                               S=160, D=64, causal=causal, window=w))
+    return shapes
+
+
+class Scorer:
+    """Callable scoring function with per-genome memoization.
+
+    The memo lives in ``self.cache`` (a :class:`ScoreCache`); pass one in to
+    share it, or read it afterwards — never reach into scorer privates.
+    """
+
+    def __init__(self, suite: Optional[Sequence[BenchConfig]] = None,
+                 check_correctness: bool = True, rng_seed: int = 0,
+                 cache: Optional[ScoreCache] = None):
+        self.suite = list(suite) if suite is not None else mha_suite()
+        self.check_correctness = check_correctness
+        self.rng_seed = rng_seed
+        self.cache = cache if cache is not None else ScoreCache()
+        self.n_evaluations = 0
+        self._count_lock = threading.Lock()
+        self._proxy_inputs = None
+
+    # -- correctness ----------------------------------------------------------
+    def warm(self) -> None:
+        """Build the RNG-derived proxy inputs eagerly.  The lazy build is not
+        thread-safe, so concurrent backends call this once up front; worker
+        initializers call it so the first real evaluation is not penalized."""
+        if self.check_correctness:
+            self._proxy_data()
+
+    def _proxy_data(self):
+        if self._proxy_inputs is None:
+            import jax.numpy as jnp
+            rng = np.random.default_rng(self.rng_seed)
+            shapes = _correctness_proxy_shapes(self.suite)
+            data = []
+            for sh in shapes:
+                q = jnp.asarray(rng.normal(size=(sh["B"], sh["Hq"], sh["S"], sh["D"])),
+                                jnp.float32)
+                k = jnp.asarray(rng.normal(size=(sh["B"], sh["Hkv"], sh["S"], sh["D"])),
+                                jnp.float32)
+                v = jnp.asarray(rng.normal(size=(sh["B"], sh["Hkv"], sh["S"], sh["D"])),
+                                jnp.float32)
+                data.append((sh, q, k, v))
+            self._proxy_inputs = data
+        return self._proxy_inputs
+
+    def check(self, genome: KernelGenome) -> tuple[bool, str]:
+        """Execute the genome's kernel (interpret mode) against the oracle."""
+        import jax.numpy as jnp
+        from repro.kernels.flash_attention import flash_attention
+        from repro.kernels.ref import mha_reference
+        kw = genome.kernel_kwargs()
+        # proxy shapes are small; scale blocks down proportionally so the
+        # structural path (grid/loop/skip/branch) is still exercised
+        kw["block_q"] = max(16, min(kw["block_q"], 2048) // 16)
+        kw["block_k"] = max(16, min(kw["block_k"], 2048) // 16)
+        for sh, q, k, v in self._proxy_data():
+            try:
+                o = flash_attention(q, k, v, causal=sh["causal"], window=sh["window"],
+                                    interpret=True, **kw)
+            except Exception as e:  # trace/lowering failure
+                return False, f"kernel raised: {type(e).__name__}: {e}"
+            r = mha_reference(q, k, v, causal=sh["causal"], window=sh["window"])
+            err = float(jnp.max(jnp.abs(o - r)))
+            if not math.isfinite(err) or err > CORRECTNESS_TOL:
+                return False, (f"numerical mismatch vs oracle: max|err|={err:.2e} "
+                               f"on {sh}")
+        return True, ""
+
+    # -- scoring ----------------------------------------------------------------
+    def __call__(self, genome: KernelGenome) -> ScoreVector:
+        key = genome.key()
+        sv = self.cache.get(key)
+        if sv is not None:
+            return sv
+        sv = self.score_uncached(genome)
+        self.cache.put(key, sv)
+        return sv
+
+    def score_uncached(self, genome: KernelGenome) -> ScoreVector:
+        """Pay the full evaluation cost, bypassing the memo cache (concurrent
+        backends manage the cache themselves and call this directly)."""
+        with self._count_lock:       # backends call this from many threads
+            self.n_evaluations += 1
+
+        if self.check_correctness:
+            ok, why = self.check(genome)
+            if not ok:
+                return ScoreVector(tuple(c.name for c in self.suite),
+                                   tuple(0.0 for _ in self.suite), False, why)
+
+        values, profiles = [], {}
+        for cfg in self.suite:
+            p = estimate(genome, cfg)
+            profiles[cfg.name] = p
+            values.append(p.tflops if p.feasible else 0.0)
+        failure = ""
+        if any(v == 0.0 for v in values):
+            bad = [c.name for c, v in zip(self.suite, values) if v == 0.0]
+            failure = "infeasible on: " + ", ".join(
+                f"{n} ({profiles[n].infeasible_reason})" for n in bad)
+        return ScoreVector(tuple(c.name for c in self.suite), tuple(values),
+                           True, failure, profiles)
+
+    def baselines(self) -> dict:
+        """Expert (cuDNN-analogue) and FA-reference scores on this suite."""
+        return {
+            "expert": tuple(perfmodel.expert_reference(c) for c in self.suite),
+            "fa_reference": tuple(perfmodel.fa_reference(c) for c in self.suite),
+        }
+
+
+class InlineBackend(Scorer):
+    """The ``inline`` evaluation backend: everything in the calling thread.
+
+    Identical to :class:`Scorer` plus the uniform backend surface
+    (``map``/``prefetch``/``close``), so callers can hold any backend
+    without feature-testing.
+    """
+
+    @property
+    def cache_hits(self) -> int:
+        return self.cache.hits
+
+    def map(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
+        return [self(g) for g in genomes]
+
+    def prefetch(self, genomes: Sequence[KernelGenome]) -> None:
+        """No-op: inline evaluation has no spare capacity to warm with."""
+
+    def close(self) -> None:
+        pass

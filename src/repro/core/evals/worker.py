@@ -1,0 +1,91 @@
+"""The pure, picklable evaluation worker used by the process backend.
+
+Everything here must be importable by a cold interpreter (spawn) or an
+inherited one (fork): module-level functions only, no closures, no state
+beyond the per-process scorer table.  A worker rebuilds its scorer — and the
+RNG-derived correctness proxy inputs — deterministically from the
+:class:`EvalSpec` alone, so the ScoreVectors it returns are bit-identical to
+the inline path (see ``tests/test_evals.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence, Union
+
+from repro.core.evals.scorer import Scorer
+from repro.core.evals.vector import ScoreVector
+from repro.core.perfmodel import BenchConfig, suite_by_name
+from repro.core.search_space import KernelGenome
+
+
+@dataclass(frozen=True)
+class EvalSpec:
+    """Everything a worker needs to rebuild a :class:`Scorer`: the resolved
+    benchmark configs (BenchConfig is a frozen, picklable dataclass), the
+    correctness toggle, and the proxy-input RNG seed."""
+    suite: tuple                  # tuple[BenchConfig, ...]
+    check_correctness: bool = True
+    rng_seed: int = 0
+
+    @classmethod
+    def resolve(cls, suite: Union[str, Sequence[BenchConfig], "EvalSpec", None],
+                check_correctness: bool = True, rng_seed: int = 0) -> "EvalSpec":
+        """Accept a registered suite name ('mha', 'mha+gqa'), an explicit
+        config sequence, an EvalSpec (returned as-is), or None (MHA default)."""
+        if isinstance(suite, EvalSpec):
+            return suite
+        if isinstance(suite, str):
+            cfgs = suite_by_name(suite)
+        elif suite is None:
+            from repro.core.perfmodel import mha_suite
+            cfgs = mha_suite()
+        else:
+            cfgs = list(suite)
+        return cls(tuple(cfgs), check_correctness, rng_seed)
+
+
+# per-process scorer table: one warm Scorer per spec, built on first use
+_WORKER_SCORERS: dict = {}
+
+
+def _scorer_for(spec: EvalSpec) -> Scorer:
+    scorer = _WORKER_SCORERS.get(spec)
+    if scorer is None:
+        scorer = Scorer(suite=list(spec.suite),
+                        check_correctness=spec.check_correctness,
+                        rng_seed=spec.rng_seed)
+        _WORKER_SCORERS[spec] = scorer
+    return scorer
+
+
+def warm_worker(specs: Sequence[EvalSpec]) -> None:
+    """Process-pool initializer: pre-build the scorer (and its jax proxy
+    inputs) for every suite this pool will serve, so the first real
+    evaluation in each worker pays no import/tracing-warmup latency.
+
+    Workers deliberately keep XLA's own intra-op threading: interpret-mode
+    evaluation is a mix of GIL-bound Python tracing (what the process pool
+    parallelizes) and XLA ops that parallelize internally — pinning workers
+    to one core was measured slower, not faster."""
+    for spec in specs:
+        _scorer_for(spec).warm()
+
+
+def evaluate_genome(genome: KernelGenome,
+                    suite: Union[str, EvalSpec],
+                    *, check_correctness: bool = True,
+                    rng_seed: int = 0) -> ScoreVector:
+    """Evaluate one genome on one suite — the process-pool task function.
+
+    ``suite`` is a registered suite name (resolved through the perfmodel
+    scenario registry) or a pre-resolved :class:`EvalSpec` (what the process
+    backend sends, so unregistered ad-hoc suites work too).  Pure: the result
+    depends only on the arguments, never on which process runs it.
+    """
+    spec = EvalSpec.resolve(suite, check_correctness, rng_seed)
+    return _scorer_for(spec).score_uncached(genome)
+
+
+def _prestart_noop() -> None:
+    """Trivial task submitted once per worker to force the pool to fork/spawn
+    its processes immediately (while the parent is still jax-clean)."""

@@ -13,10 +13,10 @@ import os
 import time
 from typing import Optional, Sequence
 
+from repro.core.evals import Scorer, make_backend
 from repro.core.islands import EvolutionReport, Island
 from repro.core.perfmodel import BenchConfig, suite_by_name
 from repro.core.population import Lineage
-from repro.core.scoring import Scorer
 from repro.core.supervisor import Supervisor
 from repro.core.variation import AgenticVariationOperator
 
@@ -28,14 +28,17 @@ class ContinuousEvolution:
                  operator=None, supervisor: Optional[Supervisor] = None,
                  lineage: Optional[Lineage] = None,
                  persist_path: Optional[str] = None,
-                 target_suite: Optional[str] = None):
+                 target_suite: Optional[str] = None,
+                 eval_backend: str = "inline"):
         """``target_suite`` names a scenario suite from the perfmodel registry
-        ('mha', 'gqa', 'decode', or a '+'-union); ignored when an explicit
-        ``scorer`` is given."""
+        ('mha', 'gqa', 'decode', or a '+'-union); ``eval_backend`` selects the
+        evaluation service ('inline' | 'thread' | 'process' — bit-identical,
+        wall-clock only).  Both are ignored when an explicit ``scorer`` is
+        given."""
         if scorer is None:
             suite: Optional[Sequence[BenchConfig]] = \
                 suite_by_name(target_suite) if target_suite else None
-            scorer = Scorer(suite=suite)
+            scorer = make_backend(eval_backend, suite=suite)
         self.island = Island(
             name="main", scorer=scorer,
             operator=operator or AgenticVariationOperator(),
@@ -72,6 +75,12 @@ class ContinuousEvolution:
     def resume(cls, persist_path: str, **kw) -> "ContinuousEvolution":
         lineage = Lineage.load(persist_path) if os.path.exists(persist_path) else None
         return cls(lineage=lineage, persist_path=persist_path, **kw)
+
+    def close(self) -> None:
+        """Release backend resources (worker pools for thread/process)."""
+        closer = getattr(self.island.scorer, "close", None)
+        if closer is not None:
+            closer()
 
     def run(self, max_steps: int = 60, target_commits: Optional[int] = None,
             wall_budget_s: Optional[float] = None, verbose: bool = False

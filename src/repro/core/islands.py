@@ -16,9 +16,15 @@ shapes — see ``perfmodel.suite_by_name``).  Between epochs the engine
   * **persists** the whole archipelago (aggregate JSON + one file per island)
     with atomic replace, so a killed run resumes exactly where it stopped.
 
-Candidate evaluation is batched: all islands on one suite share a
-:class:`BatchScorer` (shared memo cache + ``concurrent.futures`` executor),
-and island epochs themselves run on a thread pool.
+Candidate evaluation goes through the pluggable evaluation service
+(``repro.core.evals``): all islands on one suite share one backend —
+``thread`` (shared memo cache + in-process executor, the default),
+``process`` (one warm worker-process pool shared by every suite, for real
+multi-core scaling of the GIL-bound correctness checks), or ``inline`` —
+and island epochs themselves run on a thread pool.  Backends are
+bit-identical, so the choice changes wall-clock only, never lineages.
+``Archipelago.from_registry()`` auto-scales one specialist island per suite
+registered in ``perfmodel`` (``register_suite``).
 
 Determinism: operators are seeded per island, the Scorer is a deterministic
 function of the genome, and refuted-memory sharing is synchronized at the
@@ -40,10 +46,11 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence, Union
 
+from repro.core.evals import (BatchScorer, EvalSpec, make_backend,
+                              make_process_executor)
 from repro.core.knowledge import KnowledgeBase
-from repro.core.perfmodel import BenchConfig, suite_by_name
+from repro.core.perfmodel import BenchConfig, registered_suites, suite_by_name
 from repro.core.population import Commit, Lineage, atomic_write_json
-from repro.core.scoring import BatchScorer, Scorer
 from repro.core.search_space import KernelGenome, seed_genome
 from repro.core.supervisor import Supervisor
 from repro.core.toolbelt import RefutedMemory, Toolbelt
@@ -277,11 +284,19 @@ class IslandEvolution:
                  max_workers: Optional[int] = None,
                  seed: int = 0,
                  supervisor_patience: int = 3,
-                 prefetch: int = 0):
+                 prefetch: int = 0,
+                 backend: str = "thread",
+                 check_correctness: bool = True):
         """``prefetch`` > 0 speculatively batch-evaluates that many KB
         candidate edits per island step on the scorer executor (cache warming
         only — lineages are identical with or without it, it can only trade
-        extra evaluations for wall-clock overlap)."""
+        extra evaluations for wall-clock overlap).
+
+        ``backend`` selects the evaluation service: 'thread' (shared
+        in-process executor, the default), 'process' (one warm worker-process
+        pool shared by every suite — real multi-core scaling for the
+        GIL-bound correctness checks), or 'inline'.  Backends are
+        bit-identical, so lineages do not depend on the choice."""
         self.specs = list(specs) if specs is not None else \
             default_specs(n_islands, seed=seed)
         if not self.specs:
@@ -301,17 +316,38 @@ class IslandEvolution:
             max_workers=max_workers or min(8, n), thread_name_prefix="island")
         self._scorer_pool = scorer_pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=max_workers or min(8, n), thread_name_prefix="scorer")
+        self._process_pool = None
 
-        # one shared BatchScorer per distinct suite, all on one executor
-        self.scorers: dict[str, BatchScorer] = {}
+        # resolve every distinct suite up front: the process pool must be
+        # warm-initialized with all of them before its workers start
+        suite_cfgs: dict[str, Optional[list]] = {}
+        for spec in self.specs:
+            key = spec.target_suite or "default"
+            if key not in suite_cfgs:
+                suite_cfgs[key] = (suite_by_name(spec.target_suite)
+                                   if spec.target_suite else suite)
 
-        def scorer_for(suite_name: Optional[str]) -> BatchScorer:
-            key = suite_name or "default"
-            if key not in self.scorers:
-                cfgs = suite_by_name(suite_name) if suite_name else suite
-                self.scorers[key] = BatchScorer(Scorer(suite=cfgs),
-                                                executor=scorer_pool)
-            return self.scorers[key]
+        # one shared backend per distinct suite, all on one executor; the
+        # name -> backend dispatch lives in evals.make_backend alone
+        self.backend = backend
+        self.scorers: dict[str, object] = {}
+        eval_specs = {
+            key: EvalSpec.resolve(cfgs, check_correctness=check_correctness)
+            for key, cfgs in suite_cfgs.items()}
+        if backend == "process":
+            self._process_pool = make_process_executor(
+                tuple(eval_specs.values()))
+        for key, espec in eval_specs.items():
+            extra = ({"executor": self._process_pool}
+                     if backend == "process" else
+                     {"executor": scorer_pool} if backend == "thread" else {})
+            sc = make_backend(backend, suite=espec, **extra)
+            if backend == "inline":
+                sc.warm()            # lazy proxy build must not race islands
+            self.scorers[key] = sc
+
+        def scorer_for(suite_name: Optional[str]):
+            return self.scorers[suite_name or "default"]
 
         self.islands: list[Island] = []
         for i, spec in enumerate(self.specs):
@@ -550,6 +586,27 @@ class IslandEvolution:
             engine.load_state(persist_path)
         return engine
 
+    @classmethod
+    def from_registry(cls, suites: Optional[Sequence[str]] = None,
+                      **kw) -> "IslandEvolution":
+        """Auto-scale the archipelago from the scenario registry: one
+        specialist island per registered suite (or per name in ``suites``).
+        Registering a new scenario family (``perfmodel.register_suite``) is
+        all it takes to get a working specialist island — no engine change."""
+        names = tuple(suites) if suites is not None else registered_suites()
+        if not names:
+            raise ValueError("no suites registered")
+        specs = [IslandSpec(name=n, target_suite=n) for n in names]
+        return cls(specs=specs, **kw)
+
     def close(self) -> None:
+        for scorer in self.scorers.values():
+            scorer.close()
         self._pool.shutdown(wait=True, cancel_futures=True)
         self._scorer_pool.shutdown(wait=True, cancel_futures=True)
+        if self._process_pool is not None:
+            self._process_pool.shutdown(wait=True, cancel_futures=True)
+
+
+# the engine's public face in docs/examples: an archipelago of islands
+Archipelago = IslandEvolution

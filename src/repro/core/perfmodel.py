@@ -105,12 +105,52 @@ def decode_suite() -> list[BenchConfig]:
     return out
 
 
-SUITES = {"mha": mha_suite, "gqa": gqa_suite, "decode": decode_suite}
+# ---------------------------------------------------------------------------
+# scenario registry
+# ---------------------------------------------------------------------------
+
+# name -> zero-arg factory returning a list[BenchConfig].  Extend with
+# register_suite(); the island engine auto-scales one specialist island per
+# entry (Archipelago.from_registry), so a new scenario family needs no
+# engine-code change.
+SUITES: dict = {}
+
+
+def register_suite(name: str, factory, *, overwrite: bool = False):
+    """Register a scenario-suite factory under ``name``.
+
+    ``name`` must be a plain identifier-ish token: '+' is the union operator
+    in ``suite_by_name`` and cannot appear in a registered name.  Returns the
+    factory so this can be used as a decorator.
+    """
+    if not name or not name.strip() or "+" in name:
+        raise ValueError(f"invalid suite name {name!r}")
+    if name in SUITES and not overwrite:
+        raise ValueError(f"suite {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    SUITES[name] = factory
+    return factory
+
+
+def unregister_suite(name: str) -> None:
+    """Remove a registered suite (primarily for tests)."""
+    SUITES.pop(name, None)
+
+
+def registered_suites() -> tuple:
+    """The registered scenario-family names, sorted."""
+    return tuple(sorted(SUITES))
+
+
+register_suite("mha", mha_suite)
+register_suite("gqa", gqa_suite)
+register_suite("decode", decode_suite)
 
 
 def suite_by_name(name: str) -> list[BenchConfig]:
-    """Scenario-suite registry: 'mha' | 'gqa' | 'decode', or a '+'-joined
-    union like 'mha+gqa+decode' (the generalist target)."""
+    """Scenario-suite registry lookup: any registered name ('mha' | 'gqa' |
+    'decode' | ...), or a '+'-joined union like 'mha+gqa+decode' (the
+    generalist target)."""
     parts = [p.strip() for p in name.split("+") if p.strip()]
     unknown = [p for p in parts if p not in SUITES]
     if unknown or not parts:
@@ -147,7 +187,9 @@ def useful_flops(cfg: BenchConfig) -> float:
     elif cfg.causal:
         pairs = S * (S + 1) // 2
     elif cfg.window:
-        pairs = sum(min(q + 1, cfg.window) + min(S - 1 - q, 0) for q in range(S))
+        # the mask (ref.py) is k > q - window: backward side capped at the
+        # window, forward side unbounded — count both
+        pairs = sum(min(q + 1, cfg.window) + (S - 1 - q) for q in range(S))
     else:
         pairs = S * S
     return 4.0 * cfg.batch * cfg.n_heads * cfg.head_dim * pairs

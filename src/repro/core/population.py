@@ -18,7 +18,7 @@ import tempfile
 from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.core.scoring import ScoreVector
+from repro.core.evals import ScoreVector
 from repro.core.search_space import KernelGenome
 
 

@@ -1,257 +1,18 @@
-"""The AVO scoring function ``f``.
+"""Compatibility shim — the evaluation stack now lives in ``repro.core.evals``.
 
-``f(x) = (f_1(x), ..., f_n(x))`` — one entry per benchmark configuration
-(paper §3.1).  A candidate failing *numerical correctness* scores zero on
-every configuration regardless of throughput; a candidate that is infeasible
-on a configuration (VMEM overflow — the TPU analogue of a launch failure)
-scores zero on that configuration.
+Import from there in new code:
 
-Correctness is executed for real: the genome is materialized into its Pallas
-kernel and run in ``interpret=True`` mode on CPU against the ``ref.py``
-oracle, on a reduced proxy shape (full 32k shapes are not runnable in the
-interpreter; the kernel's behaviour is shape-generic).  Throughput comes from
-``perfmodel.estimate`` — see that module's docstring for the machine model.
+  from repro.core.evals import Scorer, BatchScorer, make_backend, ...
+
+This module keeps the long-standing names importable for older call sites.
 """
-from __future__ import annotations
+from repro.core.evals import (BACKENDS, BatchScorer, CORRECTNESS_TOL,
+                              EvalBackend, EvalSpec, InlineBackend,
+                              ProcessBackend, ScoreCache, ScoreVector, Scorer,
+                              ThreadBackend, evaluate_genome, make_backend)
 
-import concurrent.futures
-import math
-import threading
-from dataclasses import dataclass, field
-from typing import Optional, Sequence
-
-import numpy as np
-
-from repro.core import perfmodel
-from repro.core.perfmodel import BenchConfig, Profile, estimate, mha_suite
-from repro.core.search_space import KernelGenome
-
-CORRECTNESS_TOL = 2e-5
-
-
-@dataclass
-class ScoreVector:
-    config_names: tuple
-    values: tuple                 # TFLOPS per config (0 = failed/infeasible)
-    correct: bool
-    failure: str = ""
-    profiles: dict = field(default_factory=dict)   # name -> Profile
-
-    @property
-    def geomean(self) -> float:
-        vals = [v for v in self.values]
-        if not vals or any(v <= 0 for v in vals):
-            return 0.0
-        return float(np.exp(np.mean(np.log(vals))))
-
-    def dominant_bottleneck(self) -> str:
-        """Aggregate bottleneck across configs, weighted by modelled time."""
-        agg: dict[str, float] = {}
-        for p in self.profiles.values():
-            if not p.feasible:
-                agg["vmem"] = agg.get("vmem", 0.0) + 1.0
-                continue
-            for term, t in (("mxu", p.t_mxu), ("vpu", p.t_vpu_exposed),
-                            ("dma", p.t_dma_exposed), ("overhead", p.t_overhead),
-                            ("bubble", p.t_bubble)):
-                agg[term] = agg.get(term, 0.0) + t
-        return max(agg, key=agg.get) if agg else "mxu"
-
-
-def _correctness_proxy_shapes(suite: Sequence[BenchConfig]):
-    """Small executable shapes covering the mask/GQA space of the suite."""
-    shapes = []
-    has_gqa = any(c.n_heads != c.n_kv_heads for c in suite)
-    for causal in sorted({c.causal for c in suite}):
-        windows = sorted({c.window for c in suite}, key=lambda w: (w is None, w))
-        for window in windows:
-            w = None if window is None else 48
-            shapes.append(dict(B=1, Hq=4, Hkv=(2 if has_gqa else 4),
-                               S=160, D=64, causal=causal, window=w))
-    return shapes
-
-
-class Scorer:
-    """Callable scoring function with per-genome memoization."""
-
-    def __init__(self, suite: Optional[Sequence[BenchConfig]] = None,
-                 check_correctness: bool = True, rng_seed: int = 0):
-        self.suite = list(suite) if suite is not None else mha_suite()
-        self.check_correctness = check_correctness
-        self._cache: dict[str, ScoreVector] = {}
-        self._rng = np.random.default_rng(rng_seed)
-        self.n_evaluations = 0
-        self._count_lock = threading.Lock()
-        self._proxy_inputs = None
-
-    # -- correctness ----------------------------------------------------------
-    def _proxy_data(self):
-        if self._proxy_inputs is None:
-            import jax.numpy as jnp
-            shapes = _correctness_proxy_shapes(self.suite)
-            data = []
-            for sh in shapes:
-                q = jnp.asarray(self._rng.normal(size=(sh["B"], sh["Hq"], sh["S"], sh["D"])),
-                                jnp.float32)
-                k = jnp.asarray(self._rng.normal(size=(sh["B"], sh["Hkv"], sh["S"], sh["D"])),
-                                jnp.float32)
-                v = jnp.asarray(self._rng.normal(size=(sh["B"], sh["Hkv"], sh["S"], sh["D"])),
-                                jnp.float32)
-                data.append((sh, q, k, v))
-            self._proxy_inputs = data
-        return self._proxy_inputs
-
-    def check(self, genome: KernelGenome) -> tuple[bool, str]:
-        """Execute the genome's kernel (interpret mode) against the oracle."""
-        import jax.numpy as jnp
-        from repro.kernels.flash_attention import flash_attention
-        from repro.kernels.ref import mha_reference
-        kw = genome.kernel_kwargs()
-        # proxy shapes are small; scale blocks down proportionally so the
-        # structural path (grid/loop/skip/branch) is still exercised
-        kw["block_q"] = max(16, min(kw["block_q"], 2048) // 16)
-        kw["block_k"] = max(16, min(kw["block_k"], 2048) // 16)
-        for sh, q, k, v in self._proxy_data():
-            try:
-                o = flash_attention(q, k, v, causal=sh["causal"], window=sh["window"],
-                                    interpret=True, **kw)
-            except Exception as e:  # trace/lowering failure
-                return False, f"kernel raised: {type(e).__name__}: {e}"
-            r = mha_reference(q, k, v, causal=sh["causal"], window=sh["window"])
-            err = float(jnp.max(jnp.abs(o - r)))
-            if not math.isfinite(err) or err > CORRECTNESS_TOL:
-                return False, (f"numerical mismatch vs oracle: max|err|={err:.2e} "
-                               f"on {sh}")
-        return True, ""
-
-    # -- scoring ----------------------------------------------------------------
-    def __call__(self, genome: KernelGenome) -> ScoreVector:
-        key = genome.key()
-        if key in self._cache:
-            return self._cache[key]
-        sv = self._score_uncached(genome)
-        self._cache[key] = sv
-        return sv
-
-    def _score_uncached(self, genome: KernelGenome) -> ScoreVector:
-        """Pay the full evaluation cost, bypassing the memo cache (BatchScorer
-        manages the cache itself and calls this directly)."""
-        with self._count_lock:       # BatchScorer calls this from many threads
-            self.n_evaluations += 1
-
-        if self.check_correctness:
-            ok, why = self.check(genome)
-            if not ok:
-                return ScoreVector(tuple(c.name for c in self.suite),
-                                   tuple(0.0 for _ in self.suite), False, why)
-
-        values, profiles = [], {}
-        for cfg in self.suite:
-            p = estimate(genome, cfg)
-            profiles[cfg.name] = p
-            values.append(p.tflops if p.feasible else 0.0)
-        failure = ""
-        if any(v == 0.0 for v in values):
-            bad = [c.name for c, v in zip(self.suite, values) if v == 0.0]
-            failure = "infeasible on: " + ", ".join(
-                f"{n} ({profiles[n].infeasible_reason})" for n in bad)
-        return ScoreVector(tuple(c.name for c in self.suite), tuple(values),
-                           True, failure, profiles)
-
-    def baselines(self) -> dict:
-        """Expert (cuDNN-analogue) and FA-reference scores on this suite."""
-        return {
-            "expert": tuple(perfmodel.expert_reference(c) for c in self.suite),
-            "fa_reference": tuple(perfmodel.fa_reference(c) for c in self.suite),
-        }
-
-
-class BatchScorer:
-    """Thread-safe wrapper around a :class:`Scorer` with a shared memo cache
-    and batched candidate evaluation on a ``concurrent.futures`` executor.
-
-    Several islands share one BatchScorer per benchmark suite, so an edit one
-    island has already paid to evaluate (or falsify) is a cache hit everywhere
-    else.  Results are bit-identical to the wrapped Scorer — the Scorer is a
-    deterministic function of the genome — so sharing only changes wall-clock
-    and evaluation counts, never search behaviour.
-
-    Concurrency contract: concurrent calls for the *same* genome collapse into
-    one evaluation (in-flight keys carry an event other callers wait on);
-    concurrent calls for different genomes run in parallel.
-    """
-
-    def __init__(self, base: Optional[Scorer] = None, *,
-                 suite: Optional[Sequence[BenchConfig]] = None,
-                 max_workers: Optional[int] = None,
-                 executor: Optional[concurrent.futures.Executor] = None):
-        self.base = base if base is not None else Scorer(suite=suite)
-        self._lock = threading.Lock()
-        self._inflight: dict[str, threading.Event] = {}
-        self.cache_hits = 0
-        self._own_executor = executor is None
-        self._executor = executor or concurrent.futures.ThreadPoolExecutor(
-            max_workers=max_workers or 4, thread_name_prefix="batch-scorer")
-        if self.base.check_correctness:
-            # build the RNG-derived proxy inputs eagerly: the lazy build
-            # mutates the scorer's RNG and must not race across threads
-            self.base._proxy_data()
-
-    # -- delegation --------------------------------------------------------------
-    @property
-    def suite(self):
-        return self.base.suite
-
-    @property
-    def n_evaluations(self) -> int:
-        return self.base.n_evaluations
-
-    def baselines(self) -> dict:
-        return self.base.baselines()
-
-    # -- thread-safe scoring -----------------------------------------------------
-    def __call__(self, genome: KernelGenome) -> ScoreVector:
-        key = genome.key()
-        while True:
-            with self._lock:
-                sv = self.base._cache.get(key)
-                if sv is not None:
-                    self.cache_hits += 1
-                    return sv
-                event = self._inflight.get(key)
-                if event is None:
-                    self._inflight[key] = event = threading.Event()
-                    owner = True
-                else:
-                    owner = False
-            if not owner:
-                event.wait()
-                continue               # re-read the cache (or retry on error)
-            try:
-                sv = self.base._score_uncached(genome)
-                with self._lock:
-                    self.base._cache[key] = sv
-                return sv
-            finally:
-                with self._lock:
-                    del self._inflight[key]
-                event.set()
-
-    def map(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
-        """Evaluate a batch concurrently; order-preserving, duplicates collapse
-        onto one evaluation."""
-        unique: dict[str, KernelGenome] = {}
-        for g in genomes:
-            unique.setdefault(g.key(), g)
-        futures = {k: self._executor.submit(self, g) for k, g in unique.items()}
-        return [futures[g.key()].result() for g in genomes]
-
-    def prefetch(self, genomes: Sequence[KernelGenome]) -> None:
-        """Fire-and-forget cache warming for speculative candidates."""
-        for g in genomes:
-            if g.key() not in self.base._cache:
-                self._executor.submit(self, g)
-
-    def close(self) -> None:
-        if self._own_executor:
-            self._executor.shutdown(wait=True, cancel_futures=True)
+__all__ = [
+    "BACKENDS", "BatchScorer", "CORRECTNESS_TOL", "EvalBackend", "EvalSpec",
+    "InlineBackend", "ProcessBackend", "ScoreCache", "ScoreVector", "Scorer",
+    "ThreadBackend", "evaluate_genome", "make_backend",
+]

@@ -14,9 +14,9 @@ import threading
 from dataclasses import dataclass, field
 from typing import Iterable, Optional, Sequence
 
+from repro.core.evals import Scorer, ScoreVector
 from repro.core.knowledge import KnowledgeBase
 from repro.core.population import Lineage
-from repro.core.scoring import Scorer, ScoreVector
 from repro.core.search_space import KernelGenome
 
 
@@ -95,7 +95,9 @@ class Toolbelt:
 
     def evaluate_many(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
         """Batched evaluation: one call, many candidates.  Dispatches to the
-        scorer's executor-backed ``map`` when available (BatchScorer)."""
+        selected evaluation backend's ``map`` when available (thread and
+        process backends run the batch on their executors; inline falls back
+        to a serial loop)."""
         self.calls.append(ToolCall("evaluate_many", f"n={len(genomes)}"))
         self.n_evaluate_calls += len(genomes)
         if hasattr(self.scorer, "map"):

@@ -91,6 +91,31 @@ def test_window_reduces_useful_flops():
     assert useful_flops(w) < useful_flops(CFG)
 
 
+def test_useful_flops_noncausal_window_counts_forward_side():
+    """Regression: the non-causal sliding-window mask (ref.py: k > q - w)
+    caps only the backward side; the forward side — previously dropped by a
+    `min(S - 1 - q, 0)` term that is never positive — must be counted."""
+    S, w = 512, 64
+    cfg = BenchConfig("w", 1, 4, 4, S, head_dim=64, causal=False, window=w)
+    pairs = sum(1 for q in range(S) for k in range(S) if k > q - w)
+    assert useful_flops(cfg) == 4.0 * cfg.batch * cfg.n_heads * cfg.head_dim * pairs
+    # strictly more pairs than the causal window (forward side included) and
+    # strictly fewer than dense non-causal (backward side still capped)
+    causal = BenchConfig("c", 1, 4, 4, S, head_dim=64, causal=True, window=w)
+    dense = BenchConfig("d", 1, 4, 4, S, head_dim=64, causal=False)
+    assert useful_flops(causal) < useful_flops(cfg) < useful_flops(dense)
+
+
+def test_noncausal_window_profile_stays_physical():
+    """The machine model visits the full forward side for a non-causal
+    window, so the fixed FLOP count must still sit under the roofline."""
+    cfg = BenchConfig("w", 4, 16, 16, 8192, causal=False, window=1024)
+    p = estimate(EXPERT_GENOME, cfg)
+    assert p.feasible
+    assert p.tflops * 1e12 <= PEAK_FLOPS * 1.0001
+    assert p.fraction_of_roofline <= 1.0001
+
+
 def test_suites_match_paper():
     mha = mha_suite()
     assert len(mha) == 8                        # 4 seq lens x {causal, non}
