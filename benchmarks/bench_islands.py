@@ -1,5 +1,6 @@
-"""Island-model engine vs the serial loop: scenario-sweep wall-clock race,
-plus the evaluation-backend race (thread vs process on a cold batch).
+"""Island-model engine vs the serial loop: scenario-sweep wall-clock race
+across migration topologies, plus the evaluation-backend race (thread vs
+process on a cold batch).
 
 The workload is the full scenario family — MHA, GQA, and decode shapes
 (30 benchmark configs).  Two ways to cover it:
@@ -9,22 +10,25 @@ The workload is the full scenario family — MHA, GQA, and decode shapes
   islands   4 specialist islands (mha / gqa / decode / mha-explorer), each
             evolving against its own cheap sub-suite, with cross-suite
             migration (the paper's §4.3 transfer) and a shared refuted-edit
-            memory + scorer cache.
+            memory + scorer cache.  One island run per topology in
+            ``--topologies`` (ring / star / all-to-all / adaptive).
 
 The *coverage geomean* — geomean over all 30 configs of the throughput the
 system currently achieves on each (serial: its best genome; islands: each
 config under the best island targeting that config's suite) — is the
 running-best score.  The race: wall-clock seconds until the coverage reaches
-the serial run's own final coverage.  Also reports commits/sec, evaluation
-counts, cache sharing, and checks killed-run resume identity.
+the serial run's own final coverage, per topology.  Also reports commits/sec,
+evaluation counts, cache sharing, and gates killed-run resume identity and
+the topology-state round-trip for every raced topology.  A JSON summary
+(results/bench/islands.json) is written for CI artifact upload.
 
   PYTHONPATH=src python benchmarks/bench_islands.py
   PYTHONPATH=src python benchmarks/bench_islands.py --steps 48 --islands 4
+  PYTHONPATH=src python benchmarks/bench_islands.py --topologies ring,adaptive
 """
 from __future__ import annotations
 
 import argparse
-import math
 import os
 import sys
 import tempfile
@@ -33,19 +37,13 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
 
-from common import chart, emit  # noqa: E402
+from common import chart, emit, emit_json, geomean  # noqa: E402
 
 from repro.core import (ContinuousEvolution, IslandEvolution, KernelGenome,
-                        Scorer, make_backend, scenario_specs,
-                        suite_by_name)  # noqa: E402
+                        Scorer, make_backend, scenario_specs, suite_by_name,
+                        topology_names)  # noqa: E402
 
 UNION = "mha+gqa+decode"
-
-
-def geomean(vals):
-    if not vals or any(v <= 0 for v in vals):
-        return 0.0
-    return math.exp(sum(math.log(v) for v in vals) / len(vals))
 
 
 def cold_candidates(n):
@@ -138,11 +136,11 @@ def run_serial(steps: int):
 
 
 def run_islands(steps_per_island: int, n_islands: int, seed: int,
-                wall_budget_s=None, persist_path=None):
+                wall_budget_s=None, persist_path=None, topology="ring"):
     """Specialist islands; coverage reconstructed from the commit-event log."""
     specs = scenario_specs()[:n_islands]
     eng = IslandEvolution(specs=specs, migration_interval=2, seed=seed,
-                          persist_path=persist_path)
+                          persist_path=persist_path, topology=topology)
     suite_of = {isl.name: tuple(c.name for c in isl.scorer.suite)
                 for isl in eng.islands}
     t0 = time.perf_counter()
@@ -181,23 +179,59 @@ def time_to(timeline, target):
     return None
 
 
-def check_resume_identity(seed: int) -> bool:
-    """Kill-and-resume: persisted state must reproduce lineages exactly."""
+def check_resume_identity(seed: int, topology: str = "ring") -> bool:
+    """Kill-and-resume: persisted state must reproduce lineages, migration
+    stats, and the topology's own decision state exactly."""
     with tempfile.TemporaryDirectory() as d:
         p = os.path.join(d, "arch.json")
         eng = IslandEvolution(specs=scenario_specs(), migration_interval=2,
-                              seed=seed, persist_path=p)
+                              seed=seed, persist_path=p, topology=topology)
         eng.run(max_steps=4)
         fp = {i.name: [(c.genome.key(), c.geomean, c.note)
                        for c in i.lineage.commits] for i in eng.islands}
+        stats, topo_state = eng.migration_stats.to_payload(), eng.topology.state()
         eng.close()                                    # "kill"
         resumed = IslandEvolution.resume(p, specs=scenario_specs(),
-                                         migration_interval=2, seed=seed)
+                                         migration_interval=2, seed=seed,
+                                         topology=topology)
         ok = all([(c.genome.key(), c.geomean, c.note)
                   for c in i.lineage.commits] == fp[i.name]
                  for i in resumed.islands)
+        ok = ok and resumed.migration_stats.to_payload() == stats
+        ok = ok and resumed.topology.state() == topo_state
         resumed.close()
         return ok
+
+
+def check_topology_continuation(seed: int, topology: str,
+                                total_steps: int = 8) -> bool:
+    """The hard resume gate: a run killed mid-way and resumed must make the
+    SAME migration decisions, step for step, as an uninterrupted run."""
+    kw = dict(specs=scenario_specs(), migration_interval=2, seed=seed,
+              topology=topology)
+    half = total_steps // 2
+
+    def fingerprint(eng):
+        return ({i.name: [(c.genome.key(), c.geomean, c.note)
+                          for c in i.lineage.commits] for i in eng.islands},
+                eng.migration_stats.to_payload(), eng.topology.state(),
+                eng.migrations_accepted)
+
+    with tempfile.TemporaryDirectory() as d:
+        a = IslandEvolution(persist_path=os.path.join(d, "a.json"), **kw)
+        a.run(max_steps=total_steps)
+        uninterrupted = fingerprint(a)
+        a.close()
+
+        pb = os.path.join(d, "b.json")
+        b1 = IslandEvolution(persist_path=pb, **kw)
+        b1.run(max_steps=half)
+        b1.close()                                     # "kill" mid-run
+        b2 = IslandEvolution.resume(pb, **kw)
+        b2.run(max_steps=total_steps - half)
+        resumed = fingerprint(b2)
+        b2.close()
+    return uninterrupted == resumed
 
 
 def main(argv=None):
@@ -208,16 +242,25 @@ def main(argv=None):
                     help="3 = one specialist per suite, 4 = + mha explorer "
                          "(the scenario preset defines exactly 4 islands)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--topologies", default="ring,star,adaptive",
+                    help="comma-separated migration topologies to race "
+                         f"(known: {', '.join(topology_names())})")
     ap.add_argument("--cold-batch", type=int, default=48,
                     help="candidates in the thread-vs-process backend race "
                          "(0 skips the race; >=32 for a meaningful read — "
                          "per-worker warmup amortizes with batch size)")
     ap.add_argument("--gate", choices=("all", "deterministic"), default="all",
                     help="what the exit code enforces: 'deterministic' gates "
-                         "only resume identity + backend bit-identity; 'all' "
-                         "adds the islands-beat-serial wall-clock race "
+                         "resume identity, exact resumed-vs-uninterrupted "
+                         "migration decisions, topology-state round-trips, "
+                         "and backend bit-identity; 'all' adds the "
+                         "islands-beat-serial wall-clock race "
                          "(contention-sensitive on shared runners)")
     args = ap.parse_args(argv)
+    topologies = [t.strip() for t in args.topologies.split(",") if t.strip()]
+    unknown = [t for t in topologies if t not in topology_names()]
+    if unknown:
+        ap.error(f"unknown topologies {unknown}; known: {topology_names()}")
 
     race = None
     if args.cold_batch:
@@ -234,48 +277,74 @@ def main(argv=None):
     print(f"serial: coverage {target:.1f} TFLOPS reached at t={t_serial:.1f}s "
           f"(total wall {serial['wall']:.1f}s, {serial['evaluations']} evals)")
 
-    # same budget: the islands get the wall-clock the serial run consumed
-    # (and never more steps per island than the serial lineage got in total)
-    print(f"\n== {args.islands} specialist islands, wall budget "
-          f"{serial['wall']:.0f}s (= serial), <= {args.steps} steps each ==")
-    isl = run_islands(args.steps, args.islands, args.seed,
-                      wall_budget_s=serial["wall"])
-    t_isl = time_to(isl["timeline"], target)
-    rep = isl["report"]
-    reached = f"{t_isl:.1f}s" if t_isl is not None else "never"
-    print(f"islands: target coverage {target:.1f} reached at t={reached} "
-          f"(total wall {isl['wall']:.1f}s, final coverage "
-          f"{isl['final_coverage']:.1f}, {rep.evaluations} evals, "
-          f"{rep.cache_hits} cache hits, "
-          f"{rep.migrations_accepted} migrations)")
-
-    rows = [["serial", f"{target:.2f}", f"{t_serial:.2f}",
+    # same budget per topology: each island run gets the wall-clock the
+    # serial run consumed (and never more steps per island than the serial
+    # lineage got in total)
+    rows = [["serial", "-", f"{target:.2f}", f"{t_serial:.2f}",
              f"{serial['wall']:.2f}", serial["commits"],
              f"{serial['commits'] / serial['wall']:.3f}",
-             serial["evaluations"], 0],
-            ["islands", f"{isl['final_coverage']:.2f}",
-             f"{t_isl:.2f}" if t_isl is not None else "",
-             f"{isl['wall']:.2f}", isl["commits"],
-             f"{isl['commits'] / isl['wall']:.3f}",
-             rep.evaluations, rep.cache_hits]]
-    emit("islands", ["engine", "final_coverage_tflops", "time_to_target_s",
-                     "wall_s", "commits", "commits_per_s", "evaluations",
-                     "cache_hits"], rows)
+             serial["evaluations"], 0, 0]]
+    by_topology = {}
+    for topo in topologies:
+        print(f"\n== {args.islands} specialist islands, topology '{topo}', "
+              f"wall budget {serial['wall']:.0f}s (= serial), "
+              f"<= {args.steps} steps each ==")
+        isl = run_islands(args.steps, args.islands, args.seed,
+                          wall_budget_s=serial["wall"], topology=topo)
+        t_isl = time_to(isl["timeline"], target)
+        rep = isl["report"]
+        reached = f"{t_isl:.1f}s" if t_isl is not None else "never"
+        print(f"islands[{topo}]: target coverage {target:.1f} reached at "
+              f"t={reached} (total wall {isl['wall']:.1f}s, final coverage "
+              f"{isl['final_coverage']:.1f}, {rep.evaluations} evals, "
+              f"{rep.cache_hits} cache hits, "
+              f"{rep.migrations_accepted} migrations)")
+        rows.append([f"islands-{topo}", topo, f"{isl['final_coverage']:.2f}",
+                     f"{t_isl:.2f}" if t_isl is not None else "",
+                     f"{isl['wall']:.2f}", isl["commits"],
+                     f"{isl['commits'] / isl['wall']:.3f}",
+                     rep.evaluations, rep.cache_hits,
+                     rep.migrations_accepted])
+        by_topology[topo] = dict(
+            time_to_target_s=t_isl, wall_s=isl["wall"],
+            final_coverage=isl["final_coverage"], commits=isl["commits"],
+            evaluations=rep.evaluations, cache_hits=rep.cache_hits,
+            migrations_accepted=rep.migrations_accepted,
+            migration_stats=isl["engine"].migration_stats.to_payload(),
+            topology_state=isl["engine"].topology.state())
+        isl["engine"].close()
 
-    chart("time to serial-final coverage (s, lower is better)",
-          [("serial", t_serial),
-           ("islands", t_isl if t_isl is not None else 0.0)])
-    chart("commits per second",
-          [("serial", serial["commits"] / serial["wall"]),
-           ("islands", isl["commits"] / isl["wall"])])
+    emit("islands", ["engine", "topology", "final_coverage_tflops",
+                     "time_to_target_s", "wall_s", "commits", "commits_per_s",
+                     "evaluations", "cache_hits", "migrations"], rows)
+    chart("time to serial-final coverage (s, lower is better; "
+          "never-reached omitted)",
+          [("serial", t_serial)] +
+          [(t, by_topology[t]["time_to_target_s"]) for t in topologies
+           if by_topology[t]["time_to_target_s"] is not None])
 
-    resume_ok = check_resume_identity(args.seed)
-    print(f"killed-run resume identity: {'OK' if resume_ok else 'FAILED'}")
+    # deterministic gates, per topology: killed-run resume identity AND the
+    # stronger continuation property (resumed migration decisions == an
+    # uninterrupted run's, step for step), both asserting the topology-state
+    # + migration-stats round-trip
+    resume_ok, continuation_ok = {}, {}
+    for topo in topologies:
+        resume_ok[topo] = check_resume_identity(args.seed, topo)
+        continuation_ok[topo] = check_topology_continuation(args.seed, topo)
+        print(f"[{topo}] killed-run resume identity: "
+              f"{'OK' if resume_ok[topo] else 'FAILED'}; "
+              f"resumed-vs-uninterrupted migration decisions: "
+              f"{'OK' if continuation_ok[topo] else 'FAILED'}")
 
-    if t_isl is not None and t_isl < t_serial:
-        print(f"\nSPEEDUP: islands reached coverage {target:.1f} in "
-              f"{t_isl:.1f}s vs serial {t_serial:.1f}s "
-              f"({t_serial / t_isl:.2f}x)")
+    t_best, best_topo = None, None
+    for topo in topologies:
+        t = by_topology[topo]["time_to_target_s"]
+        if t is not None and (t_best is None or t < t_best):
+            t_best, best_topo = t, topo
+    if t_best is not None and t_best < t_serial:
+        print(f"\nSPEEDUP: '{best_topo}' islands reached coverage "
+              f"{target:.1f} in {t_best:.1f}s vs serial {t_serial:.1f}s "
+              f"({t_serial / t_best:.2f}x)")
     else:
         print("\nNO SPEEDUP on this run/host")
     if race is not None:
@@ -283,14 +352,27 @@ def main(argv=None):
             "BELOW TARGET"
         print(f"EVAL-BACKEND SPEEDUP: process {race['speedup']:.2f}x over "
               f"thread on the cold batch [{verdict}]")
-    isl["engine"].close()
-    # deterministic gates: resume identity + backend bit-identity.  The
-    # wall-clock races (islands-beat-serial, >=1.3x backend ratio) are
-    # host-contention-sensitive; only the former is gated, and only under
-    # --gate all (the local default — CI smoke uses --gate deterministic)
-    ok = resume_ok and (race is None or race["identical"])
+
+    ok = all(resume_ok.values()) and all(continuation_ok.values()) \
+        and (race is None or race["identical"])
     if args.gate == "all":
-        ok = ok and t_isl is not None and t_isl < t_serial
+        # the wall-clock races are host-contention-sensitive; gated only
+        # under --gate all (the local default — CI uses --gate deterministic)
+        ok = ok and t_best is not None and t_best < t_serial
+    emit_json("islands", {
+        "serial": {"final_coverage": target, "time_to_target_s": t_serial,
+                   "wall_s": serial["wall"], "commits": serial["commits"],
+                   "evaluations": serial["evaluations"]},
+        "topologies": by_topology,
+        "gates": {"resume_identity": resume_ok,
+                  "migration_continuation": continuation_ok,
+                  "backend_bit_identical":
+                      None if race is None else race["identical"],
+                  "gate_mode": args.gate, "passed": ok},
+        "backend_race": None if race is None else
+            {k: race[k] for k in ("speedup", "identical",
+                                  "t_thread", "t_proc")},
+    })
     return 0 if ok else 1
 
 

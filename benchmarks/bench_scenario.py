@@ -1,0 +1,68 @@
+"""Generic per-suite scenario benchmark.
+
+``benchmarks/run.py`` derives its scenario sections from the perfmodel suite
+registry; suites with a dedicated ``benchmarks.bench_<name>`` module (mha,
+gqa) keep their paper-figure benches, and every OTHER registered suite runs
+through this generic harness: a short continuous-evolution run against the
+suite, reported as running-best geomean vs the expert/FA reference lines.
+Registering a suite (``perfmodel.register_suite``) is all it takes to get a
+benchmark section — the same zero-config story as the island engine's
+``Archipelago.from_registry``.
+
+  PYTHONPATH=src python benchmarks/bench_scenario.py --suite decode
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import chart, emit, geomean  # noqa: E402
+
+from repro.core import ContinuousEvolution, registered_suites  # noqa: E402
+from repro.core.perfmodel import (expert_reference, fa_reference,
+                                  suite_by_name)  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", required=True,
+                    help=f"registered suite name ({', '.join(registered_suites())} "
+                         "or a '+'-union)")
+    ap.add_argument("--commits", type=int, default=8)
+    ap.add_argument("--max-steps", type=int, default=24)
+    args = ap.parse_args(argv)
+
+    suite = suite_by_name(args.suite)
+    exp = geomean([expert_reference(c) for c in suite])
+    fa = geomean([fa_reference(c) for c in suite])
+    print(f"suite '{args.suite}': {len(suite)} configs "
+          f"(expert line {exp:.1f}, FA line {fa:.1f} TFLOPS)")
+
+    evo = ContinuousEvolution(target_suite=args.suite)
+    rep = evo.run(max_steps=args.max_steps, target_commits=args.commits)
+    traj = evo.lineage.trajectory()
+    evo.close()
+    if not traj["running_best"]:
+        print("no commits — seed genome failed on this suite")
+        return 1
+    v0, vb = traj["running_best"][0], traj["running_best"][-1]
+    print(f"running-best geomean: {v0:.1f} -> {vb:.1f} TFLOPS over "
+          f"{rep.commits} commits ({rep.internal_attempts} internal attempts)")
+
+    emit(f"scenario_{args.suite}",
+         ["suite", "configs", "seed_geomean", "best_geomean",
+          "expert_ref", "fa_ref", "commits", "internal_attempts"],
+         [[args.suite, len(suite), f"{v0:.2f}", f"{vb:.2f}",
+           f"{exp:.2f}", f"{fa:.2f}", rep.commits, rep.internal_attempts]])
+    chart(f"'{args.suite}' geomean TFLOPS (higher is better)",
+          [("seed x0", v0), ("evolved best", vb),
+           ("expert reference", exp), ("FA reference", fa)])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,10 +1,10 @@
-"""Shared benchmark plumbing: CSV emission + tiny ASCII charts."""
+"""Shared benchmark plumbing: CSV/JSON emission + tiny ASCII charts."""
 from __future__ import annotations
 
 import csv
 import io
+import json
 import os
-import sys
 import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
@@ -24,6 +24,24 @@ def emit(name: str, header: list[str], rows: list[list]) -> None:
     print(f"--- {name} ---")
     print(buf.getvalue().rstrip())
     print()
+
+
+def geomean(vals) -> float:
+    """Zero-guarded geometric mean (0.0 on empty or non-positive input)."""
+    import math
+    if not vals or any(v <= 0 for v in vals):
+        return 0.0
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def emit_json(name: str, payload: dict) -> str:
+    """Machine-readable result summary (CI uploads these as artifacts)."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"[json -> {os.path.relpath(path)}]")
+    return path
 
 
 def bar(value: float, vmax: float, width: int = 42) -> str:

@@ -3,69 +3,107 @@
   python -m benchmarks.run              # everything (CSV under results/bench)
   python -m benchmarks.run --only mha   # one section
 
-Sections:
-  mha         Fig. 3  — MHA throughput vs expert/FA references (+ App. A)
-  gqa         Fig. 4  — GQA transfer after autonomous adaptation
+Scenario sections are DERIVED from the perfmodel suite registry
+(``registered_suites()``): a suite with a dedicated ``bench_<name>`` module
+(mha — Fig. 3, gqa — Fig. 4) runs that module; any other registered suite
+(decode, plus anything added via ``register_suite``) runs the generic
+per-suite harness (``bench_scenario``).  ``--only`` choices stay in sync
+with the registry automatically.
+
+Analysis sections (fixed):
   trajectory  Fig. 5/6 — evolution trajectory, running-best geomean
   ablation    Table 1 — the three representative optimizations
   operators   Fig. 1  — AVO vs fixed-pipeline variation operators
-  islands     (ours)  — island-model engine vs serial loop, scenario sweep,
-                        + thread-vs-process eval-backend race
+  islands     (ours)  — island engine vs serial loop across migration
+                        topologies, + thread-vs-process eval-backend race
   roofline    (brief) — dry-run roofline table, if results/dryrun exists
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import importlib
+import importlib.util
 import time
 
-SECTIONS = ["mha", "gqa", "trajectory", "ablation", "operators", "islands",
-            "roofline"]
+from repro.core.perfmodel import registered_suites
+
+# per-suite extra argv for the dedicated scenario bench modules
+SCENARIO_ARGS = {
+    "mha": lambda fast: ["--published-baselines"],
+    "gqa": lambda fast: ["--adapt-steps", "3" if fast else "6"],
+}
+
+ANALYSIS_SECTIONS = ("trajectory", "ablation", "operators", "islands",
+                     "roofline")
+
+
+def scenario_sections() -> tuple[str, ...]:
+    """One section per registered suite, in registry order."""
+    return registered_suites()
+
+
+def section_names() -> tuple[str, ...]:
+    return scenario_sections() + ANALYSIS_SECTIONS
+
+
+def run_scenario(name: str, args) -> int:
+    """Dedicated bench module when one exists, generic harness otherwise."""
+    if importlib.util.find_spec(f"benchmarks.bench_{name}") is not None:
+        mod = importlib.import_module(f"benchmarks.bench_{name}")
+        extra = SCENARIO_ARGS.get(name, lambda fast: [])(args.fast)
+        return mod.main(extra)
+    from benchmarks import bench_scenario
+    return bench_scenario.main(
+        ["--suite", name, "--commits", "4" if args.fast else "8"])
+
+
+def run_analysis(name: str, args) -> int:
+    if name == "trajectory":
+        from benchmarks import bench_trajectory
+        return bench_trajectory.main(["--commits", "6" if args.fast else "12"])
+    if name == "ablation":
+        from benchmarks import bench_ablation
+        return bench_ablation.main([])
+    if name == "operators":
+        from benchmarks import bench_operators
+        return bench_operators.main(["--budget", "30" if args.fast else "60"])
+    if name == "islands":
+        from benchmarks import bench_islands
+        argv = ["--steps", "24" if args.fast else "40",
+                "--cold-batch", "8" if args.fast else "48"]
+        if args.fast:
+            argv += ["--gate", "deterministic"]
+        if args.topologies:
+            argv += ["--topologies", args.topologies]
+        return bench_islands.main(argv)
+    if name == "roofline":
+        from repro.launch import roofline
+        try:
+            return roofline.main([])
+        except FileNotFoundError as e:
+            print(f"[skipped: {e}]")   # needs results/dryrun to exist
+        return 0
+    raise ValueError(f"unknown section {name!r}")
 
 
 def main() -> int:
+    sections = section_names()
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=SECTIONS, default=None)
+    ap.add_argument("--only", choices=sections, default=None)
     ap.add_argument("--fast", action="store_true",
                     help="smaller budgets (CI-scale)")
+    ap.add_argument("--topologies", default=None,
+                    help="migration topologies for the islands section "
+                         "(comma-separated; default: the bench's own)")
     args = ap.parse_args()
-    todo = [args.only] if args.only else SECTIONS
+    todo = [args.only] if args.only else list(sections)
 
     t0 = time.time()
     failed = []
     for name in todo:
         print(f"\n================ {name} ================", flush=True)
-        rc = None
-        if name == "mha":
-            from benchmarks import bench_mha
-            rc = bench_mha.main(["--published-baselines"])
-        elif name == "gqa":
-            from benchmarks import bench_gqa
-            rc = bench_gqa.main(["--adapt-steps", "3" if args.fast else "6"])
-        elif name == "trajectory":
-            from benchmarks import bench_trajectory
-            rc = bench_trajectory.main(
-                ["--commits", "6" if args.fast else "12"])
-        elif name == "ablation":
-            from benchmarks import bench_ablation
-            rc = bench_ablation.main([])
-        elif name == "operators":
-            from benchmarks import bench_operators
-            rc = bench_operators.main(
-                ["--budget", "30" if args.fast else "60"])
-        elif name == "islands":
-            from benchmarks import bench_islands
-            rc = bench_islands.main(
-                ["--steps", "24" if args.fast else "40",
-                 "--cold-batch", "8" if args.fast else "48"]
-                + (["--gate", "deterministic"] if args.fast else []))
-        elif name == "roofline":
-            from repro.launch import roofline
-            try:
-                rc = roofline.main([])
-            except FileNotFoundError as e:
-                print(f"[skipped: {e}]")   # needs results/dryrun to exist
-        if rc:                             # sections gate by returning nonzero
+        runner = run_scenario if name in scenario_sections() else run_analysis
+        if runner(name, args):         # sections gate by returning nonzero
             failed.append(name)
     print(f"\nall sections done in {time.time() - t0:.0f}s"
           + (f"; FAILED: {', '.join(failed)}" if failed else ""))

@@ -11,6 +11,7 @@ Island-model parallel (N concurrent lineages, migration, shared memory):
   PYTHONPATH=src python examples/evolve_attention.py --islands 4
   PYTHONPATH=src python examples/evolve_attention.py --islands 4 --scenario-sweep
   PYTHONPATH=src python examples/evolve_attention.py --islands 4 --eval-backend process
+  PYTHONPATH=src python examples/evolve_attention.py --islands 4 --topology adaptive
 """
 import argparse
 import os
@@ -19,7 +20,7 @@ import numpy as np
 
 from repro.core import (AgenticVariationOperator, ContinuousEvolution,
                         IslandEvolution, ScriptedAgent, make_backend,
-                        scenario_specs)
+                        scenario_specs, topology_names)
 from repro.core.perfmodel import expert_reference, fa_reference, gqa_suite, mha_suite
 from repro.core.population import Lineage
 
@@ -64,16 +65,20 @@ def run_islands(args):
         engine = IslandEvolution.resume(path, specs=scenario_specs(),
                                         seed=args.seed,
                                         prefetch=args.prefetch,
-                                        backend=args.eval_backend)
+                                        backend=args.eval_backend,
+                                        topology=args.topology)
         print("scenario-sweep: islands "
-              + ", ".join(i.name for i in engine.islands))
+              + ", ".join(i.name for i in engine.islands)
+              + f"  (topology: {args.topology})")
     else:
         path = os.path.join(OUT, "archipelago.json")
         engine = IslandEvolution.resume(path, n_islands=args.islands,
                                         suite=mha_suite(), seed=args.seed,
                                         prefetch=args.prefetch,
-                                        backend=args.eval_backend)
-        print(f"{args.islands} islands on the MHA suite, diverse inits")
+                                        backend=args.eval_backend,
+                                        topology=args.topology)
+        print(f"{args.islands} islands on the MHA suite, diverse inits "
+              f"(topology: {args.topology})")
 
     rep = engine.run(max_steps=args.max_steps,
                      target_commits=args.commits, verbose=True)
@@ -81,6 +86,12 @@ def run_islands(args):
           f"{rep.internal_attempts} internal attempts / "
           f"{rep.migrations_accepted} migrations accepted")
     print(f"evaluations: {rep.evaluations} paid, {rep.cache_hits} shared-cache hits")
+    if engine.migration_stats.edges:
+        rates = ", ".join(
+            f"{engine.islands[s].name}->{engine.islands[d].name} "
+            f"{st.accepts}/{st.attempts}"
+            for (s, d), st in sorted(engine.migration_stats.edges.items()))
+        print(f"migration acceptance per edge: {rates}")
     print(f"global best: {rep.best_geomean:.1f} TFLOPS on '{rep.best_island}'")
     print(f"scenario coverage geomean: {rep.coverage_geomean:.1f} TFLOPS")
     for name, r in rep.islands.items():
@@ -105,6 +116,12 @@ def main():
                     help="speculatively batch-evaluate this many KB candidate "
                          "edits per island step (cache warming on the scorer "
                          "executor; search results are unchanged)")
+    ap.add_argument("--topology", choices=topology_names(), default="ring",
+                    help="migration graph for the island engine: ring (the "
+                         "static default), star (hub = current best-coverage "
+                         "island), all-to-all, or adaptive (acceptance-rate "
+                         "EMAs prune dead edges and trial new ones on a "
+                         "seeded schedule; exactly resumable)")
     ap.add_argument("--eval-backend", choices=("inline", "thread", "process"),
                     default=None,
                     help="evaluation service: inline (serial default), thread "

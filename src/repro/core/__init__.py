@@ -16,6 +16,10 @@ from repro.core.population import Commit, Lineage
 from repro.core.search_space import KernelGenome, seed_genome
 from repro.core.supervisor import Supervisor
 from repro.core.toolbelt import RefutedMemory, Toolbelt
+from repro.core.topology import (AdaptiveTopology, AllToAllTopology,
+                                 ExplicitTopology, MigrationStats,
+                                 MigrationTopology, RingTopology, StarTopology,
+                                 TOPOLOGIES, make_topology, topology_names)
 from repro.core.variation import (AgenticVariationOperator, PlanExecuteSummarize,
                                   SingleShotMutation, make_operator)
 
@@ -32,6 +36,9 @@ __all__ = [
     "registered_suites", "suite_by_name", "unregister_suite",
     "Commit", "Lineage",
     "KernelGenome", "seed_genome", "Supervisor", "RefutedMemory", "Toolbelt",
+    "AdaptiveTopology", "AllToAllTopology", "ExplicitTopology",
+    "MigrationStats", "MigrationTopology", "RingTopology", "StarTopology",
+    "TOPOLOGIES", "make_topology", "topology_names",
     "AgenticVariationOperator", "PlanExecuteSummarize", "SingleShotMutation",
     "make_operator",
 ]

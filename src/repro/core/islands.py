@@ -6,15 +6,23 @@ variation operator (AVO / single-shot / plan-execute-summarize can be mixed
 per island) and optionally their own target scenario suite (MHA, GQA, decode
 shapes — see ``perfmodel.suite_by_name``).  Between epochs the engine
 
-  * **migrates** each island's best commit to its ring neighbour — the
-    migrant is re-scored on the recipient's suite and accepted only on strict
-    improvement (cross-suite migration is exactly the paper's §4.3 transfer:
-    an MHA-evolved genome warm-starts the GQA island);
+  * **migrates** each island's best commit along the edges of a pluggable
+    :class:`~repro.core.topology.MigrationTopology` (ring — the default —
+    star, all-to-all, an explicit edge list, or the acceptance-rate-adaptive
+    policy; see ``topology.py``) — each migrant is re-scored on the
+    recipient's suite and accepted only on strict improvement (cross-suite
+    migration is exactly the paper's §4.3 transfer: an MHA-evolved genome
+    warm-starts the GQA island), and every attempt is recorded in a
+    :class:`~repro.core.topology.MigrationStats` acceptance ledger that
+    adaptive topologies learn from;
   * **publishes** island-local refuted-edit memory into the shared
     :class:`RefutedMemory`, so an edit one island has falsified is never
     re-trialled on another;
   * **persists** the whole archipelago (aggregate JSON + one file per island)
-    with atomic replace, so a killed run resumes exactly where it stopped.
+    with atomic replace — lineages, the shared refuted-edit memory, per-island
+    supervisor counters, the migration-acceptance ledger, and the topology's
+    own state — so a killed run resumes exactly where it stopped and makes
+    the same migration decisions an uninterrupted run would have made.
 
 Candidate evaluation goes through the pluggable evaluation service
 (``repro.core.evals``): all islands on one suite share one backend —
@@ -54,6 +62,8 @@ from repro.core.population import Commit, Lineage, atomic_write_json
 from repro.core.search_space import KernelGenome, seed_genome
 from repro.core.supervisor import Supervisor
 from repro.core.toolbelt import RefutedMemory, Toolbelt
+from repro.core.topology import (MigrationStats, MigrationTopology,
+                                 make_topology)
 from repro.core.variation import make_operator
 
 ARCHIPELAGO_FORMAT = "archipelago.v1"
@@ -124,6 +134,11 @@ class EpochMemoryView:
         re-freeze against everything published so far."""
         self.shared.merge(self._local)
         self._local.clear()
+        self._frozen = self.shared.snapshot()
+
+    def refreeze(self) -> None:
+        """Re-snapshot the shared memory without publishing — used after
+        resume restores the shared set underneath already-built views."""
         self._frozen = self.shared.snapshot()
 
 
@@ -286,7 +301,8 @@ class IslandEvolution:
                  supervisor_patience: int = 3,
                  prefetch: int = 0,
                  backend: str = "thread",
-                 check_correctness: bool = True):
+                 check_correctness: bool = True,
+                 topology: Union[str, MigrationTopology] = "ring"):
         """``prefetch`` > 0 speculatively batch-evaluates that many KB
         candidate edits per island step on the scorer executor (cache warming
         only — lineages are identical with or without it, it can only trade
@@ -296,7 +312,13 @@ class IslandEvolution:
         in-process executor, the default), 'process' (one warm worker-process
         pool shared by every suite — real multi-core scaling for the
         GIL-bound correctness checks), or 'inline'.  Backends are
-        bit-identical, so lineages do not depend on the choice."""
+        bit-identical, so lineages do not depend on the choice.
+
+        ``topology`` selects the migration graph walked at each epoch
+        barrier: 'ring' (the default — identical lineages to the historical
+        hard-coded ring), 'star', 'all-to-all', 'adaptive' (acceptance-rate
+        EMA pruning + seeded edge trials), or any
+        :class:`~repro.core.topology.MigrationTopology` instance."""
         self.specs = list(specs) if specs is not None else \
             default_specs(n_islands, seed=seed)
         if not self.specs:
@@ -307,6 +329,8 @@ class IslandEvolution:
         self.seed = seed
         self.memory = RefutedMemory()
         self.migrations_accepted = 0
+        self.topology = make_topology(topology, seed=seed)
+        self.migration_stats = MigrationStats()
         self._events_lock = threading.Lock()
         self.commit_events: list[dict] = []   # {"t","island","geomean","coverage"}
         self._t0 = None
@@ -458,7 +482,7 @@ class IslandEvolution:
             for f in futures:
                 f.result()
             done += chunk
-            self._barrier()
+            self._epoch_barrier()
             if verbose:
                 name, b = self.best()
                 print(f"[epoch @{done:3d} steps/island] best={b.geomean if b else 0:.1f} "
@@ -499,21 +523,29 @@ class IslandEvolution:
         for f in futures:
             f.result()
 
-    def _barrier(self) -> None:
-        """Epoch barrier: publish refuted memory, migrate ring-wise, persist."""
+    def _epoch_barrier(self) -> None:
+        """Epoch barrier: publish refuted memory, migrate along the topology's
+        edges, record acceptance per edge, persist."""
         for isl in self.islands:
             mem = isl.tools.memory_refuted
             if isinstance(mem, EpochMemoryView):
                 mem.publish()
-        n = len(self.islands)
-        if n > 1:
+        stats = self.migration_stats
+        stats.island_best = [isl.best_geomean() for isl in self.islands]
+        edges = self.topology.edges(len(self.islands), stats)
+        if edges:
             # snapshot donors first so a hop this epoch can't chain N times
             bests = [isl.lineage.best() for isl in self.islands]
-            for i, b in enumerate(bests):
+            for src, dst in edges:
+                if src == dst:
+                    continue               # self-migration is meaningless
+                b = bests[src]
                 if b is None:
-                    continue
-                recipient = self.islands[(i + 1) % n]
-                if recipient.accept_migrant(b, self.islands[i].name):
+                    continue               # nothing to donate: not an attempt
+                accepted = self.islands[dst].accept_migrant(
+                    b, self.islands[src].name)
+                stats.record(src, dst, accepted)
+                if accepted:
                     self.migrations_accepted += 1
         if self.persist_path:
             self.save(self.persist_path)
@@ -525,11 +557,16 @@ class IslandEvolution:
             "seed": self.seed,
             "migration_interval": self.migration_interval,
             "migrations_accepted": self.migrations_accepted,
+            "topology": {"name": getattr(self.topology, "name", "custom"),
+                         "state": self.topology.state()},
+            "migration_stats": self.migration_stats.to_payload(),
+            "refuted": self.memory.to_payload(),
             "islands": [
                 {"name": isl.name,
                  "suite": spec.target_suite or "default",
                  "operator": (spec.operator if isinstance(spec.operator, str)
                               else getattr(spec.operator, "name", "custom")),
+                 "supervisor": isl.supervisor.state(),
                  "lineage": isl.lineage.to_payload()}
                 for isl, spec in zip(self.islands, self.specs)],
         }
@@ -561,6 +598,10 @@ class IslandEvolution:
             if d is not None and \
                     d.get("suite", "default") != (spec.target_suite or "default"):
                 d = None
+            if d is not None and "supervisor" in d:
+                # stall/refocus counters are part of the search state: without
+                # them a resumed run would re-time its interventions
+                isl.supervisor.load_state(d["supervisor"])
             restored = Lineage.from_payload(d["lineage"]) if d else None
             if not scored_on_this_suite(restored):
                 restored = None
@@ -577,6 +618,20 @@ class IslandEvolution:
                 isl.lineage.commits = restored.commits
                 isl.lineage.config_names = restored.config_names
         self.migrations_accepted = payload.get("migrations_accepted", 0)
+        if "migration_stats" in payload:
+            self.migration_stats = MigrationStats.from_payload(
+                payload["migration_stats"])
+        topo = payload.get("topology")
+        if topo and topo.get("name") == getattr(self.topology, "name", None):
+            # same policy family: restore its exact decision state (adaptive
+            # edge set, EMA epoch counter, trial-schedule position …)
+            self.topology.load_state(topo.get("state", {}))
+        if "refuted" in payload:
+            self.memory.load_payload(payload["refuted"])
+            for isl in self.islands:
+                mem = isl.tools.memory_refuted
+                if isinstance(mem, EpochMemoryView):
+                    mem.refreeze()
 
     @classmethod
     def resume(cls, persist_path: str, **kw) -> "IslandEvolution":
@@ -592,7 +647,8 @@ class IslandEvolution:
         """Auto-scale the archipelago from the scenario registry: one
         specialist island per registered suite (or per name in ``suites``).
         Registering a new scenario family (``perfmodel.register_suite``) is
-        all it takes to get a working specialist island — no engine change."""
+        all it takes to get a working specialist island — no engine change.
+        Engine kwargs (``topology=``, ``backend=``, …) pass through."""
         names = tuple(suites) if suites is not None else registered_suites()
         if not names:
             raise ValueError("no suites registered")

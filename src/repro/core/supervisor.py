@@ -31,6 +31,17 @@ class Supervisor:
     def observe(self, committed: bool) -> None:
         self._steps_since_commit = 0 if committed else self._steps_since_commit + 1
 
+    # -- persistence: the counters ARE the intervention timing --------------------
+    def state(self) -> dict:
+        return {"interventions": self.interventions,
+                "steps_since_commit": self._steps_since_commit,
+                "focus_rotation": self._focus_rotation}
+
+    def load_state(self, state: dict) -> None:
+        self.interventions = int(state.get("interventions", 0))
+        self._steps_since_commit = int(state.get("steps_since_commit", 0))
+        self._focus_rotation = int(state.get("focus_rotation", 0))
+
     def check(self, lineage: Lineage) -> Directive:
         if self._steps_since_commit < self.patience:
             return Directive()

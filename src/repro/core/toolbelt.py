@@ -10,6 +10,7 @@ edit falsified on one island is never re-trialled on another.
 """
 from __future__ import annotations
 
+import json
 import threading
 from dataclasses import dataclass, field
 from typing import Iterable, Optional, Sequence
@@ -60,6 +61,21 @@ class RefutedMemory:
     def merge(self, entries: Iterable) -> None:
         with self._lock:
             self._entries.update(entries)
+
+    # -- persistence (entries are (genome_key, ((field, value), ...)) pairs) ----
+    def to_payload(self) -> list:
+        """JSON-serializable entry list, sorted for stable file content."""
+        with self._lock:
+            entries = list(self._entries)
+        payload = [[key, [list(p) for p in pairs]] for key, pairs in entries]
+        return sorted(payload, key=json.dumps)
+
+    def load_payload(self, payload: Iterable) -> None:
+        """Replace the entries with a ``to_payload`` round-trip (resume)."""
+        entries = {(key, tuple(tuple(p) for p in pairs))
+                   for key, pairs in payload}
+        with self._lock:
+            self._entries = entries
 
 
 class Toolbelt:

@@ -238,6 +238,26 @@ def test_killed_run_resumes_with_identical_lineages(tmp_path):
         resumed.close()
 
 
+def test_resume_restores_supervisor_and_refuted_memory(tmp_path):
+    """Exact resume needs more than lineages: the stall counters and the
+    shared refuted-edit memory are part of the search state too."""
+    p = str(tmp_path / "arch.json")
+    eng, _ = _run_engine(persist_path=p)
+    sup = {i.name: i.supervisor.state() for i in eng.islands}
+    mem = eng.memory.to_payload()
+
+    resumed = IslandEvolution.resume(p, n_islands=3, suite=FAST_SUITE,
+                                     migration_interval=2, seed=11)
+    try:
+        assert {i.name: i.supervisor.state() for i in resumed.islands} == sup
+        assert resumed.memory.to_payload() == mem
+        if mem:   # the epoch views must see restored refutations immediately
+            entry = (mem[0][0], tuple(tuple(pair) for pair in mem[0][1]))
+            assert entry in resumed.islands[0].tools.memory_refuted
+    finally:
+        resumed.close()
+
+
 def test_per_island_files_written(tmp_path):
     p = str(tmp_path / "arch.json")
     eng, _ = _run_engine(persist_path=p)

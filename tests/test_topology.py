@@ -1,0 +1,272 @@
+"""Migration topologies: edge generation, acceptance-EMA stats, adaptive
+prune/trial scheduling, and engine integration incl. exact kill/resume."""
+import os
+
+import pytest
+
+from repro.core import (AdaptiveTopology, AllToAllTopology, BenchConfig,
+                        ExplicitTopology, IslandEvolution, MigrationStats,
+                        RingTopology, StarTopology, make_topology,
+                        topology_names)
+from repro.core.topology import ring_edges
+
+FAST_SUITE = [BenchConfig("c4k", 8, 16, 16, 4096, causal=True),
+              BenchConfig("n4k", 8, 16, 16, 4096, causal=False)]
+
+
+def _fingerprint(eng):
+    return {i.name: [(c.genome.key(), round(c.geomean, 9), c.note)
+                     for c in i.lineage.commits] for i in eng.islands}
+
+
+def _engine(**kw):
+    defaults = dict(n_islands=3, suite=FAST_SUITE, migration_interval=2,
+                    seed=11)
+    defaults.update(kw)
+    return IslandEvolution(**defaults)
+
+
+# -- stateless topologies ---------------------------------------------------------
+
+
+def test_ring_edges_order_and_single_island():
+    t = RingTopology()
+    assert t.edges(4, MigrationStats()) == [(0, 1), (1, 2), (2, 3), (3, 0)]
+    assert t.edges(1, MigrationStats()) == []      # no self-migration
+    assert ring_edges(2) == [(0, 1), (1, 0)]
+
+
+def test_star_hub_is_best_coverage_island():
+    t = StarTopology()
+    stats = MigrationStats()
+    stats.island_best = [10.0, 99.0, 50.0]
+    assert StarTopology.hub(3, stats) == 1
+    edges = t.edges(3, stats)
+    assert edges == [(0, 1), (2, 1), (1, 0), (1, 2)]   # spokes in, hub out
+    # no record yet -> island 0 is the hub; single island -> no edges
+    assert StarTopology.hub(3, MigrationStats()) == 0
+    assert t.edges(1, stats) == []
+
+
+def test_all_to_all_covers_every_ordered_pair():
+    edges = AllToAllTopology().edges(3, MigrationStats())
+    assert len(edges) == 6 and len(set(edges)) == 6
+    assert all(s != d for s, d in edges)
+
+
+def test_explicit_topology_filters_and_rewires():
+    t = ExplicitTopology([(0, 1), (1, 1), (5, 0), (1, 2)])
+    assert t.edges(3, MigrationStats()) == [(0, 1), (1, 2)]  # self/oob dropped
+    t.remove_edge(0, 1)
+    t.add_edge(2, 0)
+    assert t.edges(3, MigrationStats()) == [(1, 2), (2, 0)]
+    t2 = ExplicitTopology()
+    t2.load_state(t.state())
+    assert t2.edges(3, MigrationStats()) == t.edges(3, MigrationStats())
+
+
+def test_make_topology_registry():
+    assert set(topology_names()) == {"ring", "star", "all-to-all", "adaptive"}
+    assert isinstance(make_topology("ring"), RingTopology)
+    assert isinstance(make_topology("all_to_all"), AllToAllTopology)
+    inst = ExplicitTopology([(0, 1)])
+    assert make_topology(inst) is inst             # instances pass through
+    with pytest.raises(ValueError):
+        make_topology("torus")
+
+
+# -- MigrationStats ---------------------------------------------------------------
+
+
+def test_migration_stats_ema_and_roundtrip():
+    s = MigrationStats(alpha=0.5)
+    s.record(0, 1, True)
+    assert s.ema((0, 1)) == 1.0                    # first sample sets the EMA
+    s.record(0, 1, False)
+    assert s.ema((0, 1)) == pytest.approx(0.5)
+    s.record(0, 1, False)
+    assert s.ema((0, 1)) == pytest.approx(0.25)
+    assert s.attempts((0, 1)) == 3 and s.accepts((0, 1)) == 1
+    assert s.attempts((1, 0)) == 0 and s.ema((1, 0), default=0.7) == 0.7
+
+    s2 = MigrationStats.from_payload(s.to_payload())
+    assert s2.to_payload() == s.to_payload()
+    assert s2.ema((0, 1)) == s.ema((0, 1))
+
+
+def test_donor_quality_aggregates_outgoing_edges():
+    s = MigrationStats(alpha=1.0)
+    s.record(0, 1, True)
+    s.record(0, 2, False)
+    assert s.donor_quality(0) == pytest.approx(0.5)
+    assert s.donor_quality(3) == 0.5               # unobserved -> the floor
+
+
+# -- AdaptiveTopology -------------------------------------------------------------
+
+
+def test_adaptive_starts_as_ring_and_is_deterministic():
+    stats = MigrationStats()
+    a, b = AdaptiveTopology(seed=7), AdaptiveTopology(seed=7)
+    seq_a = [a.edges(3, stats) for _ in range(6)]
+    seq_b = [b.edges(3, stats) for _ in range(6)]
+    assert seq_a[0] == ring_edges(3)
+    assert seq_a == seq_b                          # same seed, same schedule
+    # trials happen on the schedule: edges can only be added (stats are empty,
+    # so nothing is ever pruned) and at least one trial has fired by epoch 6
+    assert len(seq_a[-1]) > len(seq_a[0])
+
+
+def test_adaptive_prunes_dead_edge_but_never_isolates():
+    stats = MigrationStats(alpha=1.0)
+    t = AdaptiveTopology(seed=0, prune_after=2, prune_below=0.5,
+                         trial_interval=1000)      # no trials in this test
+    t.load_state({"epoch": 1, "n": 3,
+                  "active": [[0, 1], [1, 2], [2, 0], [0, 2]]})
+    for _ in range(3):                             # (0,2) keeps getting refused
+        stats.record(0, 2, False)
+    edges = t.edges(3, stats)
+    assert (0, 2) not in edges                     # dead extra edge pruned
+    assert set(edges) == set(ring_edges(3))
+    # the same dead stats on a pure ring edge must NOT prune it: removal
+    # would leave island 0 with no outgoing (or 1 with no incoming) edge
+    for _ in range(3):
+        stats.record(0, 1, False)
+    assert (0, 1) in t.edges(3, stats)
+
+
+def test_adaptive_state_roundtrip_resumes_schedule():
+    stats = MigrationStats()
+    a = AdaptiveTopology(seed=3)
+    for _ in range(3):
+        a.edges(4, stats)
+    b = AdaptiveTopology(seed=3)
+    b.load_state(a.state())
+    assert b.state() == a.state()
+    for _ in range(4):                             # identical future decisions
+        assert a.edges(4, stats) == b.edges(4, stats)
+
+
+# -- engine integration -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", ["ring", "star", "all-to-all", "adaptive"])
+def test_single_island_archipelago_never_self_migrates(topo):
+    eng = _engine(n_islands=1, topology=topo)
+    try:
+        rep = eng.run(max_steps=4)
+        assert rep.commits > 0
+        assert rep.migrations_accepted == 0
+        assert eng.migration_stats.edges == {}     # no attempt was recorded
+    finally:
+        eng.close()
+
+
+def test_engine_ring_default_matches_explicit_ring_topology():
+    eng1 = _engine()
+    eng2 = _engine(topology=RingTopology())
+    try:
+        eng1.run(max_steps=4)
+        eng2.run(max_steps=4)
+        assert _fingerprint(eng1) == _fingerprint(eng2)
+    finally:
+        eng1.close()
+        eng2.close()
+
+
+def test_engine_records_acceptance_stats_per_edge():
+    eng = _engine(topology="all-to-all")
+    try:
+        rep = eng.run(max_steps=4)
+        attempts = sum(st.attempts for st in eng.migration_stats.edges.values())
+        accepts = sum(st.accepts for st in eng.migration_stats.edges.values())
+        assert attempts > 0
+        assert accepts == rep.migrations_accepted == eng.migrations_accepted
+    finally:
+        eng.close()
+
+
+def test_removed_edge_mid_run_stops_migrating(tmp_path):
+    topo = ExplicitTopology([(0, 1), (1, 0)])
+    eng = _engine(n_islands=2, topology=topo)
+    try:
+        eng.run(max_steps=2)                       # one epoch with both edges
+        assert eng.migration_stats.attempts((0, 1)) > 0
+        frozen = eng.migration_stats.attempts((0, 1))
+        topo.remove_edge(0, 1)
+        eng.run(max_steps=4)                       # two more epochs
+        assert eng.migration_stats.attempts((0, 1)) == frozen  # edge is gone
+        assert eng.migration_stats.attempts((1, 0)) > frozen   # other kept going
+    finally:
+        eng.close()
+
+
+def test_topology_state_persisted_and_restored(tmp_path):
+    p = str(tmp_path / "arch.json")
+    eng = _engine(topology="adaptive", persist_path=p)
+    try:
+        eng.run(max_steps=4)
+        topo_state = eng.topology.state()
+        stats = eng.migration_stats.to_payload()
+        assert topo_state["epoch"] > 0
+    finally:
+        eng.close()
+
+    fresh = _engine(topology="adaptive")
+    try:
+        fresh.load_state(p)
+        assert fresh.topology.state() == topo_state
+        assert fresh.migration_stats.to_payload() == stats
+    finally:
+        fresh.close()
+
+    # a different topology family must NOT adopt foreign state
+    other = _engine(topology="ring")
+    try:
+        other.load_state(p)
+        assert other.topology.state() == {}
+        # … but the stats ledger is engine-owned and still restores
+        assert other.migration_stats.to_payload() == stats
+    finally:
+        other.close()
+
+
+def test_adaptive_killed_run_resumes_exact_migration_decisions(tmp_path):
+    """The PR's hard gate: kill/resume under AdaptiveTopology must make the
+    same migration decisions as an uninterrupted run, step for step."""
+    kw = dict(n_islands=3, suite=FAST_SUITE, migration_interval=2, seed=11,
+              topology="adaptive")
+
+    def full(eng):
+        return (_fingerprint(eng), eng.migration_stats.to_payload(),
+                eng.topology.state(), eng.migrations_accepted)
+
+    a = IslandEvolution(persist_path=str(tmp_path / "a.json"), **kw)
+    try:
+        a.run(max_steps=8)
+        uninterrupted = full(a)
+    finally:
+        a.close()
+
+    pb = str(tmp_path / "b.json")
+    b1 = IslandEvolution(persist_path=pb, **kw)
+    try:
+        b1.run(max_steps=4)
+    finally:
+        b1.close()                                 # "kill" mid-run
+    b2 = IslandEvolution.resume(pb, **kw)
+    try:
+        b2.run(max_steps=4)
+        assert full(b2) == uninterrupted
+    finally:
+        b2.close()
+
+
+def test_from_registry_threads_topology():
+    eng = IslandEvolution.from_registry(suites=("mha", "decode"),
+                                        topology="star", seed=2)
+    try:
+        assert eng.topology.name == "star"
+        assert [i.name for i in eng.islands] == ["mha", "decode"]
+    finally:
+        eng.close()
