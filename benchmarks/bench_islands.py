@@ -1,6 +1,6 @@
 """Island-model engine vs the serial loop: scenario-sweep wall-clock race
-across migration topologies, plus the evaluation-backend race (thread vs
-process on a cold batch).
+across migration topologies, the evaluation-backend race (thread vs process
+on a cold batch), and the pipelined-vs-barrier stepping race.
 
 The workload is the full scenario family — MHA, GQA, and decode shapes
 (30 benchmark configs).  Two ways to cover it:
@@ -19,12 +19,28 @@ config under the best island targeting that config's suite) — is the
 running-best score.  The race: wall-clock seconds until the coverage reaches
 the serial run's own final coverage, per topology.  Also reports commits/sec,
 evaluation counts, cache sharing, and gates killed-run resume identity and
-the topology-state round-trip for every raced topology.  A JSON summary
-(results/bench/islands.json) is written for CI artifact upload.
+the topology-state round-trip for every raced topology.
+
+The pipelined race then isolates the stepping strategy, in two legs:
+(1) the latency-bound evaluation-service race — the regime the pipeline is
+FOR (the paper's f is a slow verification run the agent keeps proposing
+against; ROADMAP's cross-host scoring has the same shape): every paid
+evaluation holds a modelled service latency (``service_latency_s``,
+CPU-free, bit-identical values), barrier pays the walk's latencies
+serially, the pipeline holds them concurrently on an elastic pool that
+grows under the proposal burst — host-capacity-independent, so this leg's
+wall-clock win is the gated one; (2) the archipelago on the process
+substrate — step-blocking barrier vs ``IslandEvolution(pipeline=True,
+elastic_workers=N)``, everything else fixed (CPU-bound: wins when workers
+outnumber islands; recorded per host either way).  Both legs gate that
+pipelined lineages are bit-identical to the barrier engine's.  JSON
+summaries (results/bench/islands.json + eval_backends.json) are written
+for CI artifact upload.
 
   PYTHONPATH=src python benchmarks/bench_islands.py
   PYTHONPATH=src python benchmarks/bench_islands.py --steps 48 --islands 4
   PYTHONPATH=src python benchmarks/bench_islands.py --topologies ring,adaptive
+  PYTHONPATH=src python benchmarks/bench_islands.py --elastic-workers 8
 """
 from __future__ import annotations
 
@@ -39,8 +55,9 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 from common import chart, emit, emit_json, geomean  # noqa: E402
 
-from repro.core import (ContinuousEvolution, IslandEvolution, KernelGenome,
-                        Scorer, make_backend, scenario_specs, suite_by_name,
+from repro.core import (ContinuousEvolution, ElasticProcessPool, EvalSpec,
+                        IslandEvolution, KernelGenome, ProcessBackend, Scorer,
+                        make_backend, scenario_specs, suite_by_name,
                         topology_names)  # noqa: E402
 
 UNION = "mha+gqa+decode"
@@ -107,13 +124,25 @@ def run_backend_race(n_candidates):
           f"({os.cpu_count()} cores visible; on a shares-throttled or busy "
           f"host the measured ratio is contention-sensitive)")
 
-    emit("eval_backends", ["backend", "wall_s", "candidates", "evaluations"],
-         [["process", f"{t_proc:.2f}", len(genomes), proc.n_evaluations],
-          ["thread", f"{t_thread:.2f}", len(genomes), thread.n_evaluations]])
+    emit("eval_backends",
+         ["backend", "wall_s", "candidates", "evaluations", "workers"],
+         [["process", f"{t_proc:.2f}", len(genomes), proc.n_evaluations,
+           proc.max_workers],
+          ["thread", f"{t_thread:.2f}", len(genomes), thread.n_evaluations,
+           thread.max_workers]])
+    race = dict(speedup=speedup, identical=identical,
+                t_thread=t_thread, t_proc=t_proc,
+                workers_thread=thread.max_workers,
+                workers_process=proc.max_workers,
+                candidates=len(genomes), cores_visible=os.cpu_count())
+    emit_json("eval_backends", race)
     chart("cold-batch wall-clock (s, lower is better)",
           [("thread", t_thread), ("process", t_proc)])
-    return dict(speedup=speedup, identical=identical,
-                t_thread=t_thread, t_proc=t_proc)
+    return race
+
+
+def _lineage_fingerprint(lineage):
+    return [(c.genome.key(), c.geomean, c.note) for c in lineage.commits]
 
 
 def run_serial(steps: int):
@@ -132,15 +161,86 @@ def run_serial(steps: int):
     wall = time.perf_counter() - t0
     return dict(kind="serial", report=rep, timeline=timeline, wall=wall,
                 final_coverage=max((c for _, c in timeline), default=0.0),
-                evaluations=evo.scorer.n_evaluations, commits=rep.commits)
+                evaluations=evo.scorer.n_evaluations, commits=rep.commits,
+                fingerprint=_lineage_fingerprint(evo.lineage))
+
+
+LATENCY_S = 0.25     # modelled per-evaluation service latency (seconds)
+
+
+def run_latency_race(steps: int, cap: int, latency_s: float = LATENCY_S):
+    """The regime the pipeline is FOR — a latency-bound evaluation service.
+
+    The paper's f is a GPU verification run the agent keeps proposing
+    against; ROADMAP's cross-host scoring has the same shape.  Model it with
+    ``service_latency_s``: every paid evaluation holds a fixed service
+    latency with negligible CPU (values are bit-identical), so the measured
+    ratio isolates the stepping strategy from host CPU capacity — on a
+    1-core shares-throttled runner exactly as on a 64-core box.
+
+      barrier    one lineage, inline backend: every candidate of every walk
+                 pays the service latency serially.
+      pipelined  same lineage, propose->submit->harvest on an elastic
+                 worker-process pool: the walk's candidates hold their
+                 latencies concurrently (the pool grows under the proposal
+                 burst — sleeping workers are free), the harvest commits in
+                 the identical order.
+
+    Returns both sides + fingerprints for the identity gate."""
+    suite = suite_by_name(UNION)
+    spec = EvalSpec(tuple(suite), check_correctness=False,
+                    service_latency_s=latency_s)
+
+    def run_one(pipeline: bool):
+        if pipeline:
+            pool = ElasticProcessPool((spec,), min_workers=1, max_workers=cap)
+            backend = ProcessBackend(spec=spec, executor=pool)
+        else:
+            pool = None
+            backend = make_backend("inline", suite=spec)
+        evo = ContinuousEvolution(scorer=backend, pipeline=pipeline)
+        if pool is not None:
+            pool.prestart()  # measure stepping, not process spin-up
+        timeline = []
+        t0 = time.perf_counter()
+
+        def on_commit(island):
+            timeline.append((time.perf_counter() - t0,
+                             island.lineage.best().geomean))
+
+        evo.island.on_commit = on_commit
+        evo.run(max_steps=steps)
+        wall = time.perf_counter() - t0
+        out = dict(wall=wall, timeline=timeline,
+                   final_coverage=max((c for _, c in timeline), default=0.0),
+                   evaluations=backend.n_evaluations,
+                   commits=len(evo.lineage),
+                   proposed=evo.island.proposed,
+                   fingerprint=_lineage_fingerprint(evo.lineage),
+                   pool_stats=pool.stats() if pool is not None else None)
+        evo.close()
+        if pool is not None:
+            pool.shutdown(wait=True, cancel_futures=True)
+        return out
+
+    return dict(barrier=run_one(False), pipelined=run_one(True),
+                latency_s=latency_s)
 
 
 def run_islands(steps_per_island: int, n_islands: int, seed: int,
-                wall_budget_s=None, persist_path=None, topology="ring"):
+                wall_budget_s=None, persist_path=None, topology="ring",
+                pipeline=False, backend="thread", elastic_workers=0,
+                prefetch_budget=None):
     """Specialist islands; coverage reconstructed from the commit-event log."""
     specs = scenario_specs()[:n_islands]
     eng = IslandEvolution(specs=specs, migration_interval=2, seed=seed,
-                          persist_path=persist_path, topology=topology)
+                          persist_path=persist_path, topology=topology,
+                          pipeline=pipeline, backend=backend,
+                          elastic_workers=elastic_workers,
+                          prefetch_budget=prefetch_budget)
+    # races measure stepping strategy, not worker-process spin-up: the thread
+    # backend warms at construction, so the elastic pool gets the same start
+    eng.prewarm_eval_pool()
     suite_of = {isl.name: tuple(c.name for c in isl.scorer.suite)
                 for isl in eng.islands}
     t0 = time.perf_counter()
@@ -203,6 +303,23 @@ def check_resume_identity(seed: int, topology: str = "ring") -> bool:
         return ok
 
 
+def check_pipeline_identity(seed: int, topology: str = "ring",
+                            steps: int = 6) -> bool:
+    """The pipelined determinism gate: propose->submit->harvest stepping must
+    produce the same commits in the same order as the barrier engine — the
+    harvest walk is authoritative, so completion order must never show."""
+    def fingerprint(pipeline: bool):
+        eng = IslandEvolution(specs=scenario_specs(), migration_interval=2,
+                              seed=seed, topology=topology, pipeline=pipeline)
+        try:
+            eng.run(max_steps=steps)
+            return {i.name: [(c.genome.key(), c.geomean, c.note)
+                             for c in i.lineage.commits] for i in eng.islands}
+        finally:
+            eng.close()
+    return fingerprint(False) == fingerprint(True)
+
+
 def check_topology_continuation(seed: int, topology: str,
                                 total_steps: int = 8) -> bool:
     """The hard resume gate: a run killed mid-way and resumed must make the
@@ -249,6 +366,14 @@ def main(argv=None):
                     help="candidates in the thread-vs-process backend race "
                          "(0 skips the race; >=32 for a meaningful read — "
                          "per-worker warmup amortizes with batch size)")
+    ap.add_argument("--pipeline-race", action="store_true", default=True)
+    ap.add_argument("--no-pipeline-race", dest="pipeline_race",
+                    action="store_false",
+                    help="skip the pipelined+elastic vs barrier stepping race "
+                         "(and its lineage-identity gate)")
+    ap.add_argument("--elastic-workers", type=int, default=0,
+                    help="worker cap for the pipelined race's elastic process "
+                         "pool (default: the visible CPU count)")
     ap.add_argument("--gate", choices=("all", "deterministic"), default="all",
                     help="what the exit code enforces: 'deterministic' gates "
                          "resume identity, exact resumed-vs-uninterrupted "
@@ -314,6 +439,119 @@ def main(argv=None):
             topology_state=isl["engine"].topology.state())
         isl["engine"].close()
 
+    # the pipelined stepping race: same islands, same coverage target, same
+    # worker-process evaluation substrate — the ONLY variable is the stepping
+    # strategy: the PR 3 step-blocking barrier loop vs propose->submit->
+    # harvest on an elastic pool.  (Both sides prewarm their workers before
+    # the window; the thread rows above remain for cross-substrate context.)
+    pipe, pipeline_ok, base_topo = None, None, None
+    serial_pipe_identical = None
+    if args.pipeline_race:
+        base_topo = "ring" if "ring" in topologies else topologies[0]
+        cap = args.elastic_workers or (os.cpu_count() or 2)
+
+        # leg 1 — the latency-bound evaluation-service race: the regime the
+        # pipeline is FOR (the paper's f is a slow verification run the
+        # agent keeps proposing against; cross-host scoring has the same
+        # shape).  Same lineage on both sides — the wall-clock ratio
+        # isolates stepping strategy from host CPU capacity, so this leg is
+        # the gated one.
+        lat_cap = args.elastic_workers or max(4, os.cpu_count() or 2)
+        print(f"\n== latency-bound service race: one lineage, "
+              f"{LATENCY_S:.2f}s service latency per paid evaluation — "
+              f"barrier (inline, serial latencies) vs pipelined (elastic "
+              f"pool <= {lat_cap} sleeping workers, overlapped latencies) ==")
+        lat = run_latency_race(args.steps, lat_cap)
+        bar, pi = lat["barrier"], lat["pipelined"]
+        serial_pipe_identical = bar["fingerprint"] == pi["fingerprint"]
+        serial_speedup = (bar["wall"] / pi["wall"]) if pi["wall"] else None
+        print(f"barrier : {bar['wall']:.1f}s wall, {bar['evaluations']} paid "
+              f"latencies, {bar['commits']} commits")
+        print(f"pipeline: {pi['wall']:.1f}s wall, {pi['evaluations']} paid "
+              f"latencies, {pi['commits']} commits, {pi['proposed']} "
+              f"proposals, pool peak {pi['pool_stats']['peak_workers']} "
+              f"workers (grew {pi['pool_stats']['grown']}x)")
+        print(f"pipelined-over-barrier speedup, latency-bound service: "
+              f"{serial_speedup:.2f}x; lineage bit-identical: "
+              f"{'OK' if serial_pipe_identical else 'MISMATCH'}")
+        for label, side in (("lat-barrier", bar), ("lat-pipelined", pi)):
+            rows.append([label, "-", f"{side['final_coverage']:.2f}", "",
+                         f"{side['wall']:.2f}", side["commits"],
+                         f"{side['commits'] / side['wall']:.3f}",
+                         side["evaluations"], 0, 0])
+
+        # leg 2 — the archipelago on the process substrate: step-blocking
+        # barrier vs pipelined+elastic, everything else fixed.  (On hosts
+        # with more cores than islands the pipeline wins here too; with
+        # workers <= islands the island concurrency already saturates the
+        # pool and speculation can only buy latency hiding.)
+        sides = {}
+        for label, kw in (
+                ("barrier", dict(pipeline=False, elastic_workers=0)),
+                ("pipelined", dict(pipeline=True, elastic_workers=cap,
+                                   prefetch_budget=2 * args.islands))):
+            print(f"\n== {label} stepping on the process substrate "
+                  f"('{base_topo}', "
+                  + (f"elastic <= {cap} workers" if kw["elastic_workers"]
+                     else "fixed pool") + ") ==")
+            isl = run_islands(args.steps, args.islands, args.seed,
+                              wall_budget_s=serial["wall"],
+                              topology=base_topo, backend="process", **kw)
+            t = time_to(isl["timeline"], target)
+            rep = isl["report"]
+            reached = f"{t:.1f}s" if t is not None else "never"
+            extra = ""
+            if rep.eval_pool:
+                extra = (f"; pool peak {rep.eval_pool['peak_workers']} "
+                         f"workers, grew {rep.eval_pool['grown']}x / "
+                         f"shrank {rep.eval_pool['shrunk']}x")
+            print(f"{label}-process[{base_topo}]: target coverage "
+                  f"{target:.1f} reached at t={reached} (total wall "
+                  f"{isl['wall']:.1f}s, {rep.evaluations} evals, "
+                  f"{rep.proposed} proposals{extra})")
+            rows.append([f"islands-{base_topo}-{label}-process", base_topo,
+                         f"{isl['final_coverage']:.2f}",
+                         f"{t:.2f}" if t is not None else "",
+                         f"{isl['wall']:.2f}", isl["commits"],
+                         f"{isl['commits'] / isl['wall']:.3f}",
+                         rep.evaluations, rep.cache_hits,
+                         rep.migrations_accepted])
+            sides[label] = dict(time_to_target_s=t, wall_s=isl["wall"],
+                                final_coverage=isl["final_coverage"],
+                                commits=isl["commits"],
+                                evaluations=rep.evaluations,
+                                cache_hits=rep.cache_hits,
+                                proposed=rep.proposed,
+                                eval_pool=rep.eval_pool)
+            isl["engine"].close()
+        t_bar = sides["barrier"]["time_to_target_s"]
+        t_pipe = sides["pipelined"]["time_to_target_s"]
+        speedup = (t_bar / t_pipe
+                   if t_pipe is not None and t_bar not in (None, 0) else None)
+        t_thread = by_topology[base_topo]["time_to_target_s"]
+        if speedup is not None:
+            print(f"\npipelined-over-barrier speedup to target, archipelago "
+                  f"(same process substrate): {speedup:.2f}x "
+                  f"(barrier {t_bar:.1f}s -> pipelined {t_pipe:.1f}s)")
+        else:
+            print("\npipelined-over-barrier speedup, archipelago: n/a (a "
+                  "side never reached the target in budget)")
+        pipe = dict(topology=base_topo, elastic_workers=cap,
+                    latency_bound=dict(
+                        latency_s=lat["latency_s"],
+                        elastic_workers=lat_cap,
+                        barrier_wall_s=bar["wall"],
+                        pipelined_wall_s=pi["wall"],
+                        barrier_evaluations=bar["evaluations"],
+                        pipelined_evaluations=pi["evaluations"],
+                        proposed=pi["proposed"],
+                        pool_stats=pi["pool_stats"],
+                        speedup_vs_barrier=serial_speedup,
+                        lineage_identical=serial_pipe_identical),
+                    barrier=sides["barrier"], pipelined=sides["pipelined"],
+                    thread_barrier_time_to_target_s=t_thread,
+                    speedup_vs_barrier=speedup)
+
     emit("islands", ["engine", "topology", "final_coverage_tflops",
                      "time_to_target_s", "wall_s", "commits", "commits_per_s",
                      "evaluations", "cache_hits", "migrations"], rows)
@@ -321,7 +559,11 @@ def main(argv=None):
           "never-reached omitted)",
           [("serial", t_serial)] +
           [(t, by_topology[t]["time_to_target_s"]) for t in topologies
-           if by_topology[t]["time_to_target_s"] is not None])
+           if by_topology[t]["time_to_target_s"] is not None] +
+          ([(f"{pipe['topology']}-{label}-proc",
+             pipe[label]["time_to_target_s"])
+            for label in (("barrier", "pipelined") if pipe else ())
+            if pipe[label].get("time_to_target_s") is not None]))
 
     # deterministic gates, per topology: killed-run resume identity AND the
     # stronger continuation property (resumed migration decisions == an
@@ -335,6 +577,10 @@ def main(argv=None):
               f"{'OK' if resume_ok[topo] else 'FAILED'}; "
               f"resumed-vs-uninterrupted migration decisions: "
               f"{'OK' if continuation_ok[topo] else 'FAILED'}")
+    if args.pipeline_race:
+        pipeline_ok = check_pipeline_identity(args.seed, base_topo)
+        print(f"[{base_topo}] pipelined-vs-barrier lineage identity: "
+              f"{'OK' if pipeline_ok else 'FAILED'}")
 
     t_best, best_topo = None, None
     for topo in topologies:
@@ -354,24 +600,36 @@ def main(argv=None):
               f"thread on the cold batch [{verdict}]")
 
     ok = all(resume_ok.values()) and all(continuation_ok.values()) \
-        and (race is None or race["identical"])
+        and (race is None or race["identical"]) \
+        and (pipeline_ok is None or pipeline_ok) \
+        and (serial_pipe_identical is None or serial_pipe_identical)
     if args.gate == "all":
         # the wall-clock races are host-contention-sensitive; gated only
         # under --gate all (the local default — CI uses --gate deterministic)
         ok = ok and t_best is not None and t_best < t_serial
+        if pipe is not None:
+            # the latency-bound leg is host-capacity-independent (sleeping
+            # workers are free), so its win IS gated; the CPU-bound
+            # archipelago leg is recorded but host-dependent
+            sp = pipe["latency_bound"]["speedup_vs_barrier"]
+            ok = ok and sp is not None and sp > 1.0
     emit_json("islands", {
         "serial": {"final_coverage": target, "time_to_target_s": t_serial,
                    "wall_s": serial["wall"], "commits": serial["commits"],
                    "evaluations": serial["evaluations"]},
         "topologies": by_topology,
+        "pipeline": pipe,
         "gates": {"resume_identity": resume_ok,
                   "migration_continuation": continuation_ok,
                   "backend_bit_identical":
                       None if race is None else race["identical"],
+                  "pipeline_lineage_identity": pipeline_ok,
+                  "pipeline_serial_lineage_identity": serial_pipe_identical,
                   "gate_mode": args.gate, "passed": ok},
         "backend_race": None if race is None else
-            {k: race[k] for k in ("speedup", "identical",
-                                  "t_thread", "t_proc")},
+            {k: race[k] for k in ("speedup", "identical", "t_thread",
+                                  "t_proc", "workers_thread",
+                                  "workers_process")},
     })
     return 0 if ok else 1
 

@@ -12,6 +12,13 @@ Island-model parallel (N concurrent lineages, migration, shared memory):
   PYTHONPATH=src python examples/evolve_attention.py --islands 4 --scenario-sweep
   PYTHONPATH=src python examples/evolve_attention.py --islands 4 --eval-backend process
   PYTHONPATH=src python examples/evolve_attention.py --islands 4 --topology adaptive
+
+Pipelined stepping (propose -> submit -> harvest; lineages identical to the
+barrier engine) with an elastic worker-process pool and a shared speculative
+prefetch budget:
+  PYTHONPATH=src python examples/evolve_attention.py --islands 4 --pipeline
+  PYTHONPATH=src python examples/evolve_attention.py --islands 4 --pipeline \
+      --eval-backend process --elastic-workers 8 --prefetch-budget 16
 """
 import argparse
 import os
@@ -41,7 +48,7 @@ def run_serial(args):
 
     evo = ContinuousEvolution(
         scorer=make_backend(args.eval_backend, suite=suite),
-        operator=operator, persist_path=path)
+        operator=operator, persist_path=path, pipeline=args.pipeline)
     rep = evo.run(max_steps=args.max_steps, target_commits=args.commits,
                   verbose=True)
 
@@ -60,32 +67,39 @@ def run_serial(args):
 
 def run_islands(args):
     # one file per mode: sweep and homogeneous runs must not resume each other
+    engine_kw = dict(seed=args.seed, prefetch=args.prefetch,
+                     backend=args.eval_backend, topology=args.topology,
+                     pipeline=args.pipeline,
+                     elastic_workers=args.elastic_workers,
+                     prefetch_budget=args.prefetch_budget)
+    mode = "pipelined" if args.pipeline else "barrier"
     if args.scenario_sweep:
         path = os.path.join(OUT, "archipelago_sweep.json")
         engine = IslandEvolution.resume(path, specs=scenario_specs(),
-                                        seed=args.seed,
-                                        prefetch=args.prefetch,
-                                        backend=args.eval_backend,
-                                        topology=args.topology)
+                                        **engine_kw)
         print("scenario-sweep: islands "
               + ", ".join(i.name for i in engine.islands)
-              + f"  (topology: {args.topology})")
+              + f"  (topology: {args.topology}, {mode} stepping)")
     else:
         path = os.path.join(OUT, "archipelago.json")
         engine = IslandEvolution.resume(path, n_islands=args.islands,
-                                        suite=mha_suite(), seed=args.seed,
-                                        prefetch=args.prefetch,
-                                        backend=args.eval_backend,
-                                        topology=args.topology)
+                                        suite=mha_suite(), **engine_kw)
         print(f"{args.islands} islands on the MHA suite, diverse inits "
-              f"(topology: {args.topology})")
+              f"(topology: {args.topology}, {mode} stepping)")
 
     rep = engine.run(max_steps=args.max_steps,
                      target_commits=args.commits, verbose=True)
     print(f"\n{rep.commits} commits across {len(engine.islands)} islands / "
           f"{rep.internal_attempts} internal attempts / "
           f"{rep.migrations_accepted} migrations accepted")
-    print(f"evaluations: {rep.evaluations} paid, {rep.cache_hits} shared-cache hits")
+    print(f"evaluations: {rep.evaluations} paid, {rep.cache_hits} shared-cache "
+          f"hits" + (f", {rep.proposed} speculative proposals"
+                     if args.pipeline else ""))
+    if rep.eval_pool:
+        p = rep.eval_pool
+        print(f"elastic pool: {p['workers']} workers now (peak {p['peak_workers']}, "
+              f"grew {p['grown']}x, shrank {p['shrunk']}x over "
+              f"{p['tasks_completed']} tasks)")
     if engine.migration_stats.edges:
         rates = ", ".join(
             f"{engine.islands[s].name}->{engine.islands[d].name} "
@@ -116,6 +130,23 @@ def main():
                     help="speculatively batch-evaluate this many KB candidate "
                          "edits per island step (cache warming on the scorer "
                          "executor; search results are unchanged)")
+    ap.add_argument("--pipeline", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="propose -> submit -> harvest island stepping: "
+                         "candidate batches are submitted to the eval backend "
+                         "ahead of the authoritative walk and proposals span "
+                         "the epoch barrier.  Lineages are identical to "
+                         "--no-pipeline (the barrier engine); only wall-clock "
+                         "and paid-evaluation counts change")
+    ap.add_argument("--elastic-workers", type=int, default=0,
+                    help="cap for an elastic worker-process pool that grows/"
+                         "shrinks with eval queue depth (requires "
+                         "--eval-backend process; 0 = fixed-size pool)")
+    ap.add_argument("--prefetch-budget", type=int, default=None,
+                    help="shared speculative-evaluation budget, re-divided "
+                         "across islands each epoch from the KB's "
+                         "predicted-gain distributions (replaces the static "
+                         "--prefetch constant)")
     ap.add_argument("--topology", choices=topology_names(), default="ring",
                     help="migration graph for the island engine: ring (the "
                          "static default), star (hub = current best-coverage "

@@ -1,12 +1,13 @@
 from repro.core.agent import AgentPolicy, Directive, ScriptedAgent, VariationResult
-from repro.core.evals import (BACKENDS, BatchScorer, EvalBackend, EvalSpec,
-                              InlineBackend, ProcessBackend, ScoreCache,
-                              ScoreVector, Scorer, ThreadBackend,
+from repro.core.evals import (BACKENDS, BatchScorer, ElasticProcessPool,
+                              EvalBackend, EvalSpec, InlineBackend,
+                              ProcessBackend, ScoreCache, ScoreVector, Scorer,
+                              ThreadBackend, default_worker_count,
                               evaluate_genome, make_backend)
 from repro.core.evolution import ContinuousEvolution, EvolutionReport
 from repro.core.islands import (Archipelago, Island, IslandEvolution,
-                                IslandReport, IslandSpec, default_specs,
-                                scenario_specs)
+                                IslandReport, IslandSpec, PrefetchAllocator,
+                                default_specs, scenario_specs)
 from repro.core.knowledge import KnowledgeBase
 from repro.core.perfmodel import (BenchConfig, decode_suite, estimate,
                                   expert_reference, fa_reference, gqa_suite,
@@ -25,12 +26,12 @@ from repro.core.variation import (AgenticVariationOperator, PlanExecuteSummarize
 
 __all__ = [
     "AgentPolicy", "Directive", "ScriptedAgent", "VariationResult",
-    "BACKENDS", "BatchScorer", "EvalBackend", "EvalSpec", "InlineBackend",
-    "ProcessBackend", "ScoreCache", "ScoreVector", "Scorer", "ThreadBackend",
-    "evaluate_genome", "make_backend",
+    "BACKENDS", "BatchScorer", "ElasticProcessPool", "EvalBackend", "EvalSpec",
+    "InlineBackend", "ProcessBackend", "ScoreCache", "ScoreVector", "Scorer",
+    "ThreadBackend", "default_worker_count", "evaluate_genome", "make_backend",
     "ContinuousEvolution", "EvolutionReport", "KnowledgeBase",
     "Archipelago", "Island", "IslandEvolution", "IslandReport", "IslandSpec",
-    "default_specs", "scenario_specs",
+    "PrefetchAllocator", "default_specs", "scenario_specs",
     "BenchConfig", "decode_suite", "estimate", "expert_reference",
     "fa_reference", "gqa_suite", "mha_suite", "register_suite",
     "registered_suites", "suite_by_name", "unregister_suite",

@@ -75,13 +75,18 @@ class ScriptedAgent(AgentPolicy):
         tags = directive.focus_tags if directive.kind == "refocus" else (bn,)
         return best.genome, sv, tags
 
-    def _candidates(self, tools: Toolbelt, genome, sv, tags, directive, trace):
+    def _ranked_suggestions(self, consult, is_refuted, genome, sv, tags,
+                            directive):
+        """The single source of candidate ordering, shared by the authoritative
+        variation walk and the speculative proposal phase.  ``consult`` is the
+        suggestion source (the Toolbelt's counted call in a real step, the
+        KB's uncounted one when speculating); everything downstream is pure."""
         from repro.core.knowledge import Suggestion
-        sugg = tools.consult_kb(genome, sv, *tags)
+        sugg = consult(genome, sv, *tags)
         if directive.kind in ("explore", "refocus"):
             # widen: pull suggestions for every bottleneck
-            extra = tools.consult_kb(genome, sv, "mxu", "vpu", "dma",
-                                     "overhead", "bubble", "vmem")
+            extra = consult(genome, sv, "mxu", "vpu", "dma",
+                            "overhead", "bubble", "vmem")
             seen = {tuple(sorted(s.edit.items())) for s in sugg}
             sugg += [s for s in extra if tuple(sorted(s.edit.items())) not in seen]
             # fresh perspective: compose compound edits from suggestion pairs
@@ -96,15 +101,52 @@ class ScriptedAgent(AgentPolicy):
                         ed, f"compound: {singles[a].fact_id}+{singles[b].fact_id}",
                         0.5 * (singles[a].predicted_gain + singles[b].predicted_gain),
                         "compound"))
-            trace.append(("explore", directive.note))
         if directive.kind == "explore":
             # re-examine previously refuted edits with fresh eyes — the search
             # context (profile shape) has moved since they were recorded
             filtered = sugg
         else:
-            filtered = [s for s in sugg if not tools.is_refuted(genome, s.edit)]
-        trace.append(("consult", f"{len(filtered)} candidate edits after memory filter"))
+            filtered = [s for s in sugg if not is_refuted(genome, s.edit)]
+        # ties keep KB order (fact-registration order): the authoritative
+        # walk and its speculative preview share this exact ranking
         return sorted(filtered, key=lambda s: -s.predicted_gain)
+
+    def _candidates(self, tools: Toolbelt, genome, sv, tags, directive, trace):
+        if directive.kind in ("explore", "refocus"):
+            trace.append(("explore", directive.note))
+        filtered = self._ranked_suggestions(tools.consult_kb, tools.is_refuted,
+                                            genome, sv, tags, directive)
+        trace.append(("consult", f"{len(filtered)} candidate edits after memory filter"))
+        return filtered
+
+    # -- the speculative proposal phase (pipelined engine) ------------------------
+    def propose_candidates(self, tools: Toolbelt,
+                           directive: Directive = Directive()
+                           ) -> list[KernelGenome]:
+        """The genomes the next :meth:`run_variation` call is likely to
+        evaluate, in its exact walk order — what the pipelined engine's
+        proposal phase submits to the evaluation backend ahead of the harvest.
+
+        Pure speculation: no trace, no tool-call accounting, no memory writes
+        — mis-speculation (e.g. a migrant landing between propose and harvest)
+        can only waste evaluations, never change the search."""
+        best = tools.lineage.best()
+        if best is None:
+            return [self.seed if self.seed is not None else seed_genome()]
+        sv = tools.scorer(best.genome)       # cached since its commit
+        if not sv.correct:
+            return []
+        tags = (directive.focus_tags if directive.kind == "refocus"
+                else (sv.dominant_bottleneck(),))
+
+        def consult(genome, s, *t):
+            return tools.kb.suggestions(genome, s, tools.scorer.suite, *t,
+                                        count=False)
+
+        ranked = self._ranked_suggestions(consult, tools.is_refuted,
+                                          best.genome, sv, tags, directive)
+        return [best.genome.with_(**s.edit)
+                for s in ranked[:self.max_inner_steps]]
 
     def _repair(self, tools: Toolbelt, genome, failure, trace):
         """Diagnose an infeasible/incorrect candidate and fix it."""

@@ -6,20 +6,26 @@ Layout:
   scorer.py    Scorer / InlineBackend — correctness + perfmodel, in-process
   worker.py    evaluate_genome / EvalSpec — the pure picklable worker fn
   backends.py  EvalBackend protocol; thread (BatchScorer) + process backends
+  elastic.py   ElasticProcessPool — worker count follows queue depth
 
-``repro.core.scoring`` re-exports the stable names for older call sites.
+Every backend exposes the same sync (``__call__``/``map``) and async
+(``submit`` -> Future, with per-genome dedup) surfaces; the pipelined island
+engine drives the async one.  ``repro.core.scoring`` re-exports the stable
+names for older call sites.
 """
 from repro.core.evals.backends import (BACKENDS, BatchScorer, EvalBackend,
                                        ProcessBackend, ThreadBackend,
-                                       make_backend, make_process_executor)
+                                       default_worker_count, make_backend,
+                                       make_process_executor)
+from repro.core.evals.elastic import ElasticProcessPool
 from repro.core.evals.cache import ScoreCache
 from repro.core.evals.scorer import CORRECTNESS_TOL, InlineBackend, Scorer
 from repro.core.evals.vector import ScoreVector
 from repro.core.evals.worker import EvalSpec, evaluate_genome, warm_worker
 
 __all__ = [
-    "BACKENDS", "BatchScorer", "CORRECTNESS_TOL", "EvalBackend", "EvalSpec",
-    "InlineBackend", "ProcessBackend", "ScoreCache", "ScoreVector", "Scorer",
-    "ThreadBackend", "evaluate_genome", "make_backend",
-    "make_process_executor", "warm_worker",
+    "BACKENDS", "BatchScorer", "CORRECTNESS_TOL", "ElasticProcessPool",
+    "EvalBackend", "EvalSpec", "InlineBackend", "ProcessBackend", "ScoreCache",
+    "ScoreVector", "Scorer", "ThreadBackend", "default_worker_count",
+    "evaluate_genome", "make_backend", "make_process_executor", "warm_worker",
 ]

@@ -42,14 +42,32 @@ from repro.core.search_space import KernelGenome
 BACKENDS = ("inline", "thread", "process")
 
 
+def default_worker_count(max_workers: Optional[int] = None,
+                         clamp: int = 8) -> int:
+    """Worker-pool width when the caller does not choose one: the host's CPU
+    count, clamped — never a hard-coded constant.  Shared by the thread and
+    process backends so both size from the hardware."""
+    if max_workers:
+        return max_workers
+    return max(2, min(clamp, os.cpu_count() or 2))
+
+
 @runtime_checkable
 class EvalBackend(Protocol):
     """What every evaluation backend exposes.  ``__call__`` and ``map`` are
-    the scoring surface; the rest is accounting the engine reports."""
+    the synchronous scoring surface; ``submit`` is the async surface the
+    pipelined engine's proposal phase uses (returns a
+    ``concurrent.futures.Future[ScoreVector]``; duplicate submissions for one
+    genome share a single evaluation).  ``overlapping`` says whether ``submit``
+    actually runs elsewhere (thread/process pools) or inline — speculation is
+    pointless on a backend that evaluates in the calling thread.  The rest is
+    accounting the engine reports."""
 
     suite: Sequence[BenchConfig]
+    overlapping: bool
 
     def __call__(self, genome: KernelGenome) -> ScoreVector: ...
+    def submit(self, genome: KernelGenome) -> concurrent.futures.Future: ...
     def map(self, genomes: Sequence[KernelGenome]) -> list: ...
     def prefetch(self, genomes: Sequence[KernelGenome]) -> None: ...
     def baselines(self) -> dict: ...
@@ -74,6 +92,8 @@ class BatchScorer:
     wake, and one of them becomes the new owner and retries.
     """
 
+    overlapping = True
+
     def __init__(self, base: Optional[Scorer] = None, *,
                  suite: Optional[Sequence[BenchConfig]] = None,
                  max_workers: Optional[int] = None,
@@ -81,9 +101,18 @@ class BatchScorer:
         self.base = base if base is not None else Scorer(suite=suite)
         self._lock = threading.Lock()
         self._inflight: dict[str, threading.Event] = {}
+        self._futures: dict[str, concurrent.futures.Future] = {}
+        self._closed = False
         self._own_executor = executor is None
+        # CPU-count-derived default width, like make_process_executor — the
+        # chosen width is exposed as .max_workers for reports/JSON
+        if executor is not None:
+            self.max_workers = getattr(executor, "_max_workers", None) \
+                or default_worker_count(max_workers)
+        else:
+            self.max_workers = default_worker_count(max_workers)
         self._executor = executor or concurrent.futures.ThreadPoolExecutor(
-            max_workers=max_workers or 4, thread_name_prefix="batch-scorer")
+            max_workers=self.max_workers, thread_name_prefix="batch-scorer")
         # the lazy proxy build must not race across threads
         self.base.warm()
 
@@ -114,6 +143,32 @@ class BatchScorer:
         return self.base.baselines()
 
     # -- thread-safe scoring -----------------------------------------------------
+    def submit(self, genome: KernelGenome) -> concurrent.futures.Future:
+        """Async scoring surface: cache hit -> completed future; already
+        submitted -> the shared future; otherwise dispatch onto the executor.
+        A failed evaluation is dropped from the submit table (never cached),
+        so a later submit retries — mirroring the ``__call__`` contract."""
+        key = genome.key()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("submit on closed BatchScorer")
+            sv = self.base.cache.peek(key)
+            if sv is not None:
+                done: concurrent.futures.Future = concurrent.futures.Future()
+                done.set_result(sv)
+                return done
+            fut = self._futures.get(key)
+            if fut is not None:
+                return fut
+            fut = self._executor.submit(self, genome)
+            self._futures[key] = fut
+        fut.add_done_callback(lambda f, key=key: self._drop_submitted(key))
+        return fut
+
+    def _drop_submitted(self, key: str) -> None:
+        with self._lock:
+            self._futures.pop(key, None)
+
     def __call__(self, genome: KernelGenome) -> ScoreVector:
         key = genome.key()
         cache = self.base.cache
@@ -163,6 +218,11 @@ class BatchScorer:
             self._executor.submit(self, g)
 
     def close(self) -> None:
+        """Idempotent: later calls are no-ops; ``submit`` after close raises."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         if self._own_executor:
             self._executor.shutdown(wait=True, cancel_futures=True)
 
@@ -237,6 +297,8 @@ class ProcessBackend:
     so callers can retry.
     """
 
+    overlapping = True
+
     def __init__(self, suite: Union[str, Sequence[BenchConfig], None] = None, *,
                  spec: Optional[EvalSpec] = None,
                  check_correctness: bool = True, rng_seed: int = 0,
@@ -249,9 +311,12 @@ class ProcessBackend:
         self._lock = threading.Lock()
         self._futures: dict[str, concurrent.futures.Future] = {}
         self._paid = 0
+        self._closed = False
         self._own_executor = executor is None
         self._executor = executor or make_process_executor(
             (self.spec,), max_workers=max_workers, mp_context=mp_context)
+        self.max_workers = getattr(self._executor, "_max_workers", None) \
+            or max_workers or (os.cpu_count() or 2)
         self._baseline_scorer = Scorer(suite=list(self.spec.suite),
                                        check_correctness=False)
 
@@ -284,6 +349,8 @@ class ProcessBackend:
         otherwise dispatch to a worker."""
         key = genome.key()
         with self._lock:
+            if self._closed:
+                raise RuntimeError("submit on closed ProcessBackend")
             sv = self.cache.get(key)
             if sv is not None:
                 done: concurrent.futures.Future = concurrent.futures.Future()
@@ -323,6 +390,11 @@ class ProcessBackend:
             self.submit(g)
 
     def close(self) -> None:
+        """Idempotent: later calls are no-ops; ``submit`` after close raises."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         if self._own_executor:
             self._executor.shutdown(wait=True, cancel_futures=True)
 
@@ -341,15 +413,19 @@ def make_backend(name: str,
     """
     spec = EvalSpec.resolve(suite,
                             kw.pop("check_correctness", True),
-                            kw.pop("rng_seed", 0))
+                            kw.pop("rng_seed", 0),
+                            kw.pop("service_latency_s", 0.0))
     if name == "inline":
         return InlineBackend(suite=list(spec.suite),
                              check_correctness=spec.check_correctness,
-                             rng_seed=spec.rng_seed, **kw)
+                             rng_seed=spec.rng_seed,
+                             service_latency_s=spec.service_latency_s, **kw)
     if name == "thread":
         return ThreadBackend(Scorer(suite=list(spec.suite),
                                     check_correctness=spec.check_correctness,
-                                    rng_seed=spec.rng_seed), **kw)
+                                    rng_seed=spec.rng_seed,
+                                    service_latency_s=spec.service_latency_s),
+                             **kw)
     if name == "process":
         return ProcessBackend(spec=spec, **kw)
     raise ValueError(f"unknown eval backend {name!r}; known: {BACKENDS}")

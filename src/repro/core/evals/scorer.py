@@ -50,10 +50,19 @@ class Scorer:
 
     def __init__(self, suite: Optional[Sequence[BenchConfig]] = None,
                  check_correctness: bool = True, rng_seed: int = 0,
-                 cache: Optional[ScoreCache] = None):
+                 cache: Optional[ScoreCache] = None,
+                 service_latency_s: float = 0.0):
+        """``service_latency_s`` > 0 holds every *paid* evaluation for that
+        long before scoring — modelling a latency-bound evaluation service
+        (cross-host scoring, hardware in the loop; the paper's f is a GPU
+        verification run the agent keeps proposing against).  The sleep
+        costs no CPU and never changes values, so backends stay
+        bit-identical; benchmarks use it to isolate stepping-strategy
+        overlap from host CPU capacity."""
         self.suite = list(suite) if suite is not None else mha_suite()
         self.check_correctness = check_correctness
         self.rng_seed = rng_seed
+        self.service_latency_s = service_latency_s
         self.cache = cache if cache is not None else ScoreCache()
         self.n_evaluations = 0
         self._count_lock = threading.Lock()
@@ -122,6 +131,9 @@ class Scorer:
         backends manage the cache themselves and call this directly)."""
         with self._count_lock:       # backends call this from many threads
             self.n_evaluations += 1
+        if self.service_latency_s > 0:
+            import time
+            time.sleep(self.service_latency_s)
 
         if self.check_correctness:
             ok, why = self.check(genome)
@@ -154,9 +166,14 @@ class InlineBackend(Scorer):
     """The ``inline`` evaluation backend: everything in the calling thread.
 
     Identical to :class:`Scorer` plus the uniform backend surface
-    (``map``/``prefetch``/``close``), so callers can hold any backend
-    without feature-testing.
+    (``map``/``submit``/``prefetch``/``close``), so callers can hold any
+    backend without feature-testing.  ``overlapping`` is False: ``submit``
+    evaluates synchronously, so speculative proposal/prefetch phases skip
+    this backend — there is no spare capacity to overlap with.
     """
+
+    overlapping = False
+    max_workers = 1
 
     @property
     def cache_hits(self) -> int:
@@ -164,6 +181,17 @@ class InlineBackend(Scorer):
 
     def map(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
         return [self(g) for g in genomes]
+
+    def submit(self, genome: KernelGenome):
+        """Uniform async surface: evaluate NOW, return a completed future
+        (exceptions are captured on the future, like a real executor's)."""
+        import concurrent.futures
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        try:
+            fut.set_result(self(genome))
+        except Exception as e:          # pragma: no cover - scorer rarely raises
+            fut.set_exception(e)
+        return fut
 
     def prefetch(self, genomes: Sequence[KernelGenome]) -> None:
         """No-op: inline evaluation has no spare capacity to warm with."""

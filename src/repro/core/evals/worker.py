@@ -22,14 +22,17 @@ from repro.core.search_space import KernelGenome
 class EvalSpec:
     """Everything a worker needs to rebuild a :class:`Scorer`: the resolved
     benchmark configs (BenchConfig is a frozen, picklable dataclass), the
-    correctness toggle, and the proxy-input RNG seed."""
+    correctness toggle, the proxy-input RNG seed, and the modelled
+    evaluation-service latency (see ``Scorer.service_latency_s``)."""
     suite: tuple                  # tuple[BenchConfig, ...]
     check_correctness: bool = True
     rng_seed: int = 0
+    service_latency_s: float = 0.0
 
     @classmethod
     def resolve(cls, suite: Union[str, Sequence[BenchConfig], "EvalSpec", None],
-                check_correctness: bool = True, rng_seed: int = 0) -> "EvalSpec":
+                check_correctness: bool = True, rng_seed: int = 0,
+                service_latency_s: float = 0.0) -> "EvalSpec":
         """Accept a registered suite name ('mha', 'mha+gqa'), an explicit
         config sequence, an EvalSpec (returned as-is), or None (MHA default)."""
         if isinstance(suite, EvalSpec):
@@ -41,7 +44,7 @@ class EvalSpec:
             cfgs = mha_suite()
         else:
             cfgs = list(suite)
-        return cls(tuple(cfgs), check_correctness, rng_seed)
+        return cls(tuple(cfgs), check_correctness, rng_seed, service_latency_s)
 
 
 # per-process scorer table: one warm Scorer per spec, built on first use
@@ -53,7 +56,8 @@ def _scorer_for(spec: EvalSpec) -> Scorer:
     if scorer is None:
         scorer = Scorer(suite=list(spec.suite),
                         check_correctness=spec.check_correctness,
-                        rng_seed=spec.rng_seed)
+                        rng_seed=spec.rng_seed,
+                        service_latency_s=spec.service_latency_s)
         _WORKER_SCORERS[spec] = scorer
     return scorer
 

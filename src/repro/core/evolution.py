@@ -29,12 +29,19 @@ class ContinuousEvolution:
                  lineage: Optional[Lineage] = None,
                  persist_path: Optional[str] = None,
                  target_suite: Optional[str] = None,
-                 eval_backend: str = "inline"):
+                 eval_backend: str = "inline",
+                 pipeline: bool = False):
         """``target_suite`` names a scenario suite from the perfmodel registry
         ('mha', 'gqa', 'decode', or a '+'-union); ``eval_backend`` selects the
         evaluation service ('inline' | 'thread' | 'process' — bit-identical,
         wall-clock only).  Both are ignored when an explicit ``scorer`` is
-        given."""
+        given.
+
+        ``pipeline`` enables propose -> submit -> harvest stepping on the
+        single island: the operator's likely candidate walk is submitted to
+        the backend's async surface before the authoritative serial walk
+        harvests it (identical lineages; overlap needs a thread/process
+        backend — on inline it is a no-op)."""
         if scorer is None:
             suite: Optional[Sequence[BenchConfig]] = \
                 suite_by_name(target_suite) if target_suite else None
@@ -43,7 +50,8 @@ class ContinuousEvolution:
             name="main", scorer=scorer,
             operator=operator or AgenticVariationOperator(),
             supervisor=supervisor or Supervisor(),
-            lineage=lineage, persist_path=persist_path)
+            lineage=lineage, persist_path=persist_path,
+            pipeline=pipeline)
         self.persist_path = persist_path
 
     # -- single-island aliases (the public API predates the island engine) ------

@@ -34,12 +34,33 @@ bit-identical, so the choice changes wall-clock only, never lineages.
 ``Archipelago.from_registry()`` auto-scales one specialist island per suite
 registered in ``perfmodel`` (``register_suite``).
 
+**Pipelined stepping** (``IslandEvolution(pipeline=True)``): each island step
+splits into a *proposal* phase — the operator's likely candidate walk is
+submitted to the backend's async surface (``EvalBackend.submit``) up front,
+so workers evaluate the whole batch concurrently — and a *harvest* phase
+that runs the authoritative (serial, seeded) variation walk, whose
+evaluations collapse onto the in-flight futures.  Commits therefore land in
+the operator's deterministic walk order regardless of completion order, and
+after its last epoch step each island proposes its NEXT step before the
+barrier, so scoring futures span migration.  The epoch barrier itself
+shrinks to migration + memory-publish (+ prefetch-budget reallocation).
+Proposals are pure cache warming: a stale speculation (e.g. a migrant lands
+between propose and harvest) only wastes evaluations, so pipelined lineages
+are bit-identical to the barrier engine's — asserted in tests, the same way
+the eval backends are asserted bit-identical to inline.  Pair it with an
+elastic process pool (``backend="process", elastic_workers=N`` →
+:class:`~repro.core.evals.ElasticProcessPool`) that grows/shrinks workers
+with queue depth, and with ``prefetch_budget=`` — a shared speculative-
+evaluation budget re-divided across islands each epoch from the KB's
+predicted-gain distributions (:class:`PrefetchAllocator`) instead of a
+static per-island constant.
+
 Determinism: operators are seeded per island, the Scorer is a deterministic
 function of the genome, and refuted-memory sharing is synchronized at the
 epoch barrier — during an epoch each island reads a *frozen snapshot* of the
 shared memory plus its own additions (:class:`EpochMemoryView`), so results
 do not depend on thread scheduling.  A fixed seed reproduces the same
-per-island lineages, commit for commit.
+per-island lineages, commit for commit — pipelined or not.
 
 ``ContinuousEvolution`` (evolution.py) is the single-island special case of
 :class:`Island` + this engine's serial driver.
@@ -54,9 +75,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence, Union
 
-from repro.core.evals import (BatchScorer, EvalSpec, make_backend,
-                              make_process_executor)
-from repro.core.knowledge import KnowledgeBase
+from repro.core.evals import (BatchScorer, ElasticProcessPool, EvalSpec,
+                              make_backend, make_process_executor)
+from repro.core.knowledge import KnowledgeBase, suggestion_sort_key
 from repro.core.perfmodel import BenchConfig, registered_suites, suite_by_name
 from repro.core.population import Commit, Lineage, atomic_write_json
 from repro.core.search_space import KernelGenome, seed_genome
@@ -100,6 +121,9 @@ class IslandReport:
     evaluations: int
     cache_hits: int
     wall_seconds: float
+    proposed: int = 0             # speculative proposal-phase submissions
+    eval_workers: dict = field(default_factory=dict)  # suite -> pool width
+    eval_pool: dict = field(default_factory=dict)     # elastic pool stats
 
 
 class EpochMemoryView:
@@ -166,7 +190,8 @@ class Island:
                  memory=None,
                  persist_path: Optional[str] = None,
                  on_commit: Optional[Callable] = None,
-                 prefetch_k: int = 0):
+                 prefetch_k: int = 0,
+                 pipeline: bool = False):
         self.name = name
         self.scorer = scorer
         self.lineage = lineage if lineage is not None else Lineage()
@@ -177,12 +202,18 @@ class Island:
         self.persist_path = persist_path
         self.on_commit = on_commit
         self.prefetch_k = prefetch_k
+        # allocator-assigned speculation cap: None = no budget configured
+        # (propose the full walk); 0 is a real allocation meaning "none" —
+        # distinct from prefetch_k, whose 0 means "feature off"
+        self.prefetch_cap: Optional[int] = None
+        self.pipeline = pipeline
         self.steps = 0
         self.internal_attempts = 0
         self.migrants_accepted = 0
+        self.proposed = 0             # speculative submissions (pipelined)
         self.traces: list[dict] = []
 
-    # -- the variation step ------------------------------------------------------
+    # -- the proposal phase (pipelined stepping) ----------------------------------
     def _prefetch_candidates(self) -> None:
         """Speculatively warm the shared scorer cache with the KB's top edit
         candidates for the current best — pure cache warming on the batch
@@ -192,14 +223,44 @@ class Island:
             return
         sv = self.scorer(best.genome)                 # cached
         sugg = self.kb.suggestions(best.genome, sv, self.scorer.suite,
-                                   sv.dominant_bottleneck())
-        sugg = sorted(sugg, key=lambda s: -s.predicted_gain)[:self.prefetch_k]
+                                   sv.dominant_bottleneck(), count=False)
+        # stable secondary key: equal-gain suggestions must prefetch in a
+        # deterministic order, not dict-insertion-luck order
+        sugg = sorted(sugg, key=suggestion_sort_key)[:self.prefetch_k]
         self.scorer.prefetch([best.genome.with_(**s.edit) for s in sugg])
 
-    def step(self):
-        """One supervised variation step; commits on improvement."""
-        if self.prefetch_k:
-            self._prefetch_candidates()
+    def propose(self) -> int:
+        """Proposal phase: submit the evaluations the next :meth:`harvest` is
+        likely to walk onto the backend's async surface, so workers score the
+        whole candidate batch concurrently while the harvest walks it in
+        order.  Pure speculation — never mutates search state, so calling it
+        is always safe (and calling it twice, e.g. once before the epoch
+        barrier and again at step start after a migrant landed, just re-syncs
+        the speculation to the new lineage; duplicates collapse in the
+        backend).  Returns the number of submissions actually enqueued."""
+        proposer = getattr(self.operator, "propose", None)
+        if proposer is None or not getattr(self.scorer, "overlapping", False):
+            return 0
+        cap = self.prefetch_cap       # allocator budget; an allocated 0 MEANS 0
+        if cap is None and self.prefetch_k:
+            cap = self.prefetch_k     # static prefetch constant caps us too
+        if cap == 0:
+            return 0
+        directive = self.supervisor.peek(self.lineage)
+        genomes = proposer(self.tools, directive)
+        if cap is not None:
+            genomes = genomes[:cap]
+        n = self.tools.submit_evaluations(genomes)
+        self.proposed += n
+        return n
+
+    # -- the harvest phase ---------------------------------------------------------
+    def harvest(self):
+        """Harvest phase: the authoritative variation walk.  Runs the seeded
+        serial operator, whose evaluations collapse onto whatever
+        :meth:`propose` already has in flight — commit decisions land in the
+        operator's deterministic order no matter which futures finished
+        first.  Commits on improvement."""
         directive = self.supervisor.check(self.lineage)
         result = self.operator.vary(self.tools, directive)
         self.steps += 1
@@ -218,6 +279,18 @@ class Island:
                 self.on_commit(self)
         self.supervisor.observe(result.committed)
         return result
+
+    def step(self):
+        """One supervised variation step; commits on improvement.
+
+        Pipelined: propose (async submit of the candidate batch) then
+        harvest.  Barrier mode: optional KB-top-k prefetch then harvest —
+        the historical step-blocking behaviour, bit for bit."""
+        if self.pipeline:
+            self.propose()
+        elif self.prefetch_k:
+            self._prefetch_candidates()
+        return self.harvest()
 
     # -- migration ---------------------------------------------------------------
     def accept_migrant(self, commit: Commit, donor: str) -> bool:
@@ -241,6 +314,22 @@ class Island:
     def best_geomean(self) -> float:
         b = self.lineage.best()
         return b.geomean if b else 0.0
+
+    def gain_profile(self) -> list:
+        """Descending predicted-gain distribution of the KB's current
+        suggestions for this island's best genome — what the shared
+        speculative-prefetch budget allocator sizes batches from.  Uncounted
+        and peek-only: allocation must never pay an evaluation, so an
+        uncached best (e.g. right after resume) yields an empty profile."""
+        best = self.lineage.best()
+        if best is None:
+            return []
+        cache = getattr(self.scorer, "cache", None)
+        sv = cache.peek(best.genome.key()) if cache is not None else None
+        if sv is None or not sv.correct:
+            return []
+        return self.kb.gain_profile(best.genome, sv, self.scorer.suite,
+                                    sv.dominant_bottleneck())
 
     def report(self, wall_seconds: float = 0.0) -> EvolutionReport:
         return EvolutionReport(
@@ -288,6 +377,58 @@ def scenario_specs() -> list[IslandSpec]:
     ]
 
 
+class PrefetchAllocator:
+    """Shared speculative-evaluation budget, re-divided across islands every
+    epoch from each island's predicted-gain distribution.
+
+    Per island the *desired* speculation depth is the smallest candidate-walk
+    prefix whose cumulative commit probability reaches ``commit_target``,
+    modelling each suggestion's clamped predicted gain as its commit
+    probability: a front-loaded gain profile (top candidate dominates) wants
+    a shallow batch, a flat/low profile (the agent will walk deep before
+    giving up) wants a deep one.  Desired depths are then fit into the shared
+    ``total`` budget by largest-remainder apportionment with a deterministic
+    name tie-break — allocation is a pure function of the gain profiles, so
+    it can never perturb the (already speculation-proof) search.
+    """
+
+    def __init__(self, total: int, commit_target: float = 0.8,
+                 max_gain: float = 0.95):
+        if total < 1:
+            raise ValueError(f"prefetch budget must be >= 1, got {total}")
+        self.total = total
+        self.commit_target = commit_target
+        self.max_gain = max_gain
+
+    def desired_depth(self, gains: Sequence[float]) -> int:
+        """How deep the operator is likely to walk before committing."""
+        if not gains:
+            return 1                  # nothing known: speculate the minimum
+        p_miss = 1.0
+        for d, g in enumerate(gains, start=1):
+            p_miss *= 1.0 - min(max(g, 0.0), self.max_gain)
+            if 1.0 - p_miss >= self.commit_target:
+                return d
+        return len(gains)
+
+    def allocate(self, profiles: dict) -> dict:
+        """``{island name -> gain profile}`` to ``{island name -> prefetch_k}``,
+        summing to at most ``total``."""
+        desired = {name: self.desired_depth(g) for name, g in profiles.items()}
+        want = sum(desired.values())
+        if want <= self.total:
+            return desired
+        quotas = {name: self.total * d / want for name, d in desired.items()}
+        alloc = {name: int(q) for name, q in quotas.items()}
+        leftovers = self.total - sum(alloc.values())
+        # largest fractional remainder first; names break ties determinist-
+        # ically so equal remainders never depend on dict iteration order
+        order = sorted(quotas, key=lambda n: (-(quotas[n] - alloc[n]), n))
+        for name in order[:leftovers]:
+            alloc[name] += 1
+        return alloc
+
+
 class IslandEvolution:
     """N-island parallel evolution engine (see module docstring)."""
 
@@ -302,7 +443,10 @@ class IslandEvolution:
                  prefetch: int = 0,
                  backend: str = "thread",
                  check_correctness: bool = True,
-                 topology: Union[str, MigrationTopology] = "ring"):
+                 topology: Union[str, MigrationTopology] = "ring",
+                 pipeline: bool = False,
+                 elastic_workers: int = 0,
+                 prefetch_budget: Optional[int] = None):
         """``prefetch`` > 0 speculatively batch-evaluates that many KB
         candidate edits per island step on the scorer executor (cache warming
         only — lineages are identical with or without it, it can only trade
@@ -318,7 +462,23 @@ class IslandEvolution:
         barrier: 'ring' (the default — identical lineages to the historical
         hard-coded ring), 'star', 'all-to-all', 'adaptive' (acceptance-rate
         EMA pruning + seeded edge trials), or any
-        :class:`~repro.core.topology.MigrationTopology` instance."""
+        :class:`~repro.core.topology.MigrationTopology` instance.
+
+        ``pipeline`` switches islands from step-blocking to propose ->
+        submit -> harvest stepping (see the module docstring): candidate
+        batches are submitted to the backend ahead of the authoritative walk,
+        and each island proposes its next step before the epoch barrier so
+        scoring futures span migration.  Bit-identical lineages; wall-clock
+        and paid-evaluation counts may differ.
+
+        ``elastic_workers`` > 0 (process backend only) replaces the fixed
+        worker pool with an :class:`~repro.core.evals.ElasticProcessPool`
+        capped at that many workers, growing/shrinking with queue depth.
+
+        ``prefetch_budget`` sets a *shared* speculative-evaluation budget:
+        every epoch a :class:`PrefetchAllocator` re-divides it into
+        per-island ``prefetch_k`` caps from the KB's predicted-gain
+        distributions (replacing the static ``prefetch`` constant)."""
         self.specs = list(specs) if specs is not None else \
             default_specs(n_islands, seed=seed)
         if not self.specs:
@@ -327,6 +487,12 @@ class IslandEvolution:
         self.migration_interval = max(1, migration_interval)
         self.persist_path = persist_path
         self.seed = seed
+        self.pipeline = pipeline
+        if elastic_workers and backend != "process":
+            raise ValueError("elastic_workers requires backend='process' "
+                             f"(got backend={backend!r})")
+        self._prefetch_allocator = (PrefetchAllocator(prefetch_budget)
+                                    if prefetch_budget is not None else None)
         self.memory = RefutedMemory()
         self.migrations_accepted = 0
         self.topology = make_topology(topology, seed=seed)
@@ -359,8 +525,13 @@ class IslandEvolution:
             key: EvalSpec.resolve(cfgs, check_correctness=check_correctness)
             for key, cfgs in suite_cfgs.items()}
         if backend == "process":
-            self._process_pool = make_process_executor(
-                tuple(eval_specs.values()))
+            # elastic: capacity follows queue depth (the pipelined proposal
+            # bursts); fixed: the PR 2 warm pool sized once from cpu_count
+            self._process_pool = (
+                ElasticProcessPool(tuple(eval_specs.values()),
+                                   max_workers=elastic_workers)
+                if elastic_workers else
+                make_process_executor(tuple(eval_specs.values())))
         for key, espec in eval_specs.items():
             extra = ({"executor": self._process_pool}
                      if backend == "process" else
@@ -390,7 +561,9 @@ class IslandEvolution:
                 memory=EpochMemoryView(self.memory),
                 persist_path=self._island_path(name),
                 on_commit=self._record_commit,
-                prefetch_k=prefetch))
+                prefetch_k=prefetch,
+                pipeline=pipeline))
+        self._allocate_prefetch()     # epoch-0 budget (no-op without one)
 
     # -- persistence paths --------------------------------------------------------
     def _island_path(self, name: str) -> Optional[str]:
@@ -463,6 +636,7 @@ class IslandEvolution:
         start_attempts = sum(isl.internal_attempts for isl in self.islands)
         start_evals = sum(s.n_evaluations for s in self.scorers.values())
         start_hits = sum(s.cache_hits for s in self.scorers.values())
+        start_proposed = sum(isl.proposed for isl in self.islands)
         self._bootstrap_batch()
         done = 0
         while done < max_steps:
@@ -473,10 +647,16 @@ class IslandEvolution:
                     - start_commits >= target_commits:
                 break
             chunk = min(self.migration_interval, max_steps - done)
+            # pipelined: after its last step of the epoch each island
+            # proposes its NEXT step, so those scoring futures evaluate in
+            # the workers while the barrier migrates (nothing waits on them)
+            ahead = self.pipeline and done + chunk < max_steps
 
-            def epoch(island, k=chunk):
+            def epoch(island, k=chunk, propose_ahead=ahead):
                 for _ in range(k):
                     island.step()
+                if propose_ahead:
+                    island.propose()
 
             futures = [self._pool.submit(epoch, isl) for isl in self.islands]
             for f in futures:
@@ -505,7 +685,13 @@ class IslandEvolution:
                             for s in self.scorers.values()) - start_evals,
             cache_hits=sum(s.cache_hits
                            for s in self.scorers.values()) - start_hits,
-            wall_seconds=wall)
+            wall_seconds=wall,
+            proposed=sum(isl.proposed for isl in self.islands) - start_proposed,
+            eval_workers={key: getattr(s, "max_workers", None)
+                          for key, s in self.scorers.items()},
+            eval_pool=(self._process_pool.stats()
+                       if isinstance(self._process_pool, ElasticProcessPool)
+                       else {}))
 
     def _bootstrap_batch(self) -> None:
         """Batch-evaluate the starting genomes of all not-yet-seeded islands
@@ -523,9 +709,27 @@ class IslandEvolution:
         for f in futures:
             f.result()
 
+    def _allocate_prefetch(self) -> None:
+        """Re-divide the shared speculative-evaluation budget into per-island
+        ``prefetch_k`` caps from the KB's predicted-gain distributions.  A
+        pure function of cached state — never pays an evaluation, never
+        perturbs the search."""
+        if self._prefetch_allocator is None:
+            return
+        alloc = self._prefetch_allocator.allocate(
+            {isl.name: isl.gain_profile() for isl in self.islands})
+        for isl in self.islands:
+            # both knobs: prefetch_cap caps pipelined proposals (where an
+            # allocated 0 must mean ZERO, not "uncapped"), prefetch_k sizes
+            # the barrier-mode KB prefetch
+            isl.prefetch_cap = isl.prefetch_k = alloc.get(isl.name, 0)
+
     def _epoch_barrier(self) -> None:
         """Epoch barrier: publish refuted memory, migrate along the topology's
-        edges, record acceptance per edge, persist."""
+        edges, record acceptance per edge, re-divide the speculative-prefetch
+        budget, persist.  Nothing here waits on scoring futures — in
+        pipelined mode each island's next-step proposals keep evaluating in
+        the workers while this runs."""
         for isl in self.islands:
             mem = isl.tools.memory_refuted
             if isinstance(mem, EpochMemoryView):
@@ -547,6 +751,7 @@ class IslandEvolution:
                 stats.record(src, dst, accepted)
                 if accepted:
                     self.migrations_accepted += 1
+        self._allocate_prefetch()     # budgets follow post-migration profiles
         if self.persist_path:
             self.save(self.persist_path)
 
@@ -654,6 +859,22 @@ class IslandEvolution:
             raise ValueError("no suites registered")
         specs = [IslandSpec(name=n, target_suite=n) for n in names]
         return cls(specs=specs, **kw)
+
+    def prewarm_eval_pool(self, wait: bool = True) -> None:
+        """Block until the process pool's workers are up and warm (an elastic
+        pool is first grown to its cap).  Wall-clock only — benchmarks call
+        it before a timed window so stepping strategies race on equal footing
+        with the thread backend, whose warmup runs at construction."""
+        pool = self._process_pool
+        if pool is None:
+            return
+        if hasattr(pool, "prestart"):
+            pool.prestart(wait=wait)
+        elif wait:
+            from repro.core.evals.worker import _prestart_noop
+            n = getattr(pool, "_max_workers", 1)
+            concurrent.futures.wait([pool.submit(_prestart_noop)
+                                     for _ in range(n)])
 
     def close(self) -> None:
         for scorer in self.scorers.values():

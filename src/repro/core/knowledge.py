@@ -38,6 +38,14 @@ class Fact:
     suggest: Callable             # (genome, score_vector, suite) -> [Suggestion]
 
 
+def suggestion_sort_key(s: "Suggestion"):
+    """Descending predicted gain with a *stable* secondary key on the edit
+    repr — equal-gain suggestions must rank identically everywhere (agent
+    candidate walk, speculative proposals, prefetch), never in
+    dict-insertion-luck order."""
+    return (-s.predicted_gain, repr(sorted(s.edit.items())))
+
+
 def _mean_seq(suite) -> float:
     return sum(c.seq_len for c in suite) / max(len(suite), 1)
 
@@ -273,24 +281,43 @@ class KnowledgeBase:
         self.facts = list(facts) if facts is not None else list(FACTS)
         self.n_consults = 0
 
-    def consult(self, *tags: str) -> list[Fact]:
+    def consult(self, *tags: str, count: bool = True) -> list[Fact]:
         """Facts relevant to the given bottleneck tags (paper: the agent
-        'consults documentation to understand the relevant constraints')."""
-        self.n_consults += 1
+        'consults documentation to understand the relevant constraints').
+        ``count=False`` is the speculative path (proposal/prefetch sizing):
+        same facts, no accounting — speculation must not inflate the agent's
+        consult statistics."""
+        if count:
+            self.n_consults += 1
         tagset = set(tags)
         hits = [f for f in self.facts if f.tags & tagset]
         return hits if hits else list(self.facts)
 
-    def suggestions(self, genome: KernelGenome, sv, suite, *tags) -> list:
+    def suggestions(self, genome: KernelGenome, sv, suite, *tags,
+                    count: bool = True) -> list:
         out = []
-        for fact in self.consult(*tags):
+        for fact in self.consult(*tags, count=count):
             for s in fact.suggest(genome, sv, suite):
                 s.fact_id = s.fact_id or fact.id
                 out.append(s)
-        # deduplicate identical edits, keep max predicted gain
+        # deduplicate identical edits, keep max predicted gain.  NOTE: ties
+        # on predicted_gain keep fact-registration order (the facts list is
+        # deterministic, and e.g. the repair path relies on vmem-budget
+        # emitting kv_in_grid first) — use ``suggestion_sort_key`` only where
+        # ordering is pure speculation (prefetch).
         seen = {}
         for s in out:
             k = tuple(sorted(s.edit.items()))
             if k not in seen or s.predicted_gain > seen[k].predicted_gain:
                 seen[k] = s
         return sorted(seen.values(), key=lambda s: -s.predicted_gain)
+
+    def gain_profile(self, genome: KernelGenome, sv, suite, *tags) -> list:
+        """Descending predicted-gain distribution of the current suggestions
+        (uncounted).  This is the signal the speculative-prefetch budget
+        allocator sizes per-island batches from: a front-loaded profile means
+        the top candidate will likely commit (shallow speculation suffices),
+        a flat/low one means the agent will walk deep."""
+        return [s.predicted_gain
+                for s in self.suggestions(genome, sv, suite, *tags,
+                                          count=False)]

@@ -42,21 +42,47 @@ class Supervisor:
         self._steps_since_commit = int(state.get("steps_since_commit", 0))
         self._focus_rotation = int(state.get("focus_rotation", 0))
 
-    def check(self, lineage: Lineage) -> Directive:
+    def _decide(self) -> tuple:
+        """(kind, tag) the current counters imply — the ONE place the
+        patience thresholds and the focus rotation live, shared by the
+        non-mutating :meth:`peek` and the authoritative :meth:`check` so the
+        two can never drift apart."""
         if self._steps_since_commit < self.patience:
+            return "none", None
+        if self._steps_since_commit < 2 * self.patience:
+            return "explore", None
+        return "refocus", _ALL_TAGS[(self.focus_offset + self._focus_rotation)
+                                    % len(_ALL_TAGS)]
+
+    def peek(self, lineage: Lineage) -> Directive:
+        """Non-mutating preview of what :meth:`check` would return right now.
+
+        The pipelined engine's proposal phase speculates with this — it must
+        not consume an intervention or advance the focus rotation, because the
+        authoritative :meth:`check` still runs at harvest time (and between
+        peek and check a migrant may land, changing the answer)."""
+        kind, tag = self._decide()
+        if kind == "none":
+            return Directive()
+        if kind == "explore":
+            return Directive(kind="explore",
+                             exploration_depth=self._steps_since_commit)
+        return Directive(kind="refocus", focus_tags=(tag,))
+
+    def check(self, lineage: Lineage) -> Directive:
+        kind, tag = self._decide()
+        if kind == "none":
             return Directive()
         self.interventions += 1
         # review the trajectory: what has already been tried?
         recent_notes = " ".join(c.note for c in lineage.commits[-8:])
-        if self._steps_since_commit < 2 * self.patience:
+        if kind == "explore":
             d = Directive(kind="explore",
                           note=(f"intervention #{self.interventions}: plateau for "
                                 f"{self._steps_since_commit} steps — widen the "
                                 f"candidate pool across all subsystems"),
                           exploration_depth=self._steps_since_commit)
         else:
-            tag = _ALL_TAGS[(self.focus_offset + self._focus_rotation)
-                            % len(_ALL_TAGS)]
             self._focus_rotation += 1
             d = Directive(kind="refocus", focus_tags=(tag,),
                           note=(f"intervention #{self.interventions}: rotate focus "

@@ -86,6 +86,7 @@ class Toolbelt:
         self.lineage = lineage
         self.calls: list[ToolCall] = []
         self.n_evaluate_calls = 0     # this belt's requests (incl. cache hits)
+        self.n_speculative_submits = 0  # proposal-phase submissions (pipelined)
         # persistent memory across variation steps: refuted edits per context
         self.memory_refuted = memory if memory is not None else RefutedMemory()
         self.memory_notes = self.memory_refuted.notes
@@ -120,6 +121,26 @@ class Toolbelt:
             return self.scorer.map(genomes)
         return [self.scorer(g) for g in genomes]
 
+    def submit_evaluations(self, genomes: Sequence[KernelGenome]) -> int:
+        """Speculative async surface (the pipelined engine's proposal phase):
+        enqueue evaluations on the backend and return immediately.  Results
+        land in the shared cache; duplicate/in-flight submissions collapse.
+        Counted separately from ``evaluate`` — speculation is not an agent
+        tool call and must not inflate its accounting.  No-op (returns 0) on
+        backends that cannot overlap (inline)."""
+        submit = getattr(self.scorer, "submit", None)
+        if submit is None or not getattr(self.scorer, "overlapping", False):
+            return 0
+        cache = getattr(self.scorer, "cache", None)
+        n = 0
+        for g in genomes:
+            if cache is not None and cache.peek(g.key()) is not None:
+                continue
+            submit(g)
+            n += 1
+        self.n_speculative_submits += n
+        return n
+
     def profile(self, sv: ScoreVector) -> dict:
         """Per-config time breakdown — the profiler the agent reads."""
         self.calls.append(ToolCall("profile"))
@@ -152,6 +173,8 @@ class Toolbelt:
             "tool_calls": len(self.calls),
             "evaluations": self.scorer.n_evaluations,
             "evaluate_calls": self.n_evaluate_calls,
+            "speculative_submits": self.n_speculative_submits,
             "kb_consults": self.kb.n_consults,
             "refuted_memories": len(self.memory_refuted),
+            "eval_workers": getattr(self.scorer, "max_workers", None),
         }

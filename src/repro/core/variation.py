@@ -35,6 +35,14 @@ class AgenticVariationOperator:
              ) -> VariationResult:
         return self.policy.run_variation(tools, directive)
 
+    def propose(self, tools: Toolbelt, directive: Directive = Directive()
+                ) -> list:
+        """Speculative proposal surface for the pipelined engine: the genomes
+        the next :meth:`vary` call is likely to evaluate, in walk order.
+        Pure — never mutates search state (see ScriptedAgent.propose_candidates)."""
+        proposer = getattr(self.policy, "propose_candidates", None)
+        return proposer(tools, directive) if proposer is not None else []
+
 
 class SingleShotMutation:
     """Vary(P_t) = Generate(Sample(P_t)) with a single-turn generator."""
@@ -68,6 +76,12 @@ class SingleShotMutation:
             cand, sv, committed,
             f"random single-field mutation {parent.diff(cand)}", 1,
             [("single-shot", str(parent.diff(cand)))])
+
+    def propose(self, tools: Toolbelt, directive: Directive = Directive()
+                ) -> list:
+        """No speculation: the candidate depends on this operator's private
+        RNG, and peeking would advance it (changing the search)."""
+        return []
 
 
 class PlanExecuteSummarize:
@@ -107,6 +121,21 @@ class PlanExecuteSummarize:
         trace.append(("summarize", self.summaries[-1]))
         return VariationResult(cand, sv, committed,
                                f"PES {sugg[0].fact_id}: {sugg[0].edit}", 1, trace)
+
+    def propose(self, tools: Toolbelt, directive: Directive = Directive()
+                ) -> list:
+        """Mirror the pipeline's single execute step: the top unrefuted
+        suggestion for the current dominant bottleneck (pure speculation)."""
+        best = tools.lineage.best()
+        if best is None:
+            return [seed_genome()]
+        sv = tools.scorer(best.genome)       # cached since its commit
+        if not sv.correct:
+            return []
+        sugg = tools.kb.suggestions(best.genome, sv, tools.scorer.suite,
+                                    sv.dominant_bottleneck(), count=False)
+        sugg = [s for s in sugg if not tools.is_refuted(best.genome, s.edit)]
+        return [best.genome.with_(**sugg[0].edit)] if sugg else []
 
 
 def make_operator(spec="avo", seed: int = 0, agent_kwargs: Optional[dict] = None):

@@ -144,6 +144,29 @@ def test_kb_consult_filters_by_tag():
     assert dma_facts and all("dma" in f.tags for f in dma_facts)
 
 
+def test_kb_uncounted_consult_and_gain_profile(scorer):
+    kb = KnowledgeBase()
+    g = seed_genome()
+    sv = scorer(g)
+    kb.consult("dma", count=False)
+    prof = kb.gain_profile(g, sv, FAST_SUITE, "dma", "mxu")
+    assert kb.n_consults == 0               # speculation is never accounted
+    assert prof == sorted(prof, reverse=True)
+    assert prof == [s.predicted_gain
+                    for s in kb.suggestions(g, sv, FAST_SUITE, "dma", "mxu")]
+
+
+def test_equal_gain_suggestions_order_is_stable():
+    """The prefetch-ordering fix: ties on predicted gain break on the edit
+    repr, deterministically — never on construction order."""
+    from repro.core.knowledge import Suggestion, suggestion_sort_key
+    a = Suggestion({"block_q": 256}, "r", 0.1, "f1")
+    b = Suggestion({"block_k": 512}, "r", 0.1, "f2")
+    c = Suggestion({"kv_in_grid": True}, "r", 0.3, "f3")
+    assert sorted([a, b, c], key=suggestion_sort_key) == \
+        sorted([b, c, a], key=suggestion_sort_key) == [c, b, a]
+
+
 # -- supervisor ----------------------------------------------------------------
 
 
@@ -169,11 +192,77 @@ def test_supervisor_resets_on_commit():
     assert sup.check(Lineage()).kind == "none"
 
 
+def test_supervisor_peek_matches_check_without_mutating():
+    """peek() previews check()'s directive but consumes nothing — the
+    pipelined proposal phase leans on this."""
+    sup = Supervisor(patience=2)
+    lin = Lineage()
+    for stalled in range(6):
+        sup.observe(False)
+        before = sup.state()
+        peeked = sup.peek(lin)
+        assert sup.state() == before            # peek never mutates
+        checked = sup.check(lin)
+        assert (peeked.kind, peeked.focus_tags) == \
+            (checked.kind, checked.focus_tags)
+
+
 # -- variation operators ----------------------------------------------------------
 
 
 def _tools(scorer):
     return Toolbelt(scorer, KnowledgeBase(), Lineage())
+
+
+class _RecordingScorer:
+    """Pass-through scorer that records the key of every evaluation call."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.keys = []
+
+    def __call__(self, g):
+        self.keys.append(g.key())
+        return self.inner(g)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def test_agent_proposal_previews_variation_walk(scorer):
+    """propose_candidates must preview the authoritative walk — its first
+    candidate is exactly the walk's first evaluation — without touching
+    search state (no consult accounting, no refuted-memory writes)."""
+    rec = _RecordingScorer(scorer)
+    tools = Toolbelt(rec, KnowledgeBase(), Lineage())
+    op = AgenticVariationOperator()
+    boot = op.vary(tools)                       # bootstrap
+    assert boot.committed
+    tools.lineage.update(boot.genome, boot.score, boot.note)
+    best_key = tools.lineage.best().genome.key()
+    consults_before = tools.kb.n_consults
+    refuted_before = len(tools.memory_refuted)
+    proposed = op.propose(tools)
+    assert proposed                              # a lineage implies candidates
+    assert tools.kb.n_consults == consults_before        # uncounted
+    assert len(tools.memory_refuted) == refuted_before   # no memory writes
+    keys = {g.key() for g in proposed}
+    assert len(keys) == len(proposed)            # no duplicate submissions
+    rec.keys.clear()
+    op.vary(tools)
+    # strip the cached best-genome re-evaluation the plan phase makes; the
+    # first *candidate* the walk pays for is the first proposal
+    walk = [k for k in rec.keys if k != best_key]
+    assert walk and walk[0] == proposed[0].key()
+
+
+def test_proposal_surfaces_exist_per_operator(scorer):
+    tools = _tools(scorer)
+    assert SingleShotMutation().propose(tools) == []   # rng-driven: no preview
+    pes = PlanExecuteSummarize()
+    first = pes.propose(tools)
+    assert len(first) == 1                       # empty lineage -> the seed
+    assert first[0].key() == seed_genome().key()
 
 
 def test_agentic_operator_bootstraps_then_improves(scorer):

@@ -89,6 +89,28 @@ def test_inline_backend_surface():
     b.close()
 
 
+def test_inline_submit_is_synchronous_completed_future():
+    b = make_backend("inline", suite=FAST_SUITE, check_correctness=False)
+    assert b.overlapping is False             # speculation skips this backend
+    fut = b.submit(seed_genome())
+    assert fut.done()                         # evaluated in the calling thread
+    assert fut.result().values == b(seed_genome()).values
+    b.close()
+
+
+def test_backend_worker_width_derived_from_cpu_count():
+    """The thread backend's default width comes from os.cpu_count (clamped),
+    never a hard-coded constant, and the chosen width is exposed."""
+    import os
+    b = make_backend("thread", suite=FAST_SUITE, check_correctness=False)
+    assert b.max_workers == max(2, min(8, os.cpu_count() or 2))
+    b.close()
+    b = make_backend("thread", suite=FAST_SUITE, check_correctness=False,
+                     max_workers=3)
+    assert b.max_workers == 3
+    b.close()
+
+
 # -- thread backend: prefetch dedup + owner-failure retry ----------------------
 
 
@@ -191,6 +213,59 @@ def test_owner_failure_propagates_and_waiter_retries():
     batch.close()
 
 
+# -- the unified async surface (submit) ----------------------------------------
+
+
+def test_batch_scorer_submit_dedupes_and_shares_futures():
+    spy = _SpyExecutor(cf.ThreadPoolExecutor(2))
+    base = _GatedScorer(suite=FAST_SUITE)
+    batch = BatchScorer(base, executor=spy)
+    g = seed_genome()
+    f1 = batch.submit(g)
+    assert base.started.wait(10)
+    f2 = batch.submit(g)                       # in flight -> shared future
+    assert f2 is f1
+    assert spy.submitted == 1
+    base.gate.set()
+    assert f1.result(10).values == f2.result(10).values
+    f3 = batch.submit(g)                       # cached -> completed future
+    assert f3.done() and spy.submitted == 1
+    assert f3.result().values == f1.result().values
+    batch.close()
+    spy.inner.shutdown(wait=True)
+
+
+def test_batch_scorer_call_collapses_onto_submitted_future():
+    """The pipelined contract: a proposal-phase submit followed by the
+    harvest's synchronous call must pay exactly one evaluation."""
+    batch = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
+    g = seed_genome().with_(block_q=256)
+    fut = batch.submit(g)
+    sv = batch(g)
+    assert fut.result(10).values == sv.values
+    assert batch.n_evaluations == 1
+    batch.close()
+
+
+def test_batch_scorer_close_idempotent_and_submit_after_close_raises():
+    batch = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
+    batch.close()
+    batch.close()                              # idempotent
+    with pytest.raises(RuntimeError, match="closed BatchScorer"):
+        batch.submit(seed_genome())
+
+
+def test_process_backend_close_idempotent_and_submit_after_close_raises():
+    b = make_backend("process", suite=FAST_SUITE, check_correctness=False,
+                     max_workers=1)
+    sv = b(seed_genome())
+    assert sv.values                           # the pool actually worked
+    b.close()
+    b.close()                                  # idempotent
+    with pytest.raises(RuntimeError, match="closed ProcessBackend"):
+        b.submit(seed_genome())
+
+
 # -- the picklable worker ------------------------------------------------------
 
 
@@ -202,6 +277,29 @@ def test_eval_spec_resolve_and_pickle():
     assert explicit is EvalSpec.resolve(explicit)
     clone = pickle.loads(pickle.dumps(explicit))
     assert clone == explicit                     # frozen + hashable round-trip
+
+
+def test_service_latency_changes_wall_never_values():
+    """service_latency_s models a latency-bound evaluation service: paid
+    evaluations hold the latency, values stay bit-identical, cache hits pay
+    nothing — and the spec carries it to workers."""
+    import time
+    fast = Scorer(suite=FAST_SUITE, check_correctness=False)
+    slow = Scorer(suite=FAST_SUITE, check_correctness=False,
+                  service_latency_s=0.1)
+    g = seed_genome()
+    t0 = time.perf_counter()
+    sv = slow(g)
+    assert time.perf_counter() - t0 >= 0.1
+    assert sv.values == fast(g).values
+    t0 = time.perf_counter()
+    slow(g)                                    # cached: no latency paid
+    assert time.perf_counter() - t0 < 0.1
+    spec = EvalSpec.resolve(FAST_SUITE, check_correctness=False,
+                            service_latency_s=0.1)
+    t0 = time.perf_counter()
+    assert evaluate_genome(g, spec).values == sv.values
+    assert time.perf_counter() - t0 >= 0.1
 
 
 def test_evaluate_genome_matches_scorer():
@@ -321,9 +419,9 @@ def test_registered_suite_becomes_working_island():
 # -- engine x backend ----------------------------------------------------------
 
 
-def _engine_fingerprints(backend):
+def _engine_fingerprints(backend, **kw):
     eng = Archipelago(n_islands=2, suite=FAST_SUITE, migration_interval=2,
-                      seed=11, backend=backend, check_correctness=False)
+                      seed=11, backend=backend, check_correctness=False, **kw)
     try:
         eng.run(max_steps=4)
         return [[(c.genome.key(), round(c.geomean, 9), c.note)
@@ -339,6 +437,22 @@ def test_engine_lineages_identical_across_backends():
         _engine_fingerprints("inline")
 
 
+def test_engine_lineages_identical_pipelined_and_elastic():
+    """The pipelined acceptance gate at the evals layer: propose->submit->
+    harvest stepping — on the thread backend AND on a process backend whose
+    pool is elastic — commits the same lineages as the barrier engine."""
+    base = _engine_fingerprints("thread")
+    assert base == _engine_fingerprints("thread", pipeline=True)
+    assert base == _engine_fingerprints("process", pipeline=True,
+                                        elastic_workers=2)
+
+
 def test_engine_rejects_unknown_backend():
     with pytest.raises(ValueError, match="unknown eval backend"):
         Archipelago(n_islands=2, suite=FAST_SUITE, backend="quantum")
+
+
+def test_engine_rejects_elastic_without_process_backend():
+    with pytest.raises(ValueError, match="elastic_workers requires"):
+        Archipelago(n_islands=2, suite=FAST_SUITE, backend="thread",
+                    elastic_workers=4)

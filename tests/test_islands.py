@@ -278,6 +278,120 @@ def test_prefetch_is_pure_cache_warming():
     assert rep_on.cache_hits > 0
 
 
+# -- pipelined stepping (propose -> submit -> harvest) -----------------------------
+
+
+def test_pipelined_lineages_identical_to_barrier():
+    """The tentpole gate: pipelined stepping must commit the same lineages,
+    in the same order, as the step-blocking barrier engine — completion
+    order of the speculative futures must never show."""
+    eng_b, rep_b = _run_engine(check_correctness=False)
+    eng_p, rep_p = _run_engine(check_correctness=False, pipeline=True)
+    for a, b in zip(eng_b.islands, eng_p.islands):
+        assert _lineage_fingerprint(a.lineage) == _lineage_fingerprint(b.lineage)
+    assert rep_p.proposed > 0                  # speculation actually happened
+    assert rep_b.proposed == 0                 # barrier mode never proposes
+    assert rep_p.eval_workers                  # width exposed in the report
+
+
+def test_pipelined_with_budget_identical_and_budget_respected():
+    """The allocator only resizes speculation caps — lineages stay put, and
+    the per-epoch caps actually sum to at most the shared budget."""
+    eng_b, _ = _run_engine(check_correctness=False)
+    eng_p, rep = _run_engine(check_correctness=False, pipeline=True,
+                             prefetch_budget=4)
+    for a, b in zip(eng_b.islands, eng_p.islands):
+        assert _lineage_fingerprint(a.lineage) == _lineage_fingerprint(b.lineage)
+    assert sum(isl.prefetch_k for isl in eng_p.islands) <= 4
+
+
+def test_zero_allocation_means_zero_speculation():
+    """An island the allocator floors to 0 must submit NOTHING — an
+    allocated zero is a real cap, never 'uncapped' (a 0-budget island
+    proposing its full walk would bust the shared budget on its own)."""
+    sc = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
+    from repro.core.variation import make_operator
+    isl = Island("i", sc, operator=make_operator("avo"))
+    isl.step()                                 # bootstrap: candidates exist now
+    isl.prefetch_cap = 0                       # allocator assigned zero budget
+    assert isl.propose() == 0
+    assert isl.proposed == 0
+    isl.prefetch_cap = 2                       # a real budget caps the batch
+    assert isl.propose() <= 2
+    sc.close()
+
+
+def test_propose_is_pure_speculation():
+    """propose() must not advance the search: calling it (even repeatedly)
+    before each step leaves the lineage identical to never calling it."""
+    sc_a = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
+    sc_b = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
+    from repro.core.variation import make_operator
+    plain = Island("plain", sc_a, operator=make_operator("avo"))
+    specd = Island("specd", sc_b, operator=make_operator("avo"))
+    for _ in range(4):
+        plain.step()
+        specd.propose()
+        specd.propose()                        # double speculation is harmless
+        specd.harvest()
+    assert _lineage_fingerprint(plain.lineage) == \
+        _lineage_fingerprint(specd.lineage)
+    assert specd.proposed > 0
+    assert specd.supervisor.state() == plain.supervisor.state()
+    sc_a.close(); sc_b.close()
+
+
+def test_propose_noop_on_inline_backend():
+    from repro.core import make_backend
+    isl = Island("i", make_backend("inline", suite=FAST_SUITE,
+                                   check_correctness=False))
+    isl.step()                                 # bootstrap commit
+    assert isl.propose() == 0                  # nothing to overlap with
+
+
+def test_gain_profile_peek_only():
+    """gain_profile must never pay an evaluation: uncached best -> empty."""
+    sc = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
+    isl = Island("i", sc)
+    assert isl.gain_profile() == []            # no lineage yet
+    isl.step()
+    paid = sc.n_evaluations
+    prof = isl.gain_profile()
+    assert prof == sorted(prof, reverse=True)  # descending gains
+    assert sc.n_evaluations == paid            # peeked, not paid
+    # simulate a resumed run whose cache is cold: still never pays
+    sc.base.cache.clear()
+    assert isl.gain_profile() == []
+    assert sc.n_evaluations == paid
+    sc.close()
+
+
+# -- the speculative-prefetch budget allocator -------------------------------------
+
+
+def test_prefetch_allocator_depth_follows_gain_profile():
+    from repro.core import PrefetchAllocator
+    al = PrefetchAllocator(16)
+    assert al.desired_depth([]) == 1           # nothing known: the minimum
+    assert al.desired_depth([0.9, 0.5]) == 1   # front-loaded: top edit commits
+    deep = al.desired_depth([0.05] * 12)
+    assert deep > al.desired_depth([0.4, 0.4, 0.4])
+
+
+def test_prefetch_allocator_apportionment_deterministic_and_bounded():
+    from repro.core import PrefetchAllocator
+    al = PrefetchAllocator(6)
+    profiles = {"a": [0.9], "b": [0.05] * 10, "c": []}
+    alloc = al.allocate(profiles)
+    assert sum(alloc.values()) <= 6
+    assert alloc == al.allocate(profiles)      # pure function of the profiles
+    assert alloc["b"] >= alloc["a"]            # flat profile -> deeper batch
+    under = al.allocate({"a": [0.9], "b": [0.9]})
+    assert under == {"a": 1, "b": 1}           # under budget: desired depths
+    with pytest.raises(ValueError, match="prefetch budget"):
+        PrefetchAllocator(0)
+
+
 def test_toolbelt_evaluate_many_batches_through_scorer():
     batch = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
     tools = Toolbelt(batch, KnowledgeBase(), Lineage())
