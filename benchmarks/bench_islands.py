@@ -37,10 +37,17 @@ pipelined lineages are bit-identical to the barrier engine's.  JSON
 summaries (results/bench/islands.json + eval_backends.json) are written
 for CI artifact upload.
 
+The cross-host evaluation-service legs race a ``ServiceBackend`` over N
+localhost socket workers against thread/process on the cold batch, and a
+service-pipelined engine against the inline barrier on the latency-bound
+leg (both identity-gated; ``--service-smoke`` runs ONLY these and writes
+results/bench/eval_service.json — the CI service-smoke step).
+
   PYTHONPATH=src python benchmarks/bench_islands.py
   PYTHONPATH=src python benchmarks/bench_islands.py --steps 48 --islands 4
   PYTHONPATH=src python benchmarks/bench_islands.py --topologies ring,adaptive
   PYTHONPATH=src python benchmarks/bench_islands.py --elastic-workers 8
+  PYTHONPATH=src python benchmarks/bench_islands.py --service-smoke
 """
 from __future__ import annotations
 
@@ -49,6 +56,7 @@ import os
 import sys
 import tempfile
 import time
+from typing import Optional
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
@@ -57,8 +65,8 @@ from common import chart, emit, emit_json, geomean  # noqa: E402
 
 from repro.core import (ContinuousEvolution, ElasticProcessPool, EvalSpec,
                         IslandEvolution, KernelGenome, ProcessBackend, Scorer,
-                        make_backend, scenario_specs, suite_by_name,
-                        topology_names)  # noqa: E402
+                        ServiceBackend, make_backend, scenario_specs,
+                        suite_by_name, topology_names)  # noqa: E402
 
 UNION = "mha+gqa+decode"
 
@@ -84,14 +92,15 @@ def cold_candidates(n):
     return out
 
 
-def run_backend_race(n_candidates):
-    """Thread vs process wall-clock on a cold candidate batch.
+def run_backend_race(n_candidates, service_workers: int = 0):
+    """Thread vs process (vs the socket service) wall-clock on a cold batch.
 
     Runs FIRST, while this process has never touched jax: the process
     backend's workers then fork cheaply from a jax-clean parent, and the
     thread backend's in-process tracing below is equally cold — neither
     side inherits the other's jax trace caches (workers are separate
-    processes either way)."""
+    processes either way).  The service side spawns fresh interpreters over
+    sockets, so it is cold by construction and raced last."""
     suite = [c for c in suite_by_name("mha") if c.seq_len == 4096]
     genomes = cold_candidates(n_candidates)
     print(f"cold batch: {len(genomes)} unique candidates, "
@@ -99,7 +108,8 @@ def run_backend_race(n_candidates):
 
     # each side is timed from backend construction through the last result:
     # the process side pays pool startup + per-worker warm initialization in
-    # its window, the thread side pays its proxy-input build in its own
+    # its window, the thread side pays its proxy-input build in its own, the
+    # service side pays worker spawn + registration + per-worker warmup
     t0 = time.perf_counter()
     proc = make_backend("process", suite=suite)
     res_p = proc.map(genomes)
@@ -116,28 +126,50 @@ def run_backend_race(n_candidates):
     print(f"thread  backend: {t_thread:.1f}s "
           f"({thread.n_evaluations} paid evaluations)")
 
+    t_svc, svc_evals, svc_slots, res_s = None, None, None, None
+    if service_workers:
+        t0 = time.perf_counter()
+        svc = make_backend("service", suite=suite, workers=service_workers)
+        res_s = svc.map(genomes)
+        t_svc = time.perf_counter() - t0
+        svc_evals, svc_slots = svc.n_evaluations, svc.max_workers
+        svc.close()
+        print(f"service backend: {t_svc:.1f}s "
+              f"({svc_evals} paid evaluations over {service_workers} "
+              f"socket workers)")
+
     identical = all(a.values == b.values and a.correct == b.correct
                     for a, b in zip(res_p, res_t))
+    if res_s is not None:
+        identical = identical and all(
+            a.values == b.values and a.correct == b.correct
+            and a.failure == b.failure for a, b in zip(res_s, res_p))
     speedup = t_thread / t_proc if t_proc > 0 else 0.0
     print(f"bit-identical score vectors: {'OK' if identical else 'MISMATCH'}")
     print(f"process-over-thread speedup: {speedup:.2f}x "
           f"({os.cpu_count()} cores visible; on a shares-throttled or busy "
           f"host the measured ratio is contention-sensitive)")
 
-    emit("eval_backends",
-         ["backend", "wall_s", "candidates", "evaluations", "workers"],
-         [["process", f"{t_proc:.2f}", len(genomes), proc.n_evaluations,
-           proc.max_workers],
-          ["thread", f"{t_thread:.2f}", len(genomes), thread.n_evaluations,
-           thread.max_workers]])
+    rows = [["process", f"{t_proc:.2f}", len(genomes), proc.n_evaluations,
+             proc.max_workers],
+            ["thread", f"{t_thread:.2f}", len(genomes), thread.n_evaluations,
+             thread.max_workers]]
+    bars = [("thread", t_thread), ("process", t_proc)]
+    if t_svc is not None:
+        rows.append(["service", f"{t_svc:.2f}", len(genomes), svc_evals,
+                     svc_slots])
+        bars.append(("service", t_svc))
     race = dict(speedup=speedup, identical=identical,
-                t_thread=t_thread, t_proc=t_proc,
+                t_thread=t_thread, t_proc=t_proc, t_service=t_svc,
                 workers_thread=thread.max_workers,
                 workers_process=proc.max_workers,
+                workers_service=service_workers or None,
                 candidates=len(genomes), cores_visible=os.cpu_count())
+    emit("eval_backends",
+         ["backend", "wall_s", "candidates", "evaluations", "workers"],
+         rows)
     emit_json("eval_backends", race)
-    chart("cold-batch wall-clock (s, lower is better)",
-          [("thread", t_thread), ("process", t_proc)])
+    chart("cold-batch wall-clock (s, lower is better)", bars)
     return race
 
 
@@ -168,7 +200,9 @@ def run_serial(steps: int):
 LATENCY_S = 0.25     # modelled per-evaluation service latency (seconds)
 
 
-def run_latency_race(steps: int, cap: int, latency_s: float = LATENCY_S):
+def run_latency_race(steps: int, cap: Optional[int] = None,
+                     latency_s: float = LATENCY_S,
+                     service_workers: int = 0, service_slots: int = 4):
     """The regime the pipeline is FOR — a latency-bound evaluation service.
 
     The paper's f is a GPU verification run the agent keeps proposing
@@ -185,20 +219,28 @@ def run_latency_race(steps: int, cap: int, latency_s: float = LATENCY_S):
                  latencies concurrently (the pool grows under the proposal
                  burst — sleeping workers are free), the harvest commits in
                  the identical order.
+      service    same pipelined lineage, but the candidates fan out over the
+                 REAL cross-host service: ``service_workers`` localhost
+                 socket workers x ``service_slots`` concurrent evaluations
+                 each, holding the latencies on actual remote processes.
 
-    Returns both sides + fingerprints for the identity gate."""
+    Returns every raced side + fingerprints for the identity gate; 'service'
+    only when ``service_workers`` > 0, 'pipelined' only when ``cap``."""
     suite = suite_by_name(UNION)
     spec = EvalSpec(tuple(suite), check_correctness=False,
                     service_latency_s=latency_s)
 
-    def run_one(pipeline: bool):
-        if pipeline:
+    def run_one(mode: str):
+        pool = None
+        if mode == "pipelined":
             pool = ElasticProcessPool((spec,), min_workers=1, max_workers=cap)
             backend = ProcessBackend(spec=spec, executor=pool)
+        elif mode == "service":
+            backend = ServiceBackend(spec=spec, workers=service_workers,
+                                     worker_slots=service_slots)
         else:
-            pool = None
             backend = make_backend("inline", suite=spec)
-        evo = ContinuousEvolution(scorer=backend, pipeline=pipeline)
+        evo = ContinuousEvolution(scorer=backend, pipeline=mode != "barrier")
         if pool is not None:
             pool.prestart()  # measure stepping, not process spin-up
         timeline = []
@@ -217,14 +259,20 @@ def run_latency_race(steps: int, cap: int, latency_s: float = LATENCY_S):
                    commits=len(evo.lineage),
                    proposed=evo.island.proposed,
                    fingerprint=_lineage_fingerprint(evo.lineage),
-                   pool_stats=pool.stats() if pool is not None else None)
-        evo.close()
+                   pool_stats=(pool.stats() if pool is not None else
+                               backend.coordinator.stats()
+                               if mode == "service" else None))
+        evo.close()      # a service backend tears down coordinator + workers
         if pool is not None:
             pool.shutdown(wait=True, cancel_futures=True)
         return out
 
-    return dict(barrier=run_one(False), pipelined=run_one(True),
-                latency_s=latency_s)
+    out = dict(barrier=run_one("barrier"), latency_s=latency_s)
+    if cap:
+        out["pipelined"] = run_one("pipelined")
+    if service_workers:
+        out["service"] = run_one("service")
+    return out
 
 
 def run_islands(steps_per_island: int, n_islands: int, seed: int,
@@ -351,6 +399,73 @@ def check_topology_continuation(seed: int, topology: str,
     return uninterrupted == resumed
 
 
+def service_smoke(args) -> int:
+    """The CI ``service-smoke`` leg: spin up localhost socket workers, race
+    the cross-host service on a cold batch and on the latency-bound
+    pipelined engine, and GATE bit-identity both times — inline-vs-service
+    score vectors and barrier-vs-service-pipelined lineages.  Wall-clock is
+    recorded (results/bench/eval_service.json) but not gated: shared runners
+    are contention-noisy; identity never is."""
+    n_workers = max(2, args.service_workers)
+    n_cold = max(4, min(args.cold_batch or 8, 16))
+    suite = [c for c in suite_by_name("mha") if c.seq_len == 4096]
+    genomes = cold_candidates(n_cold)
+    print(f"== service smoke: cold batch of {n_cold}, {n_workers} localhost "
+          f"socket workers, correctness ON ==")
+    t0 = time.perf_counter()
+    svc = make_backend("service", suite=suite, workers=n_workers)
+    got = svc.map(genomes)
+    t_svc = time.perf_counter() - t0
+    coord = svc.coordinator.stats()
+    svc.close()
+    t0 = time.perf_counter()
+    want = make_backend("inline", suite=suite).map(genomes)
+    t_inline = time.perf_counter() - t0
+    cold_identical = all(
+        a.values == b.values and a.correct == b.correct
+        and a.failure == b.failure for a, b in zip(got, want))
+    print(f"service {t_svc:.1f}s vs inline {t_inline:.1f}s; "
+          f"bit-identical: {'OK' if cold_identical else 'MISMATCH'}; "
+          f"registry events: {[e['event'] for e in coord['events']]}")
+
+    print(f"\n== latency-bound race: barrier (inline, serial latencies) vs "
+          f"pipelined over the socket service ({n_workers} workers x 4 "
+          f"slots) ==")
+    lat = run_latency_race(args.steps, cap=None,
+                           service_workers=n_workers)
+    bar, sv = lat["barrier"], lat["service"]
+    lineage_identical = bar["fingerprint"] == sv["fingerprint"]
+    speedup = bar["wall"] / sv["wall"] if sv["wall"] else None
+    print(f"barrier : {bar['wall']:.1f}s wall, {bar['evaluations']} paid "
+          f"latencies, {bar['commits']} commits")
+    print(f"service : {sv['wall']:.1f}s wall, {sv['evaluations']} paid "
+          f"latencies, {sv['commits']} commits, {sv['proposed']} proposals, "
+          f"{sv['pool_stats']['workers']} workers / "
+          f"{sv['pool_stats']['total_slots']} slots")
+    print(f"service-pipelined-over-barrier speedup: {speedup:.2f}x; "
+          f"lineage bit-identical: {'OK' if lineage_identical else 'MISMATCH'}")
+
+    ok = cold_identical and lineage_identical
+    emit_json("eval_service", {
+        "workers": n_workers,
+        "cold_batch": {"candidates": n_cold, "service_wall_s": t_svc,
+                       "inline_wall_s": t_inline,
+                       "coordinator": coord},
+        "latency_bound": {
+            "latency_s": lat["latency_s"],
+            "barrier_wall_s": bar["wall"], "service_wall_s": sv["wall"],
+            "barrier_evaluations": bar["evaluations"],
+            "service_evaluations": sv["evaluations"],
+            "proposed": sv["proposed"],
+            "speedup_vs_barrier": speedup,
+            "coordinator": sv["pool_stats"]},
+        "gates": {"cold_bit_identical": cold_identical,
+                  "lineage_identical": lineage_identical, "passed": ok},
+    })
+    print("service smoke: " + ("PASSED" if ok else "FAILED"))
+    return 0 if ok else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=40,
@@ -374,6 +489,15 @@ def main(argv=None):
     ap.add_argument("--elastic-workers", type=int, default=0,
                     help="worker cap for the pipelined race's elastic process "
                          "pool (default: the visible CPU count)")
+    ap.add_argument("--service-workers", type=int, default=0,
+                    help="localhost socket workers for the cross-host "
+                         "evaluation-service legs (0 — the default — skips "
+                         "them; CI covers the service through its dedicated "
+                         "--service-smoke step)")
+    ap.add_argument("--service-smoke", action="store_true",
+                    help="run ONLY the service legs + their bit-identity "
+                         "gates and write results/bench/eval_service.json "
+                         "(the CI service-smoke step)")
     ap.add_argument("--gate", choices=("all", "deterministic"), default="all",
                     help="what the exit code enforces: 'deterministic' gates "
                          "resume identity, exact resumed-vs-uninterrupted "
@@ -382,6 +506,8 @@ def main(argv=None):
                          "islands-beat-serial wall-clock race "
                          "(contention-sensitive on shared runners)")
     args = ap.parse_args(argv)
+    if args.service_smoke:
+        return service_smoke(args)
     topologies = [t.strip() for t in args.topologies.split(",") if t.strip()]
     unknown = [t for t in topologies if t not in topology_names()]
     if unknown:
@@ -389,9 +515,11 @@ def main(argv=None):
 
     race = None
     if args.cold_batch:
-        print(f"== eval-backend race: thread vs process, "
-              f"{args.cold_batch} cold candidates ==")
-        race = run_backend_race(args.cold_batch)
+        print(f"== eval-backend race: thread vs process"
+              + (" vs service" if args.service_workers else "")
+              + f", {args.cold_batch} cold candidates ==")
+        race = run_backend_race(args.cold_batch,
+                                service_workers=args.service_workers)
         print()
 
     print(f"== serial generalist on '{UNION}' "
@@ -446,6 +574,7 @@ def main(argv=None):
     # the window; the thread rows above remain for cross-substrate context.)
     pipe, pipeline_ok, base_topo = None, None, None
     serial_pipe_identical = None
+    service_identical, service_speedup = None, None
     if args.pipeline_race:
         base_topo = "ring" if "ring" in topologies else topologies[0]
         cap = args.elastic_workers or (os.cpu_count() or 2)
@@ -461,7 +590,8 @@ def main(argv=None):
               f"{LATENCY_S:.2f}s service latency per paid evaluation — "
               f"barrier (inline, serial latencies) vs pipelined (elastic "
               f"pool <= {lat_cap} sleeping workers, overlapped latencies) ==")
-        lat = run_latency_race(args.steps, lat_cap)
+        lat = run_latency_race(args.steps, lat_cap,
+                               service_workers=args.service_workers)
         bar, pi = lat["barrier"], lat["pipelined"]
         serial_pipe_identical = bar["fingerprint"] == pi["fingerprint"]
         serial_speedup = (bar["wall"] / pi["wall"]) if pi["wall"] else None
@@ -474,7 +604,21 @@ def main(argv=None):
         print(f"pipelined-over-barrier speedup, latency-bound service: "
               f"{serial_speedup:.2f}x; lineage bit-identical: "
               f"{'OK' if serial_pipe_identical else 'MISMATCH'}")
-        for label, side in (("lat-barrier", bar), ("lat-pipelined", pi)):
+        svc = lat.get("service")
+        if svc is not None:
+            service_identical = bar["fingerprint"] == svc["fingerprint"]
+            service_speedup = (bar["wall"] / svc["wall"]) if svc["wall"] \
+                else None
+            print(f"service : {svc['wall']:.1f}s wall, "
+                  f"{svc['evaluations']} paid latencies, "
+                  f"{svc['commits']} commits, {svc['proposed']} proposals "
+                  f"over {svc['pool_stats']['workers']} socket workers / "
+                  f"{svc['pool_stats']['total_slots']} slots "
+                  f"({service_speedup:.2f}x vs barrier); lineage "
+                  f"bit-identical: "
+                  f"{'OK' if service_identical else 'MISMATCH'}")
+        for label, side in (("lat-barrier", bar), ("lat-pipelined", pi)) + \
+                ((("lat-service", svc),) if svc is not None else ()):
             rows.append([label, "-", f"{side['final_coverage']:.2f}", "",
                          f"{side['wall']:.2f}", side["commits"],
                          f"{side['commits'] / side['wall']:.3f}",
@@ -547,7 +691,15 @@ def main(argv=None):
                         proposed=pi["proposed"],
                         pool_stats=pi["pool_stats"],
                         speedup_vs_barrier=serial_speedup,
-                        lineage_identical=serial_pipe_identical),
+                        lineage_identical=serial_pipe_identical,
+                        service=None if svc is None else dict(
+                            workers=args.service_workers,
+                            wall_s=svc["wall"],
+                            evaluations=svc["evaluations"],
+                            proposed=svc["proposed"],
+                            coordinator=svc["pool_stats"],
+                            speedup_vs_barrier=service_speedup,
+                            lineage_identical=service_identical)),
                     barrier=sides["barrier"], pipelined=sides["pipelined"],
                     thread_barrier_time_to_target_s=t_thread,
                     speedup_vs_barrier=speedup)
@@ -602,7 +754,8 @@ def main(argv=None):
     ok = all(resume_ok.values()) and all(continuation_ok.values()) \
         and (race is None or race["identical"]) \
         and (pipeline_ok is None or pipeline_ok) \
-        and (serial_pipe_identical is None or serial_pipe_identical)
+        and (serial_pipe_identical is None or serial_pipe_identical) \
+        and (service_identical is None or service_identical)
     if args.gate == "all":
         # the wall-clock races are host-contention-sensitive; gated only
         # under --gate all (the local default — CI uses --gate deterministic)
@@ -625,6 +778,7 @@ def main(argv=None):
                       None if race is None else race["identical"],
                   "pipeline_lineage_identity": pipeline_ok,
                   "pipeline_serial_lineage_identity": serial_pipe_identical,
+                  "service_lineage_identity": service_identical,
                   "gate_mode": args.gate, "passed": ok},
         "backend_race": None if race is None else
             {k: race[k] for k in ("speedup", "identical", "t_thread",

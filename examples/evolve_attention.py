@@ -19,6 +19,15 @@ prefetch budget:
   PYTHONPATH=src python examples/evolve_attention.py --islands 4 --pipeline
   PYTHONPATH=src python examples/evolve_attention.py --islands 4 --pipeline \
       --eval-backend process --elastic-workers 8 --prefetch-budget 16
+
+Cross-host distributed scoring (loopback by default; bind --listen
+0.0.0.0:PORT and workers on other hosts join with `python -m
+repro.core.evals.service_worker --connect HOST:PORT`, and top-k migrant
+payloads ride the same run):
+  PYTHONPATH=src python examples/evolve_attention.py --islands 4 \
+      --eval-backend service --workers 2 --listen 0.0.0.0:5123
+  PYTHONPATH=src python examples/evolve_attention.py --islands 4 \
+      --scenario-sweep --migrant-policy top-k --migrant-k 3
 """
 import argparse
 import os
@@ -46,9 +55,16 @@ def run_serial(args):
         suite, path = mha_suite(), os.path.join(OUT, "lineage_mha.json")
         operator = AgenticVariationOperator()
 
+    backend_kw = ({"workers": args.workers, "listen": args.listen}
+                  if args.eval_backend == "service" else {})
     evo = ContinuousEvolution(
-        scorer=make_backend(args.eval_backend, suite=suite),
+        scorer=make_backend(args.eval_backend, suite=suite, **backend_kw),
         operator=operator, persist_path=path, pipeline=args.pipeline)
+    if args.eval_backend == "service":
+        host, port = evo.scorer.address
+        print(f"evaluation service: {args.workers} local workers; more can "
+              f"join with  python -m repro.core.evals.service_worker "
+              f"--connect {host}:{port}")
     rep = evo.run(max_steps=args.max_steps, target_commits=args.commits,
                   verbose=True)
 
@@ -71,7 +87,12 @@ def run_islands(args):
                      backend=args.eval_backend, topology=args.topology,
                      pipeline=args.pipeline,
                      elastic_workers=args.elastic_workers,
-                     prefetch_budget=args.prefetch_budget)
+                     prefetch_budget=args.prefetch_budget,
+                     migrant_policy=args.migrant_policy,
+                     migrant_k=args.migrant_k)
+    if args.eval_backend == "service":
+        engine_kw["service_workers"] = args.workers
+        engine_kw["service_listen"] = args.listen
     mode = "pipelined" if args.pipeline else "barrier"
     if args.scenario_sweep:
         path = os.path.join(OUT, "archipelago_sweep.json")
@@ -97,9 +118,16 @@ def run_islands(args):
                      if args.pipeline else ""))
     if rep.eval_pool:
         p = rep.eval_pool
-        print(f"elastic pool: {p['workers']} workers now (peak {p['peak_workers']}, "
-              f"grew {p['grown']}x, shrank {p['shrunk']}x over "
-              f"{p['tasks_completed']} tasks)")
+        if "grown" in p:                   # elastic process pool
+            print(f"elastic pool: {p['workers']} workers now "
+                  f"(peak {p['peak_workers']}, grew {p['grown']}x, shrank "
+                  f"{p['shrunk']}x over {p['tasks_completed']} tasks)")
+        else:                              # service coordinator registry
+            print(f"eval service: {p['workers']} workers / "
+                  f"{p['total_slots']} slots (peak {p['peak_workers']}, "
+                  f"{p['joined']} joined / {p['left']} left, "
+                  f"{p['tasks_requeued']} requeued over "
+                  f"{p['tasks_completed']} tasks)")
     if engine.migration_stats.edges:
         rates = ", ".join(
             f"{engine.islands[s].name}->{engine.islands[d].name} "
@@ -153,12 +181,34 @@ def main():
                          "island), all-to-all, or adaptive (acceptance-rate "
                          "EMAs prune dead edges and trial new ones on a "
                          "seeded schedule; exactly resumable)")
-    ap.add_argument("--eval-backend", choices=("inline", "thread", "process"),
+    ap.add_argument("--eval-backend",
+                    choices=("inline", "thread", "process", "service"),
                     default=None,
                     help="evaluation service: inline (serial default), thread "
-                         "(islands default), or process — a warm worker-process "
+                         "(islands default), process — a warm worker-process "
                          "pool for real multi-core scaling of the correctness "
-                         "checks.  Bit-identical results; wall-clock only")
+                         "checks — or service: cross-host scoring over socket "
+                         "workers (--workers local ones; remote hosts join "
+                         "with service_worker --connect).  Bit-identical "
+                         "results; wall-clock only")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="localhost worker processes to spawn for "
+                         "--eval-backend service (0 = wait for external "
+                         "workers to connect)")
+    ap.add_argument("--listen", default="127.0.0.1:0",
+                    help="bind address for the service coordinator; the "
+                         "loopback default serves single-host fleets — use "
+                         "0.0.0.0:PORT so workers on other hosts can join "
+                         "(point them at this host's reachable name/IP)")
+    ap.add_argument("--migrant-policy", choices=("best", "top-k"),
+                    default="best",
+                    help="what a donor island sends per migration edge: its "
+                         "single best commit (default, the historical "
+                         "behaviour) or its top-k distinct genomes — the "
+                         "recipient re-scores all and adopts the best "
+                         "survivor on its own suite")
+    ap.add_argument("--migrant-k", type=int, default=3,
+                    help="k for --migrant-policy top-k")
     args = ap.parse_args()
     if args.eval_backend is None:
         args.eval_backend = ("thread" if args.islands or args.scenario_sweep

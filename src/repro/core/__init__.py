@@ -1,9 +1,11 @@
 from repro.core.agent import AgentPolicy, Directive, ScriptedAgent, VariationResult
 from repro.core.evals import (BACKENDS, BatchScorer, ElasticProcessPool,
-                              EvalBackend, EvalSpec, InlineBackend,
-                              ProcessBackend, ScoreCache, ScoreVector, Scorer,
+                              EvalBackend, EvalCoordinator, EvalSpec,
+                              InlineBackend, ProcessBackend, ScoreCache,
+                              ScoreVector, Scorer, ServiceBackend,
                               ThreadBackend, default_worker_count,
-                              evaluate_genome, make_backend)
+                              evaluate_genome, make_backend,
+                              spawn_local_workers, stop_local_workers)
 from repro.core.evolution import ContinuousEvolution, EvolutionReport
 from repro.core.islands import (Archipelago, Island, IslandEvolution,
                                 IslandReport, IslandSpec, PrefetchAllocator,
@@ -26,9 +28,11 @@ from repro.core.variation import (AgenticVariationOperator, PlanExecuteSummarize
 
 __all__ = [
     "AgentPolicy", "Directive", "ScriptedAgent", "VariationResult",
-    "BACKENDS", "BatchScorer", "ElasticProcessPool", "EvalBackend", "EvalSpec",
-    "InlineBackend", "ProcessBackend", "ScoreCache", "ScoreVector", "Scorer",
-    "ThreadBackend", "default_worker_count", "evaluate_genome", "make_backend",
+    "BACKENDS", "BatchScorer", "ElasticProcessPool", "EvalBackend",
+    "EvalCoordinator", "EvalSpec", "InlineBackend", "ProcessBackend",
+    "ScoreCache", "ScoreVector", "Scorer", "ServiceBackend", "ThreadBackend",
+    "default_worker_count", "evaluate_genome", "make_backend",
+    "spawn_local_workers", "stop_local_workers",
     "ContinuousEvolution", "EvolutionReport", "KnowledgeBase",
     "Archipelago", "Island", "IslandEvolution", "IslandReport", "IslandSpec",
     "PrefetchAllocator", "default_specs", "scenario_specs",

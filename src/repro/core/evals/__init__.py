@@ -1,12 +1,16 @@
 """The evaluation service: scoring function, cache, and parallel backends.
 
 Layout:
-  vector.py    ScoreVector — the value of f(x), picklable
-  cache.py     ScoreCache — the explicit memo API every backend shares
-  scorer.py    Scorer / InlineBackend — correctness + perfmodel, in-process
-  worker.py    evaluate_genome / EvalSpec — the pure picklable worker fn
-  backends.py  EvalBackend protocol; thread (BatchScorer) + process backends
-  elastic.py   ElasticProcessPool — worker count follows queue depth
+  vector.py          ScoreVector — the value of f(x), picklable
+  cache.py           ScoreCache — the explicit memo API every backend shares
+  scorer.py          Scorer / InlineBackend — correctness + perfmodel, in-process
+  worker.py          evaluate_genome / EvalSpec — the pure picklable worker fn
+  backends.py        EvalBackend protocol; thread (BatchScorer) + process backends
+  elastic.py         ElasticProcessPool — worker count follows queue depth
+  protocol.py        length-prefixed socket frames (spec+genome out, scores back)
+  service.py         EvalCoordinator + ServiceBackend — cross-host scoring with
+                     a live worker registry, heartbeats, fault-tolerant requeue
+  service_worker.py  the remote worker entrypoint (python -m ... --connect)
 
 Every backend exposes the same sync (``__call__``/``map``) and async
 (``submit`` -> Future, with per-genome dedup) surfaces; the pipelined island
@@ -20,12 +24,16 @@ from repro.core.evals.backends import (BACKENDS, BatchScorer, EvalBackend,
 from repro.core.evals.elastic import ElasticProcessPool
 from repro.core.evals.cache import ScoreCache
 from repro.core.evals.scorer import CORRECTNESS_TOL, InlineBackend, Scorer
+from repro.core.evals.service import (EvalCoordinator, ServiceBackend,
+                                      spawn_local_workers, stop_local_workers)
 from repro.core.evals.vector import ScoreVector
 from repro.core.evals.worker import EvalSpec, evaluate_genome, warm_worker
 
 __all__ = [
     "BACKENDS", "BatchScorer", "CORRECTNESS_TOL", "ElasticProcessPool",
-    "EvalBackend", "EvalSpec", "InlineBackend", "ProcessBackend", "ScoreCache",
-    "ScoreVector", "Scorer", "ThreadBackend", "default_worker_count",
-    "evaluate_genome", "make_backend", "make_process_executor", "warm_worker",
+    "EvalBackend", "EvalCoordinator", "EvalSpec", "InlineBackend",
+    "ProcessBackend", "ScoreCache", "ScoreVector", "Scorer", "ServiceBackend",
+    "ThreadBackend", "default_worker_count", "evaluate_genome", "make_backend",
+    "make_process_executor", "spawn_local_workers", "stop_local_workers",
+    "warm_worker",
 ]

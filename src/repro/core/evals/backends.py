@@ -39,7 +39,7 @@ from repro.core.evals.worker import (EvalSpec, _prestart_noop, evaluate_genome,
 from repro.core.perfmodel import BenchConfig
 from repro.core.search_space import KernelGenome
 
-BACKENDS = ("inline", "thread", "process")
+BACKENDS = ("inline", "thread", "process", "service")
 
 
 def default_worker_count(max_workers: Optional[int] = None,
@@ -285,40 +285,35 @@ def make_process_executor(specs: Sequence[EvalSpec],
     return executor
 
 
-class ProcessBackend:
-    """The ``process`` backend: real multi-core scaling for the GIL-bound
-    correctness checks.
-
-    The parent keeps the shared :class:`ScoreCache` and the in-flight future
-    table; workers are pure (see ``worker.py``) and rebuild proxy inputs
-    deterministically from the spec, so results are bit-identical to the
-    inline path.  Concurrent requests for one genome share a single future;
-    a failed evaluation is evicted from the in-flight table (never cached),
-    so callers can retry.
-    """
+class ParentCacheBackend:
+    """The shared parent-side contract for backends whose evaluations run
+    somewhere else (worker processes, remote hosts): the parent keeps the
+    shared :class:`ScoreCache` and the in-flight future table, concurrent
+    requests for one genome collapse onto a single dispatch, a failed
+    evaluation is evicted from the in-flight table (never cached) so
+    callers can retry, and ``close`` is idempotent.  Subclasses say where an
+    evaluation actually goes (:meth:`_dispatch_eval`) and what ``close``
+    tears down (:meth:`_close_resources`) — the caching/dedup semantics must
+    never diverge between them."""
 
     overlapping = True
 
-    def __init__(self, suite: Union[str, Sequence[BenchConfig], None] = None, *,
-                 spec: Optional[EvalSpec] = None,
-                 check_correctness: bool = True, rng_seed: int = 0,
-                 max_workers: Optional[int] = None, mp_context=None,
-                 cache: Optional[ScoreCache] = None,
-                 executor: Optional[concurrent.futures.Executor] = None):
-        self.spec = spec if spec is not None else EvalSpec.resolve(
-            suite, check_correctness, rng_seed)
+    def __init__(self, spec: EvalSpec, cache: Optional[ScoreCache] = None):
+        self.spec = spec
         self.cache = cache if cache is not None else ScoreCache()
         self._lock = threading.Lock()
         self._futures: dict[str, concurrent.futures.Future] = {}
         self._paid = 0
         self._closed = False
-        self._own_executor = executor is None
-        self._executor = executor or make_process_executor(
-            (self.spec,), max_workers=max_workers, mp_context=mp_context)
-        self.max_workers = getattr(self._executor, "_max_workers", None) \
-            or max_workers or (os.cpu_count() or 2)
         self._baseline_scorer = Scorer(suite=list(self.spec.suite),
                                        check_correctness=False)
+
+    # -- what a subclass provides ---------------------------------------------------
+    def _dispatch_eval(self, genome: KernelGenome) -> concurrent.futures.Future:
+        raise NotImplementedError
+
+    def _close_resources(self) -> None:
+        raise NotImplementedError
 
     # -- accounting ---------------------------------------------------------------
     @property
@@ -350,7 +345,8 @@ class ProcessBackend:
         key = genome.key()
         with self._lock:
             if self._closed:
-                raise RuntimeError("submit on closed ProcessBackend")
+                raise RuntimeError(
+                    f"submit on closed {type(self).__name__}")
             sv = self.cache.get(key)
             if sv is not None:
                 done: concurrent.futures.Future = concurrent.futures.Future()
@@ -359,7 +355,7 @@ class ProcessBackend:
             fut = self._futures.get(key)
             if fut is not None:
                 return fut
-            fut = self._executor.submit(evaluate_genome, genome, self.spec)
+            fut = self._dispatch_eval(genome)
             self._paid += 1
             self._futures[key] = fut
         # outside the lock: an already-completed future runs the callback
@@ -395,6 +391,37 @@ class ProcessBackend:
             if self._closed:
                 return
             self._closed = True
+        self._close_resources()
+
+
+class ProcessBackend(ParentCacheBackend):
+    """The ``process`` backend: real multi-core scaling for the GIL-bound
+    correctness checks.
+
+    Workers are pure (see ``worker.py``) and rebuild proxy inputs
+    deterministically from the spec, so results are bit-identical to the
+    inline path; the parent-side cache/dedup contract is
+    :class:`ParentCacheBackend`'s.
+    """
+
+    def __init__(self, suite: Union[str, Sequence[BenchConfig], None] = None, *,
+                 spec: Optional[EvalSpec] = None,
+                 check_correctness: bool = True, rng_seed: int = 0,
+                 max_workers: Optional[int] = None, mp_context=None,
+                 cache: Optional[ScoreCache] = None,
+                 executor: Optional[concurrent.futures.Executor] = None):
+        super().__init__(spec if spec is not None else EvalSpec.resolve(
+            suite, check_correctness, rng_seed), cache)
+        self._own_executor = executor is None
+        self._executor = executor or make_process_executor(
+            (self.spec,), max_workers=max_workers, mp_context=mp_context)
+        self.max_workers = getattr(self._executor, "_max_workers", None) \
+            or max_workers or (os.cpu_count() or 2)
+
+    def _dispatch_eval(self, genome: KernelGenome) -> concurrent.futures.Future:
+        return self._executor.submit(evaluate_genome, genome, self.spec)
+
+    def _close_resources(self) -> None:
         if self._own_executor:
             self._executor.shutdown(wait=True, cancel_futures=True)
 
@@ -404,12 +431,13 @@ def make_backend(name: str,
                               None] = None,
                  **kw) -> "EvalBackend":
     """Build an evaluation backend by name — the single dispatch point
-    ('inline' | 'thread' | 'process'; see ``BACKENDS``).
+    ('inline' | 'thread' | 'process' | 'service'; see ``BACKENDS``).
 
     ``suite`` is a registered suite name, an explicit BenchConfig sequence,
     a pre-resolved :class:`EvalSpec`, or None (MHA default); remaining
     keywords go to the backend constructor (e.g. ``executor=`` to share a
-    pool, ``max_workers=``).
+    pool, ``max_workers=``, or — for 'service' — ``coordinator=`` /
+    ``workers=`` to share or spawn a worker fleet).
     """
     spec = EvalSpec.resolve(suite,
                             kw.pop("check_correctness", True),
@@ -428,4 +456,9 @@ def make_backend(name: str,
                              **kw)
     if name == "process":
         return ProcessBackend(spec=spec, **kw)
+    if name == "service":
+        # imported here, not at module top: service.py subclasses
+        # ParentCacheBackend from THIS module (import cycle otherwise)
+        from repro.core.evals.service import ServiceBackend
+        return ServiceBackend(spec=spec, **kw)
     raise ValueError(f"unknown eval backend {name!r}; known: {BACKENDS}")

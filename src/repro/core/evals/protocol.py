@@ -1,0 +1,86 @@
+"""Length-prefixed wire protocol for the cross-host evaluation service.
+
+One frame = a 4-byte big-endian payload length followed by a pickled message
+dict.  Messages carry :class:`~repro.core.evals.worker.EvalSpec` +
+:class:`~repro.core.search_space.KernelGenome` payloads coordinator->worker
+and :class:`~repro.core.evals.vector.ScoreVector` results worker->coordinator
+— all three are plain picklable dataclasses the process backend already
+ships across process boundaries, so the socket transport reuses the exact
+same serialization and inherits its bit-identity guarantee.
+
+Frame types (the ``"type"`` key of every message):
+
+  hello      worker -> coordinator  registration: name, slots (capacity)
+  welcome    coordinator -> worker  assigned worker id, heartbeat interval,
+                                    and the specs to pre-warm scorers for
+  warm       coordinator -> worker  additional specs registered later
+  task       coordinator -> worker  {id, spec, genome}: evaluate and reply
+  result     worker -> coordinator  {id, ok, value | error}
+  heartbeat  worker -> coordinator  liveness beacon (any frame counts too)
+  shutdown   coordinator -> worker  drain and exit
+
+Transport security: frames are pickles, so the listener must only ever be
+reachable by trusted workers (loopback, or a private cluster network) — the
+same trust model as multiprocessing's own pickle-over-pipe transport.
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import struct
+import threading
+
+# 4-byte length prefix; a frame is at most ~4 GiB, far beyond any genome batch
+_LEN = struct.Struct(">I")
+MAX_FRAME = 1 << 31
+
+HELLO = "hello"
+WELCOME = "welcome"
+WARM = "warm"
+TASK = "task"
+RESULT = "result"
+HEARTBEAT = "heartbeat"
+SHUTDOWN = "shutdown"
+
+
+def send_msg(sock: socket.socket, msg: dict,
+             lock: "threading.Lock | None" = None) -> None:
+    """Frame and send one message; ``lock`` serializes concurrent senders
+    (heartbeat thread vs result thread) so frames never interleave."""
+    payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
+    if len(payload) >= MAX_FRAME:
+        raise ValueError(f"frame too large: {len(payload)} bytes")
+    data = _LEN.pack(len(payload)) + payload
+    if lock is None:
+        sock.sendall(data)
+    else:
+        with lock:
+            sock.sendall(data)
+
+
+def recv_msg(sock: socket.socket) -> dict:
+    """Read exactly one frame; raises ``ConnectionError`` on EOF/short read
+    (how a dead peer is detected synchronously)."""
+    header = _recv_exact(sock, _LEN.size)
+    (n,) = _LEN.unpack(header)
+    if n >= MAX_FRAME:
+        raise ConnectionError(f"oversized frame announced: {n} bytes")
+    return pickle.loads(_recv_exact(sock, n))
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed the connection")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def parse_address(address: str) -> tuple[str, int]:
+    """``HOST:PORT`` -> (host, port); the worker CLI's --connect format."""
+    host, sep, port = address.rpartition(":")
+    if not sep or not host:
+        raise ValueError(f"address must be HOST:PORT, got {address!r}")
+    return host, int(port)

@@ -1,0 +1,534 @@
+"""The cross-host evaluation service: coordinator, host registry, and the
+``service`` :class:`EvalBackend`.
+
+The ``process`` backend (backends.py) scales scoring to the cores of ONE
+host.  This module is the RPC shim the ROADMAP promised on top of the same
+pure-worker contract: a :class:`EvalCoordinator` listens on a TCP socket,
+remote workers (``python -m repro.core.evals.service_worker --connect
+HOST:PORT``) register and heartbeat, and :class:`ServiceBackend` fans genome
+batches out over the live worker set.  Results are bit-identical to the
+inline path for exactly the reason process results are: a worker rebuilds
+its :class:`~repro.core.evals.worker.EvalSpec` scorer deterministically, so
+WHERE an evaluation runs can never change its value.
+
+Fault model (the paper's 7-day-run regime: workers come and go, the search
+must not notice):
+
+  * a worker's death is detected two ways — synchronously, when its socket
+    drops (kill/crash/network reset), and asynchronously, when it misses
+    heartbeats for ``dead_after_s`` (hang/partition);
+  * every task in flight on a dead worker is requeued at the FRONT of the
+    pending queue (original submission order) and re-dispatched to the
+    surviving workers — the waiting future never notices, and determinism
+    makes the retried result identical to the one the dead worker owed;
+  * a task that *fails* (the evaluation itself raised) is NOT requeued: the
+    scorer is deterministic, so retrying a poisoned genome elsewhere would
+    loop forever.  The exception propagates to the caller, mirroring the
+    thread/process backends' owner-failure contract.
+
+Topology is observable like :class:`ElasticProcessPool`'s resizes: ``join``
+/ ``leave`` / ``requeue`` events accumulate in ``EvalCoordinator.events``
+and ``stats()`` snapshots the registry.
+
+The parent keeps the shared :class:`ScoreCache` and the in-flight future
+table (duplicate submissions for one genome collapse onto one wire task),
+so cache behaviour is identical to the process backend's.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import itertools
+import os
+import socket
+import subprocess
+import sys
+import threading
+import time
+from collections import deque
+from typing import Optional, Sequence, Union
+
+from repro.core.evals import protocol
+from repro.core.evals.backends import ParentCacheBackend
+from repro.core.evals.cache import ScoreCache
+from repro.core.evals.worker import EvalSpec
+from repro.core.perfmodel import BenchConfig
+from repro.core.search_space import KernelGenome
+
+__all__ = ["EvalCoordinator", "ServiceBackend", "spawn_local_workers",
+           "stop_local_workers"]
+
+
+class _RemoteWorker:
+    """Registry entry for one connected worker host."""
+
+    __slots__ = ("wid", "name", "slots", "conn", "send_lock", "in_flight",
+                 "last_seen", "alive")
+
+    def __init__(self, wid: int, name: str, slots: int, conn: socket.socket):
+        self.wid = wid
+        self.name = name
+        self.slots = max(1, slots)
+        self.conn = conn
+        self.send_lock = threading.Lock()
+        self.in_flight: dict[int, dict] = {}       # task id -> task
+        self.last_seen = time.monotonic()
+        self.alive = True
+
+    @property
+    def free_slots(self) -> int:
+        return self.slots - len(self.in_flight)
+
+
+class EvalCoordinator:
+    """Listens for workers, keeps the live host registry, dispatches tasks.
+
+    ``submit(spec, genome)`` returns a ``Future[ScoreVector]`` immediately;
+    tasks queue until a worker with a free slot exists, are dispatched
+    least-loaded-first (deterministic id tie-break), and survive the death
+    of their worker via front-of-queue requeue.  One coordinator serves any
+    number of :class:`ServiceBackend`\\ s (each task carries its own spec;
+    workers warm a per-spec scorer table on demand), which is how the island
+    engine shares one worker fleet across all suites.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 heartbeat_s: float = 2.0,
+                 dead_after_s: Optional[float] = None):
+        self.heartbeat_s = heartbeat_s
+        self.dead_after_s = dead_after_s if dead_after_s is not None \
+            else 3.0 * heartbeat_s
+        self._lock = threading.Lock()
+        self._roster = threading.Condition(self._lock)  # notified on join
+        self._workers: dict[int, _RemoteWorker] = {}
+        self._pending: deque[dict] = deque()
+        self._specs: list[EvalSpec] = []
+        self._next_wid = itertools.count()
+        self._next_tid = itertools.count()
+        self._closed = False
+        self.peak_workers = 0
+        self.tasks_submitted = 0
+        self.tasks_completed = 0
+        self.tasks_requeued = 0
+        self.events: list[dict] = []
+
+        self._listener = socket.create_server((host, port))
+        self.address: tuple[str, int] = self._listener.getsockname()[:2]
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="eval-coordinator-accept",
+            daemon=True)
+        self._accept_thread.start()
+        self._monitor_thread = threading.Thread(
+            target=self._monitor_loop, name="eval-coordinator-monitor",
+            daemon=True)
+        self._monitor_thread.start()
+
+    # -- introspection ------------------------------------------------------------
+    @property
+    def n_workers(self) -> int:
+        with self._lock:
+            return len(self._workers)
+
+    @property
+    def total_slots(self) -> int:
+        with self._lock:
+            return sum(w.slots for w in self._workers.values())
+
+    @property
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "workers": len(self._workers),
+                "peak_workers": self.peak_workers,
+                "total_slots": sum(w.slots for w in self._workers.values()),
+                "queue_depth": len(self._pending),
+                "in_flight": sum(len(w.in_flight)
+                                 for w in self._workers.values()),
+                "tasks_submitted": self.tasks_submitted,
+                "tasks_completed": self.tasks_completed,
+                "tasks_requeued": self.tasks_requeued,
+                "joined": sum(1 for e in self.events if e["event"] == "join"),
+                "left": sum(1 for e in self.events if e["event"] == "leave"),
+                "events": list(self.events),
+            }
+
+    def wait_for_workers(self, n: int, timeout: Optional[float] = None) -> bool:
+        """Block until at least ``n`` workers are registered (True) or the
+        timeout lapses (False)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._roster:
+            while len(self._workers) < n:
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._roster.wait(remaining)
+            return True
+
+    def spawn_workers(self, n: int, *, slots: int = 1,
+                      timeout_s: float = 60.0) -> list:
+        """Spawn ``n`` localhost worker processes against this coordinator
+        and block until all have registered — the one registration-failure
+        contract every owner (ServiceBackend, the island engine) shares.  On
+        timeout the coordinator is closed, the processes are stopped, and a
+        RuntimeError reports how many made it."""
+        procs = spawn_local_workers(self.address, n, slots=slots)
+        if not self.wait_for_workers(n, timeout=timeout_s):
+            got = self.n_workers
+            self.close()
+            stop_local_workers(procs)
+            raise RuntimeError(
+                f"only {got}/{n} service workers registered within "
+                f"{timeout_s:.0f}s")
+        return procs
+
+    # -- the scoring surface -------------------------------------------------------
+    def register_spec(self, spec: EvalSpec) -> None:
+        """Announce a spec so current AND future workers pre-warm its scorer
+        (first-evaluation latency only; tasks always carry their spec)."""
+        with self._lock:
+            if spec in self._specs:
+                return
+            self._specs.append(spec)
+            workers = list(self._workers.values())
+        for w in workers:
+            self._try_send(w, {"type": protocol.WARM, "specs": (spec,)})
+
+    def submit(self, spec: EvalSpec, genome: KernelGenome
+               ) -> concurrent.futures.Future:
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        task = {"id": next(self._next_tid), "spec": spec, "genome": genome,
+                "future": fut}
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("submit on closed EvalCoordinator")
+            self.tasks_submitted += 1
+            self._pending.append(task)
+        self._dispatch()
+        return fut
+
+    # -- dispatch ------------------------------------------------------------------
+    def _dispatch(self) -> None:
+        """Feed free worker slots from the FIFO.  Socket sends happen outside
+        the registry lock (a slow peer must not stall the coordinator); a
+        failed send kills that worker and requeues, so the loop re-runs until
+        quiescent."""
+        while True:
+            assignments: list[tuple[_RemoteWorker, dict]] = []
+            with self._lock:
+                while self._pending:
+                    free = [w for w in self._workers.values()
+                            if w.alive and w.free_slots > 0]
+                    if not free:
+                        break
+                    # least-loaded first; wid breaks ties deterministically
+                    w = min(free, key=lambda w: (len(w.in_flight) / w.slots,
+                                                 w.wid))
+                    task = self._pending.popleft()
+                    if task["future"].cancelled():
+                        continue
+                    w.in_flight[task["id"]] = task
+                    assignments.append((w, task))
+            if not assignments:
+                return
+            for w, task in assignments:
+                ok = self._try_send(w, {"type": protocol.TASK,
+                                        "id": task["id"],
+                                        "spec": task["spec"],
+                                        "genome": task["genome"]})
+                if not ok:
+                    self._worker_died(w, "send failed")   # requeues the task
+
+    def _try_send(self, w: _RemoteWorker, msg: dict) -> bool:
+        try:
+            protocol.send_msg(w.conn, msg, lock=w.send_lock)
+            return True
+        except OSError:
+            return False
+
+    # -- worker lifecycle ----------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                conn, _addr = self._listener.accept()
+            except OSError:
+                return                     # listener closed: shutting down
+            threading.Thread(target=self._serve_worker, args=(conn,),
+                             name="eval-coordinator-worker",
+                             daemon=True).start()
+
+    def _serve_worker(self, conn: socket.socket) -> None:
+        try:
+            hello = protocol.recv_msg(conn)
+            if hello.get("type") != protocol.HELLO:
+                conn.close()
+                return
+        except Exception:
+            # anything up to and including garbage bytes from a stray
+            # client (the listener may be bound 0.0.0.0): not a worker
+            conn.close()
+            return
+        with self._lock:
+            if self._closed:
+                conn.close()
+                return
+            wid = next(self._next_wid)
+            specs_sent = tuple(self._specs)
+        w = _RemoteWorker(wid, hello.get("name") or f"worker{wid}",
+                          int(hello.get("slots", 1)), conn)
+        # WELCOME goes out BEFORE the worker is dispatchable: once it is in
+        # the registry, other threads (register_spec, _dispatch) may send on
+        # this socket, and a TASK/WARM frame must never beat the WELCOME
+        if not self._try_send(w, {"type": protocol.WELCOME, "worker_id": wid,
+                                  "heartbeat_s": self.heartbeat_s,
+                                  "specs": specs_sent}):
+            conn.close()
+            return
+        with self._lock:
+            if self._closed:
+                conn.close()
+                return
+            self._workers[wid] = w
+            self.peak_workers = max(self.peak_workers, len(self._workers))
+            self.events.append({"event": "join", "worker": w.name,
+                                "slots": w.slots,
+                                "workers": len(self._workers)})
+            missed = tuple(s for s in self._specs if s not in specs_sent)
+            self._roster.notify_all()
+        if missed and not self._try_send(w, {"type": protocol.WARM,
+                                             "specs": missed}):
+            self._worker_died(w, "warm failed")
+            return
+        self._dispatch()
+        self._reader_loop(w)
+
+    def _reader_loop(self, w: _RemoteWorker) -> None:
+        while True:
+            try:
+                msg = protocol.recv_msg(w.conn)
+            except (ConnectionError, OSError):
+                self._worker_died(w, "connection lost")
+                return
+            except Exception as e:
+                # a corrupt frame is as fatal as a dead peer: take the
+                # synchronous death path (requeue + eviction), never leave
+                # the worker registered with a dead reader
+                self._worker_died(w, f"protocol error: {type(e).__name__}")
+                return
+            with self._lock:
+                w.last_seen = time.monotonic()
+            kind = msg.get("type")
+            if kind == protocol.RESULT:
+                self._complete(w, msg)
+            # heartbeats (and anything unknown) only refresh last_seen
+
+    def _complete(self, w: _RemoteWorker, msg: dict) -> None:
+        with self._lock:
+            task = w.in_flight.pop(msg["id"], None)
+            if task is not None:
+                self.tasks_completed += 1
+        if task is None:
+            return        # task was requeued past this worker; stale result
+        fut = task["future"]
+        try:
+            if msg.get("ok"):
+                fut.set_result(msg["value"])
+            else:
+                fut.set_exception(RuntimeError(
+                    f"remote evaluation failed on {w.name}: "
+                    f"{msg.get('error')}"))
+        except concurrent.futures.InvalidStateError:
+            pass          # cancelled during teardown: nobody is waiting
+        self._dispatch()
+
+    def _worker_died(self, w: _RemoteWorker, why: str) -> None:
+        to_cancel: list[dict] = []
+        with self._lock:
+            if not w.alive:
+                return
+            w.alive = False
+            self._workers.pop(w.wid, None)
+            orphans = sorted(w.in_flight.values(), key=lambda t: t["id"])
+            w.in_flight.clear()
+            if self._closed:
+                # shutting down: no surviving fleet will ever run these.
+                # Cancelled OUTSIDE the lock — cancel() runs done callbacks
+                # synchronously, and a ServiceBackend callback takes the
+                # backend lock (held around coordinator.submit on the
+                # submit path: cancelling here would invert the lock order)
+                to_cancel, orphans = orphans, []
+            # front of the queue, original order: requeued work must not
+            # queue behind speculation submitted after it
+            for task in reversed(orphans):
+                self._pending.appendleft(task)
+            self.tasks_requeued += len(orphans)
+            self.events.append({"event": "leave", "worker": w.name,
+                                "workers": len(self._workers), "why": why})
+            if orphans:
+                self.events.append({"event": "requeue", "worker": w.name,
+                                    "tasks": len(orphans),
+                                    "workers": len(self._workers)})
+        for task in to_cancel:
+            task["future"].cancel()
+        try:
+            w.conn.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        w.conn.close()
+        self._dispatch()
+
+    def _monitor_loop(self) -> None:
+        """Evict workers that stopped heartbeating (hang/partition — the
+        asynchronous half of dead-worker detection)."""
+        while True:
+            time.sleep(min(self.heartbeat_s, self.dead_after_s) / 2.0)
+            with self._lock:
+                if self._closed:
+                    return
+                now = time.monotonic()
+                silent = [w for w in self._workers.values()
+                          if now - w.last_seen > self.dead_after_s]
+            for w in silent:
+                self._worker_died(
+                    w, f"missed heartbeats for {self.dead_after_s:.1f}s")
+
+    # -- lifecycle -----------------------------------------------------------------
+    def close(self) -> None:
+        """Idempotent: cancel queued work, tell workers to exit, stop
+        listening.  ``submit`` afterwards raises."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            workers = list(self._workers.values())
+            pending = list(self._pending)
+            self._pending.clear()
+        for task in pending:
+            task["future"].cancel()
+        for w in workers:
+            self._try_send(w, {"type": protocol.SHUTDOWN})
+        self._listener.close()
+        for w in workers:
+            try:
+                w.conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            w.conn.close()
+
+
+def _worker_env() -> dict:
+    """Child env with this repro checkout importable, whatever the parent's
+    own sys.path tricks were (tests/benchmarks prepend src/ manually)."""
+    import repro
+    # repro may be a namespace package (no __init__): locate it by __path__
+    pkg_dir = (os.path.dirname(repro.__file__) if getattr(repro, "__file__",
+                                                          None)
+               else next(iter(repro.__path__)))
+    src = os.path.dirname(os.path.abspath(pkg_dir))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    return env
+
+
+def spawn_local_workers(address: tuple[str, int], n: int, *,
+                        slots: int = 1) -> list[subprocess.Popen]:
+    """Start ``n`` localhost worker processes connected to ``address`` — the
+    single-host convenience path (benchmarks, CI smoke, the example driver).
+    Real cross-host deployment runs the same entrypoint on other machines:
+    ``python -m repro.core.evals.service_worker --connect HOST:PORT``."""
+    host, port = address
+    procs = []
+    for i in range(n):
+        procs.append(subprocess.Popen(
+            [sys.executable, "-m", "repro.core.evals.service_worker",
+             "--connect", f"{host}:{port}", "--slots", str(slots),
+             "--name", f"local{i}"],
+            env=_worker_env()))
+    return procs
+
+
+def stop_local_workers(procs: Sequence[subprocess.Popen],
+                       timeout: float = 5.0) -> None:
+    """Terminate spawned workers, escalating to kill after ``timeout``."""
+    for p in procs:
+        if p.poll() is None:
+            p.terminate()
+    for p in procs:
+        try:
+            p.wait(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            p.kill()
+            p.wait()
+
+
+class ServiceBackend(ParentCacheBackend):
+    """The ``service`` evaluation backend: scoring fans out over TCP to the
+    coordinator's live worker fleet.
+
+    Same parent-side contract as :class:`ProcessBackend` (both inherit it
+    from :class:`~repro.core.evals.backends.ParentCacheBackend`): the shared
+    :class:`ScoreCache` and the in-flight future table live here, concurrent
+    requests for one genome collapse onto one wire task, a failed evaluation
+    is evicted (never cached) so callers can retry, and ``close`` is
+    idempotent.  Worker death is invisible at this layer — the coordinator
+    requeues and the futures complete late, not wrong.
+
+    Pass ``coordinator=`` to share one fleet across several backends (one
+    per suite, as the island engine does); otherwise the backend owns a
+    fresh coordinator and — when ``workers`` > 0 — a set of spawned
+    localhost worker processes, both torn down on ``close``.  ``listen``
+    sets the owned coordinator's bind address: the loopback default serves
+    single-host fleets; bind ``"0.0.0.0:PORT"`` to let workers on OTHER
+    hosts register (then give them this host's reachable name/IP).
+    """
+
+    def __init__(self, suite: Union[str, Sequence[BenchConfig], None] = None, *,
+                 spec: Optional[EvalSpec] = None,
+                 check_correctness: bool = True, rng_seed: int = 0,
+                 coordinator: Optional[EvalCoordinator] = None,
+                 workers: Optional[int] = None,
+                 worker_slots: int = 1,
+                 worker_timeout_s: float = 60.0,
+                 listen: str = "127.0.0.1:0",
+                 cache: Optional[ScoreCache] = None):
+        super().__init__(spec if spec is not None else EvalSpec.resolve(
+            suite, check_correctness, rng_seed), cache)
+        self._own_coordinator = coordinator is None
+        self.coordinator = coordinator if coordinator is not None \
+            else EvalCoordinator(*protocol.parse_address(listen))
+        self._procs: list[subprocess.Popen] = []
+        if self._own_coordinator:
+            n = 2 if workers is None else workers
+            if n > 0:
+                # on timeout this closes the coordinator + stops the procs
+                self._procs = self.coordinator.spawn_workers(
+                    n, slots=worker_slots, timeout_s=worker_timeout_s)
+        elif workers:
+            raise ValueError("workers= is owned-coordinator only; spawn "
+                             "workers against the shared coordinator instead")
+        self.coordinator.register_spec(self.spec)
+
+    @property
+    def address(self) -> tuple[str, int]:
+        """Where additional workers can ``--connect``."""
+        return self.coordinator.address
+
+    @property
+    def max_workers(self) -> int:
+        """Current fleet capacity in slots (reports/JSON; live, not static)."""
+        return self.coordinator.total_slots
+
+    def _dispatch_eval(self, genome: KernelGenome) -> concurrent.futures.Future:
+        """One task on the wire.  ``n_evaluations`` counts these dispatches;
+        a dead worker's requeues are coordinator-internal, not re-counted."""
+        return self.coordinator.submit(self.spec, genome)
+
+    def _close_resources(self) -> None:
+        """A shared coordinator is left running for its other backends."""
+        if self._own_coordinator:
+            self.coordinator.close()
+            stop_local_workers(self._procs)

@@ -1,0 +1,155 @@
+"""The standalone evaluation-service worker.
+
+Run one per host (or several, one per core group) against a coordinator:
+
+  python -m repro.core.evals.service_worker --connect HOST:PORT
+  python -m repro.core.evals.service_worker --connect HOST:PORT --slots 4
+
+The worker registers, pre-warms a per-spec :class:`Scorer` table for every
+spec the coordinator announces (so the first real evaluation pays no warmup),
+heartbeats on the interval the coordinator dictates, and streams results
+back as they complete.  Evaluation goes through the same pure
+``evaluate_genome(genome, spec)`` contract the process backend uses, so a
+ScoreVector computed here is bit-identical to one computed inline, in a
+local worker process, or on any other host.
+
+``--slots N`` evaluates up to N tasks concurrently on a thread pool: sleeps
+from a latency-modelled spec (``service_latency_s``) and XLA's internal
+parallelism overlap; for purely GIL-bound tracing work prefer more
+single-slot workers instead.
+
+:class:`EvalServiceWorker` is also usable programmatically (tests run it on
+a thread inside the parent process — registration, dedup, and identity paths
+without process spin-up; fault tests use real killed subprocesses).
+"""
+from __future__ import annotations
+
+import argparse
+import concurrent.futures
+import socket
+import threading
+from typing import Optional, Sequence
+
+from repro.core.evals import protocol
+from repro.core.evals.worker import EvalSpec, _scorer_for, evaluate_genome
+
+__all__ = ["EvalServiceWorker", "main"]
+
+
+class EvalServiceWorker:
+    """One worker host: connect, register, serve tasks until shutdown."""
+
+    def __init__(self, host: str, port: int, *, slots: int = 1,
+                 name: Optional[str] = None):
+        self.host = host
+        self.port = port
+        self.slots = max(1, slots)
+        self.name = name
+        self._sock: Optional[socket.socket] = None
+        self._send_lock = threading.Lock()
+        self._stop = threading.Event()
+
+    # -- plumbing -----------------------------------------------------------------
+    def _send(self, msg: dict) -> None:
+        protocol.send_msg(self._sock, msg, lock=self._send_lock)
+
+    def _warm(self, pool: concurrent.futures.Executor,
+              specs: Sequence[EvalSpec]) -> None:
+        """Pre-build scorers off the receive loop — a long jax proxy-input
+        build must never starve heartbeats or task intake."""
+        for spec in specs:
+            pool.submit(lambda s=spec: _scorer_for(s).warm())
+
+    def _evaluate(self, task_id: int, spec: EvalSpec, genome) -> None:
+        try:
+            sv = evaluate_genome(genome, spec)
+            msg = {"type": protocol.RESULT, "id": task_id, "ok": True,
+                   "value": sv}
+        except Exception as e:            # deterministic failure: report, not retry
+            msg = {"type": protocol.RESULT, "id": task_id, "ok": False,
+                   "error": f"{type(e).__name__}: {e}"}
+        try:
+            self._send(msg)
+        except OSError:
+            self._stop.set()              # coordinator gone: wind down
+
+    def _heartbeat_loop(self, interval_s: float) -> None:
+        while not self._stop.wait(interval_s):
+            try:
+                self._send({"type": protocol.HEARTBEAT})
+            except OSError:
+                self._stop.set()
+                return
+
+    # -- the serving loop ----------------------------------------------------------
+    def run(self) -> None:
+        """Blocks until the coordinator says shutdown, the connection drops,
+        or :meth:`stop` is called."""
+        self._sock = socket.create_connection((self.host, self.port))
+        # heartbeats must keep flowing while big result frames stream
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=self.slots, thread_name_prefix="eval-worker")
+        try:
+            try:
+                self._send({"type": protocol.HELLO, "name": self.name,
+                            "slots": self.slots})
+                welcome = protocol.recv_msg(self._sock)
+            except (ConnectionError, OSError):
+                return    # coordinator gone mid-handshake: a normal exit
+            if welcome.get("type") != protocol.WELCOME:
+                raise ConnectionError(f"expected welcome, got {welcome!r}")
+            self._warm(pool, welcome.get("specs", ()))
+            hb = threading.Thread(
+                target=self._heartbeat_loop,
+                args=(float(welcome.get("heartbeat_s", 2.0)),),
+                name="eval-worker-heartbeat", daemon=True)
+            hb.start()
+            while not self._stop.is_set():
+                try:
+                    msg = protocol.recv_msg(self._sock)
+                except Exception:      # dead coordinator or corrupt frame
+                    break
+                kind = msg.get("type")
+                if kind == protocol.TASK:
+                    pool.submit(self._evaluate, msg["id"], msg["spec"],
+                                msg["genome"])
+                elif kind == protocol.WARM:
+                    self._warm(pool, msg.get("specs", ()))
+                elif kind == protocol.SHUTDOWN:
+                    break
+        finally:
+            self._stop.set()
+            pool.shutdown(wait=False, cancel_futures=True)
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+
+    def stop(self) -> None:
+        """Unblock :meth:`run` from another thread (programmatic use)."""
+        self._stop.set()
+        if self._sock is not None:
+            try:
+                self._sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="evaluation-service worker (see repro.core.evals.service)")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT",
+                    help="coordinator address to register with")
+    ap.add_argument("--slots", type=int, default=1,
+                    help="concurrent evaluations this worker accepts")
+    ap.add_argument("--name", default=None,
+                    help="registry display name (default: worker<N>)")
+    args = ap.parse_args(argv)
+    host, port = protocol.parse_address(args.connect)
+    EvalServiceWorker(host, port, slots=args.slots, name=args.name).run()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

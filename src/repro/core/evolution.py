@@ -33,9 +33,10 @@ class ContinuousEvolution:
                  pipeline: bool = False):
         """``target_suite`` names a scenario suite from the perfmodel registry
         ('mha', 'gqa', 'decode', or a '+'-union); ``eval_backend`` selects the
-        evaluation service ('inline' | 'thread' | 'process' — bit-identical,
-        wall-clock only).  Both are ignored when an explicit ``scorer`` is
-        given.
+        evaluation service ('inline' | 'thread' | 'process' | 'service' —
+        bit-identical, wall-clock only; 'service' spawns two localhost socket
+        workers by default, see :class:`~repro.core.evals.ServiceBackend`).
+        Both are ignored when an explicit ``scorer`` is given.
 
         ``pipeline`` enables propose -> submit -> harvest stepping on the
         single island: the operator's likely candidate walk is submitted to

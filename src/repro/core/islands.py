@@ -28,8 +28,11 @@ Candidate evaluation goes through the pluggable evaluation service
 (``repro.core.evals``): all islands on one suite share one backend —
 ``thread`` (shared memo cache + in-process executor, the default),
 ``process`` (one warm worker-process pool shared by every suite, for real
-multi-core scaling of the GIL-bound correctness checks), or ``inline`` —
-and island epochs themselves run on a thread pool.  Backends are
+multi-core scaling of the GIL-bound correctness checks), ``service`` (the
+cross-host scoring service — one :class:`~repro.core.evals.EvalCoordinator`
+fanning every suite's batches out over TCP to a registered worker fleet,
+with heartbeat liveness and fault-tolerant requeue), or ``inline`` — and
+island epochs themselves run on a thread pool.  Backends are
 bit-identical, so the choice changes wall-clock only, never lineages.
 ``Archipelago.from_registry()`` auto-scales one specialist island per suite
 registered in ``perfmodel`` (``register_suite``).
@@ -75,8 +78,10 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence, Union
 
-from repro.core.evals import (BatchScorer, ElasticProcessPool, EvalSpec,
-                              make_backend, make_process_executor)
+from repro.core.evals import (BatchScorer, ElasticProcessPool, EvalCoordinator,
+                              EvalSpec, make_backend, make_process_executor,
+                              stop_local_workers)
+from repro.core.evals.protocol import parse_address
 from repro.core.knowledge import KnowledgeBase, suggestion_sort_key
 from repro.core.perfmodel import BenchConfig, registered_suites, suite_by_name
 from repro.core.population import Commit, Lineage, atomic_write_json
@@ -295,13 +300,31 @@ class Island:
     # -- migration ---------------------------------------------------------------
     def accept_migrant(self, commit: Commit, donor: str) -> bool:
         """Re-score a donor's best genome on THIS island's suite; adopt it only
-        on strict improvement (migration can never lose the local best)."""
-        sv = self.tools.evaluate(commit.genome)
-        best = self.lineage.best()
-        if sv.correct and sv.geomean > (best.geomean if best else 0.0):
+        on strict improvement (migration can never lose the local best).  The
+        single-commit case of :meth:`accept_migrants` — same evaluation, same
+        threshold, same commit bookkeeping."""
+        return self.accept_migrants((commit,), donor)
+
+    def accept_migrants(self, commits: Sequence[Commit], donor: str) -> bool:
+        """Top-k migrant policy: re-score EVERY donated commit on THIS
+        island's suite and adopt the best survivor, on strict improvement.
+        The donor's best-on-its-own-suite is not always the best transfer
+        candidate (the paper's §4.3 cross-scenario adaptation): a runner-up
+        tuned differently may re-score higher here.  Deterministic: donated
+        order is deterministic and ties keep the earliest (strict >)."""
+        best_c, best_sv = None, None
+        for c in commits:
+            sv = self.tools.evaluate(c.genome)
+            if not sv.correct:
+                continue
+            if best_sv is None or sv.geomean > best_sv.geomean:
+                best_c, best_sv = c, sv
+        local = self.lineage.best()
+        if best_sv is not None and \
+                best_sv.geomean > (local.geomean if local else 0.0):
             self.lineage.update(
-                commit.genome, sv,
-                f"migrant from {donor}: {commit.note[:80]}", 0)
+                best_c.genome, best_sv,
+                f"migrant from {donor}: {best_c.note[:80]}", 0)
             self.migrants_accepted += 1
             if self.persist_path:
                 self.lineage.save(self.persist_path)
@@ -446,7 +469,11 @@ class IslandEvolution:
                  topology: Union[str, MigrationTopology] = "ring",
                  pipeline: bool = False,
                  elastic_workers: int = 0,
-                 prefetch_budget: Optional[int] = None):
+                 prefetch_budget: Optional[int] = None,
+                 service_workers: int = 0,
+                 service_listen: str = "127.0.0.1:0",
+                 migrant_policy: str = "best",
+                 migrant_k: int = 3):
         """``prefetch`` > 0 speculatively batch-evaluates that many KB
         candidate edits per island step on the scorer executor (cache warming
         only — lineages are identical with or without it, it can only trade
@@ -455,7 +482,8 @@ class IslandEvolution:
         ``backend`` selects the evaluation service: 'thread' (shared
         in-process executor, the default), 'process' (one warm worker-process
         pool shared by every suite — real multi-core scaling for the
-        GIL-bound correctness checks), or 'inline'.  Backends are
+        GIL-bound correctness checks), 'service' (cross-host scoring over
+        socket workers; see ``service_workers``), or 'inline'.  Backends are
         bit-identical, so lineages do not depend on the choice.
 
         ``topology`` selects the migration graph walked at each epoch
@@ -478,7 +506,27 @@ class IslandEvolution:
         ``prefetch_budget`` sets a *shared* speculative-evaluation budget:
         every epoch a :class:`PrefetchAllocator` re-divides it into
         per-island ``prefetch_k`` caps from the KB's predicted-gain
-        distributions (replacing the static ``prefetch`` constant)."""
+        distributions (replacing the static ``prefetch`` constant).
+
+        ``backend='service'`` scores over the cross-host evaluation service:
+        the engine hosts one :class:`~repro.core.evals.EvalCoordinator`
+        shared by every suite's backend, and ``service_workers`` > 0 spawns
+        that many localhost worker processes against it (with 0, external
+        workers must ``--connect`` to ``engine.service_coordinator.address``
+        before stepping can proceed).  ``service_listen`` binds the
+        coordinator: the loopback default serves single-host fleets; bind
+        ``"0.0.0.0:PORT"`` so workers on OTHER hosts can register (give
+        them this host's reachable name/IP).  Worker death mid-run is
+        transparent:
+        in-flight evaluations are requeued onto survivors and — the scorer
+        being deterministic — the lineage is unchanged.
+
+        ``migrant_policy`` sets what a donor island sends along each
+        migration edge: ``'best'`` (the default — its single best commit,
+        bit-identical to the historical behaviour) or ``'top-k'`` (its
+        ``migrant_k`` best distinct genomes; the recipient re-scores all of
+        them on its own suite and adopts the best survivor, since the
+        donor's best at home is not always the best transfer)."""
         self.specs = list(specs) if specs is not None else \
             default_specs(n_islands, seed=seed)
         if not self.specs:
@@ -491,6 +539,16 @@ class IslandEvolution:
         if elastic_workers and backend != "process":
             raise ValueError("elastic_workers requires backend='process' "
                              f"(got backend={backend!r})")
+        if service_workers and backend != "service":
+            raise ValueError("service_workers requires backend='service' "
+                             f"(got backend={backend!r})")
+        if migrant_policy not in ("best", "top-k"):
+            raise ValueError(f"unknown migrant_policy {migrant_policy!r}; "
+                             "known: 'best', 'top-k'")
+        if migrant_k < 1:
+            raise ValueError(f"migrant_k must be >= 1, got {migrant_k}")
+        self.migrant_policy = migrant_policy
+        self.migrant_k = migrant_k
         self._prefetch_allocator = (PrefetchAllocator(prefetch_budget)
                                     if prefetch_budget is not None else None)
         self.memory = RefutedMemory()
@@ -532,10 +590,23 @@ class IslandEvolution:
                                    max_workers=elastic_workers)
                 if elastic_workers else
                 make_process_executor(tuple(eval_specs.values())))
+        # cross-host scoring: ONE coordinator (worker fleet) serves every
+        # suite's backend — tasks carry their spec, workers warm per spec
+        self.service_coordinator = None
+        self._service_procs: list = []
+        if backend == "service":
+            self.service_coordinator = EvalCoordinator(
+                *parse_address(service_listen))
+            if service_workers:
+                # on timeout this closes the coordinator + stops the procs
+                self._service_procs = self.service_coordinator.spawn_workers(
+                    service_workers)
         for key, espec in eval_specs.items():
             extra = ({"executor": self._process_pool}
                      if backend == "process" else
-                     {"executor": scorer_pool} if backend == "thread" else {})
+                     {"executor": scorer_pool} if backend == "thread" else
+                     {"coordinator": self.service_coordinator}
+                     if backend == "service" else {})
             sc = make_backend(backend, suite=espec, **extra)
             if backend == "inline":
                 sc.warm()            # lazy proxy build must not race islands
@@ -691,6 +762,8 @@ class IslandEvolution:
                           for key, s in self.scorers.items()},
             eval_pool=(self._process_pool.stats()
                        if isinstance(self._process_pool, ElasticProcessPool)
+                       else self.service_coordinator.stats()
+                       if self.service_coordinator is not None
                        else {}))
 
     def _bootstrap_batch(self) -> None:
@@ -738,16 +811,30 @@ class IslandEvolution:
         stats.island_best = [isl.best_geomean() for isl in self.islands]
         edges = self.topology.edges(len(self.islands), stats)
         if edges:
-            # snapshot donors first so a hop this epoch can't chain N times
-            bests = [isl.lineage.best() for isl in self.islands]
+            # snapshot donor payloads first so a hop this epoch can't chain
+            # N times; 'best' keeps the historical single-commit path
+            if self.migrant_policy == "top-k":
+                donations = [isl.lineage.top(self.migrant_k)
+                             for isl in self.islands]
+                bests = None
+            else:
+                donations = None
+                bests = [isl.lineage.best() for isl in self.islands]
             for src, dst in edges:
                 if src == dst:
                     continue               # self-migration is meaningless
-                b = bests[src]
-                if b is None:
-                    continue               # nothing to donate: not an attempt
-                accepted = self.islands[dst].accept_migrant(
-                    b, self.islands[src].name)
+                if donations is None:
+                    b = bests[src]
+                    if b is None:
+                        continue           # nothing to donate: not an attempt
+                    accepted = self.islands[dst].accept_migrant(
+                        b, self.islands[src].name)
+                else:
+                    donated = donations[src]
+                    if not donated:
+                        continue
+                    accepted = self.islands[dst].accept_migrants(
+                        donated, self.islands[src].name)
                 stats.record(src, dst, accepted)
                 if accepted:
                     self.migrations_accepted += 1
@@ -864,7 +951,13 @@ class IslandEvolution:
         """Block until the process pool's workers are up and warm (an elastic
         pool is first grown to its cap).  Wall-clock only — benchmarks call
         it before a timed window so stepping strategies race on equal footing
-        with the thread backend, whose warmup runs at construction."""
+        with the thread backend, whose warmup runs at construction.  On the
+        service backend, waits for at least the spawned worker fleet."""
+        if self.service_coordinator is not None:
+            if wait and self._service_procs:
+                self.service_coordinator.wait_for_workers(
+                    len(self._service_procs), timeout=120.0)
+            return
         pool = self._process_pool
         if pool is None:
             return
@@ -883,6 +976,10 @@ class IslandEvolution:
         self._scorer_pool.shutdown(wait=True, cancel_futures=True)
         if self._process_pool is not None:
             self._process_pool.shutdown(wait=True, cancel_futures=True)
+        if self.service_coordinator is not None:
+            # backends share (and so never close) the engine's coordinator
+            self.service_coordinator.close()
+            stop_local_workers(self._service_procs)
 
 
 # the engine's public face in docs/examples: an archipelago of islands

@@ -72,6 +72,22 @@ class Lineage:
     def best(self) -> Optional[Commit]:
         return max(self.commits, key=lambda c: c.geomean) if self.commits else None
 
+    def top(self, k: int) -> list[Commit]:
+        """The ``k`` best commits with pairwise-distinct genomes, geomean
+        descending (ties broken by commit version, so the order — and
+        anything built on it, like the top-k migrant payload — is
+        deterministic).  ``top(1)`` is ``[best()]``."""
+        out, seen = [], set()
+        for c in sorted(self.commits, key=lambda c: (-c.geomean, c.version)):
+            key = c.genome.key()
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(c)
+            if len(out) == k:
+                break
+        return out
+
     def head(self) -> Optional[Commit]:
         return self.commits[-1] if self.commits else None
 

@@ -1,18 +1,29 @@
-"""Compatibility shim — the evaluation stack now lives in ``repro.core.evals``.
+"""DEPRECATED compatibility shim — the evaluation stack lives in
+``repro.core.evals``.
 
 Import from there in new code:
 
   from repro.core.evals import Scorer, BatchScorer, make_backend, ...
 
-This module keeps the long-standing names importable for older call sites.
+This module keeps the long-standing names importable for older call sites,
+now with a :class:`DeprecationWarning` at import; it will be removed once
+nothing imports it.  (No in-repo code does — engines, benchmarks, examples,
+and tests all import ``repro.core.evals`` or ``repro.core`` directly.)
 """
+import warnings
+
 from repro.core.evals import (BACKENDS, BatchScorer, CORRECTNESS_TOL,
                               EvalBackend, EvalSpec, InlineBackend,
                               ProcessBackend, ScoreCache, ScoreVector, Scorer,
-                              ThreadBackend, evaluate_genome, make_backend)
+                              ServiceBackend, ThreadBackend, evaluate_genome,
+                              make_backend)
+
+warnings.warn(
+    "repro.core.scoring is deprecated; import from repro.core.evals instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = [
     "BACKENDS", "BatchScorer", "CORRECTNESS_TOL", "EvalBackend", "EvalSpec",
     "InlineBackend", "ProcessBackend", "ScoreCache", "ScoreVector", "Scorer",
-    "ThreadBackend", "evaluate_genome", "make_backend",
+    "ServiceBackend", "ThreadBackend", "evaluate_genome", "make_backend",
 ]

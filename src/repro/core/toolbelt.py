@@ -113,7 +113,8 @@ class Toolbelt:
     def evaluate_many(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
         """Batched evaluation: one call, many candidates.  Dispatches to the
         selected evaluation backend's ``map`` when available (thread and
-        process backends run the batch on their executors; inline falls back
+        process backends run the batch on their executors; the service
+        backend fans it out over its remote worker fleet; inline falls back
         to a serial loop)."""
         self.calls.append(ToolCall("evaluate_many", f"n={len(genomes)}"))
         self.n_evaluate_calls += len(genomes)

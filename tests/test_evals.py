@@ -1,8 +1,11 @@
 """The pluggable evaluation service: cache API, backend factory, thread
 backend concurrency contract (prefetch dedup, owner-failure retry), process
 backend (parent-side cache, in-flight dedup, bit-identity with inline), the
-picklable worker function, the scenario registry, and registry auto-scaling
-of the archipelago."""
+backend lifecycle contract parametrized over EVERY concurrent backend
+(thread / process / process-on-elastic-pool / service), the picklable worker
+function, the scenario registry, and registry auto-scaling of the
+archipelago.  The socket service's own registry/heartbeat/fault paths live
+in tests/test_service.py."""
 import concurrent.futures as cf
 import pickle
 import threading
@@ -216,25 +219,6 @@ def test_owner_failure_propagates_and_waiter_retries():
 # -- the unified async surface (submit) ----------------------------------------
 
 
-def test_batch_scorer_submit_dedupes_and_shares_futures():
-    spy = _SpyExecutor(cf.ThreadPoolExecutor(2))
-    base = _GatedScorer(suite=FAST_SUITE)
-    batch = BatchScorer(base, executor=spy)
-    g = seed_genome()
-    f1 = batch.submit(g)
-    assert base.started.wait(10)
-    f2 = batch.submit(g)                       # in flight -> shared future
-    assert f2 is f1
-    assert spy.submitted == 1
-    base.gate.set()
-    assert f1.result(10).values == f2.result(10).values
-    f3 = batch.submit(g)                       # cached -> completed future
-    assert f3.done() and spy.submitted == 1
-    assert f3.result().values == f1.result().values
-    batch.close()
-    spy.inner.shutdown(wait=True)
-
-
 def test_batch_scorer_call_collapses_onto_submitted_future():
     """The pipelined contract: a proposal-phase submit followed by the
     harvest's synchronous call must pay exactly one evaluation."""
@@ -247,23 +231,75 @@ def test_batch_scorer_call_collapses_onto_submitted_future():
     batch.close()
 
 
-def test_batch_scorer_close_idempotent_and_submit_after_close_raises():
-    batch = BatchScorer(Scorer(suite=FAST_SUITE, check_correctness=False))
-    batch.close()
-    batch.close()                              # idempotent
-    with pytest.raises(RuntimeError, match="closed BatchScorer"):
-        batch.submit(seed_genome())
+# -- backend lifecycle: ONE contract, parametrized over every concurrent
+# -- backend (thread, process, process-on-elastic-pool, service) ----------------
+
+LIFECYCLE_BACKENDS = ("thread", "process", "process-elastic", "service")
 
 
-def test_process_backend_close_idempotent_and_submit_after_close_raises():
-    b = make_backend("process", suite=FAST_SUITE, check_correctness=False,
-                     max_workers=1)
-    sv = b(seed_genome())
-    assert sv.values                           # the pool actually worked
-    b.close()
-    b.close()                                  # idempotent
-    with pytest.raises(RuntimeError, match="closed ProcessBackend"):
-        b.submit(seed_genome())
+def _lifecycle_backend(name, service_latency_s=0.0):
+    """(backend, finalizers): one small instance of each concurrent backend
+    flavour, plus teardown for infrastructure the backend does not own
+    (elastic pool, in-process service worker)."""
+    from repro.core import ElasticProcessPool
+    from repro.core.evals import ServiceBackend
+    from repro.core.evals.service_worker import EvalServiceWorker
+    spec = EvalSpec.resolve(FAST_SUITE, check_correctness=False,
+                            service_latency_s=service_latency_s)
+    if name == "service":
+        b = ServiceBackend(spec=spec, workers=0)
+        w = EvalServiceWorker(*b.address, slots=1, name="lifecycle")
+        t = threading.Thread(target=w.run, daemon=True)
+        t.start()
+        assert b.coordinator.wait_for_workers(1, timeout=10)
+        return b, [w.stop, lambda: t.join(5)]
+    if name == "process-elastic":
+        pool = ElasticProcessPool(
+            slot_factory=lambda: cf.ThreadPoolExecutor(max_workers=1),
+            min_workers=1, max_workers=2)
+        b = ProcessBackend(spec=spec, executor=pool)
+        return b, [lambda: pool.shutdown(wait=True, cancel_futures=True)]
+    kw = {"max_workers": 1} if name == "process" else {}
+    return make_backend(name, suite=spec, **kw), []
+
+
+@pytest.mark.parametrize("name", LIFECYCLE_BACKENDS)
+def test_backend_close_idempotent_and_submit_after_close_raises(name):
+    b, finalizers = _lifecycle_backend(name)
+    try:
+        assert b(seed_genome()).values         # the backend actually works
+        b.close()
+        b.close()                              # idempotent
+        with pytest.raises(RuntimeError, match="closed"):
+            b.submit(seed_genome())
+    finally:
+        for fin in finalizers:
+            fin()
+
+
+@pytest.mark.parametrize("name", LIFECYCLE_BACKENDS)
+def test_backend_inflight_dedup_shares_one_future(name):
+    """Submit the same genome twice while its evaluation is in flight (a
+    latency-modelled spec holds it open): the SAME future comes back, one
+    evaluation is paid, and a post-completion submit is a completed cache
+    hit — the contract the pipelined proposal phase leans on, identical on
+    every concurrent backend."""
+    b, finalizers = _lifecycle_backend(name, service_latency_s=0.4)
+    try:
+        g = seed_genome()
+        f1 = b.submit(g)
+        f2 = b.submit(g)                       # in flight -> shared future
+        assert f2 is f1
+        sv = f1.result(30)
+        assert sv.values == Scorer(suite=FAST_SUITE,
+                                   check_correctness=False)(g).values
+        f3 = b.submit(g)                       # cached -> completed future
+        assert f3.done() and f3.result().values == sv.values
+        assert b.n_evaluations == 1
+    finally:
+        b.close()
+        for fin in finalizers:
+            fin()
 
 
 # -- the picklable worker ------------------------------------------------------
@@ -359,6 +395,21 @@ def test_process_backend_bit_identical_to_inline():
     assert not want[-1].correct                  # the bf16 trap really fired
 
 
+# -- the deprecated compat shim ------------------------------------------------
+
+
+def test_scoring_shim_warns_and_still_reexports():
+    """repro.core.scoring is a deprecated alias for repro.core.evals: it must
+    say so on import and keep the stable names pointing at the real ones."""
+    import importlib
+    import sys
+    sys.modules.pop("repro.core.scoring", None)
+    with pytest.deprecated_call(match="repro.core.scoring is deprecated"):
+        shim = importlib.import_module("repro.core.scoring")
+    assert shim.Scorer is Scorer
+    assert shim.make_backend is make_backend
+
+
 # -- scenario registry ---------------------------------------------------------
 
 
@@ -431,10 +482,13 @@ def _engine_fingerprints(backend, **kw):
 
 
 def test_engine_lineages_identical_across_backends():
-    """Backend choice is wall-clock only: the search must not notice."""
+    """Backend choice is wall-clock only: the search must not notice — not
+    even when scoring leaves the host entirely (service backend over two
+    localhost socket workers)."""
     assert _engine_fingerprints("thread") == \
         _engine_fingerprints("process") == \
-        _engine_fingerprints("inline")
+        _engine_fingerprints("inline") == \
+        _engine_fingerprints("service", service_workers=2)
 
 
 def test_engine_lineages_identical_pipelined_and_elastic():

@@ -168,6 +168,82 @@ def test_cross_suite_migration_rescoring():
     sc_mha.close(); sc_dec.close()
 
 
+# -- engine: migrant payload policy (best | top-k) --------------------------------
+
+
+def test_lineage_top_k_distinct_and_deterministic():
+    ln = Lineage()
+    sc = Scorer(suite=FAST_SUITE, check_correctness=False)
+    g1, g2 = seed_genome(), seed_genome().with_(block_q=256)
+    ln.update(g1, sc(g1), "first")
+    ln.update(g2, sc(g2), "second")
+    ln.update(g1, sc(g1), "first again")        # duplicate genome: collapses
+    top = ln.top(3)
+    assert len(top) == 2                        # distinct genomes only
+    assert {c.genome.key() for c in top} == {g1.key(), g2.key()}
+    assert top[0].geomean >= top[1].geomean     # geomean-descending payload
+    assert ln.top(1) == [ln.best()]
+    # equal-geomean duplicates keep the EARLIEST version (stable payload)
+    dup = next(c for c in top if c.genome.key() == g1.key())
+    assert dup.version == 0
+
+
+def test_accept_migrants_adopts_best_survivor_on_recipient_suite():
+    """The top-k point: the donor's best at home can lose to a runner-up on
+    the recipient's suite — the recipient re-scores ALL donated commits and
+    adopts the best survivor."""
+    sc_mha = BatchScorer(Scorer(suite=suite_by_name("mha"),
+                                check_correctness=False))
+    sc_dec = BatchScorer(Scorer(suite=suite_by_name("decode"),
+                                check_correctness=False))
+    donor = Island("mha", sc_mha)
+    recipient = Island("decode", sc_dec)
+    g_a = KernelGenome(block_q=256, block_k=512, rescale_mode="branchless",
+                       mask_mode="block_skip", kv_in_grid=True)
+    g_b = seed_genome().with_(block_q=64, block_k=256, kv_in_grid=True)
+    for g, note in ((g_a, "donor A"), (g_b, "donor B")):
+        donor.lineage.update(g, sc_mha(g), note)
+    donated = donor.lineage.top(2)
+    # pick whichever donated genome scores best on the recipient's suite and
+    # assert accept_migrants lands exactly that one
+    by_recipient = max(donated, key=lambda c: sc_dec(c.genome).geomean)
+    assert recipient.accept_migrants(donated, "mha")
+    b = recipient.lineage.best()
+    assert b.genome.key() == by_recipient.genome.key()
+    assert b.values == sc_dec(by_recipient.genome).values
+    # strict improvement: re-offering the same payload is rejected
+    assert not recipient.accept_migrants(donated, "mha")
+    sc_mha.close(); sc_dec.close()
+
+
+def test_migrant_policy_default_and_k1_bit_identical():
+    """'best' stays the default and bit-identical to the historical lineages;
+    'top-k' with k=1 donates the same single commit, so it must match too."""
+    base, _ = _run_engine()
+    named, _ = _run_engine(migrant_policy="best")
+    k1, _ = _run_engine(migrant_policy="top-k", migrant_k=1)
+    for a, b, c in zip(base.islands, named.islands, k1.islands):
+        assert _lineage_fingerprint(a.lineage) == _lineage_fingerprint(b.lineage)
+        assert _lineage_fingerprint(a.lineage) == _lineage_fingerprint(c.lineage)
+
+
+def test_migrant_policy_topk_runs_and_is_deterministic():
+    a, rep = _run_engine(migrant_policy="top-k", migrant_k=3)
+    b, _ = _run_engine(migrant_policy="top-k", migrant_k=3)
+    assert rep.commits > 0
+    for x, y in zip(a.islands, b.islands):
+        assert _lineage_fingerprint(x.lineage) == _lineage_fingerprint(y.lineage)
+
+
+def test_migrant_policy_validation():
+    with pytest.raises(ValueError, match="unknown migrant_policy"):
+        IslandEvolution(n_islands=2, suite=FAST_SUITE,
+                        migrant_policy="diversity")
+    with pytest.raises(ValueError, match="migrant_k"):
+        IslandEvolution(n_islands=2, suite=FAST_SUITE,
+                        migrant_policy="top-k", migrant_k=0)
+
+
 # -- engine: shared scorer cache --------------------------------------------------
 
 

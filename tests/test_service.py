@@ -1,0 +1,317 @@
+"""The cross-host evaluation service: wire protocol, worker registry +
+heartbeats, ServiceBackend bit-identity with inline (the acceptance gate),
+dead-worker requeue onto survivors, and engine lineages surviving a worker
+kill unchanged."""
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core import (Archipelago, IslandEvolution, Scorer, make_backend,
+                        seed_genome)
+from repro.core.evals import (EvalCoordinator, EvalSpec, ServiceBackend,
+                              protocol)
+from repro.core.evals.service_worker import EvalServiceWorker
+from repro.core.perfmodel import BenchConfig
+
+FAST_SUITE = [BenchConfig("c4k", 8, 16, 16, 4096, causal=True),
+              BenchConfig("n4k", 8, 16, 16, 4096, causal=False)]
+
+
+def _inproc_worker(address, slots=1, name="inproc"):
+    """Worker on a thread inside the test process: registration, dispatch,
+    and identity paths without process spin-up cost.  (Fault tests use real
+    killed subprocesses — a thread cannot be SIGKILLed.)"""
+    w = EvalServiceWorker(*address, slots=slots, name=name)
+    t = threading.Thread(target=w.run, daemon=True)
+    t.start()
+    return w, t
+
+
+# -- the wire protocol ---------------------------------------------------------
+
+
+def test_protocol_roundtrip_and_eof():
+    a, b = socket.socketpair()
+    try:
+        g = seed_genome()
+        spec = EvalSpec.resolve(FAST_SUITE, check_correctness=False)
+        protocol.send_msg(a, {"type": protocol.TASK, "id": 7, "spec": spec,
+                              "genome": g})
+        msg = protocol.recv_msg(b)
+        assert msg["id"] == 7 and msg["spec"] == spec
+        assert msg["genome"].key() == g.key()
+        a.close()
+        with pytest.raises(ConnectionError):
+            protocol.recv_msg(b)
+    finally:
+        b.close()
+
+
+def test_parse_address():
+    assert protocol.parse_address("10.0.0.3:5123") == ("10.0.0.3", 5123)
+    with pytest.raises(ValueError, match="HOST:PORT"):
+        protocol.parse_address("5123")
+
+
+# -- registry + dispatch --------------------------------------------------------
+
+
+def test_worker_registers_and_join_event_observable():
+    coord = EvalCoordinator()
+    try:
+        assert not coord.wait_for_workers(1, timeout=0.05)
+        w, t = _inproc_worker(coord.address, slots=2, name="alpha")
+        assert coord.wait_for_workers(1, timeout=10)
+        st = coord.stats()
+        assert st["workers"] == 1 and st["total_slots"] == 2
+        assert st["events"][0] == {"event": "join", "worker": "alpha",
+                                   "slots": 2, "workers": 1}
+        w.stop()
+        t.join(5)
+    finally:
+        coord.close()
+
+
+def test_service_backend_bit_identical_to_inline():
+    """The acceptance gate: a fixed genome batch scored over the socket
+    transport must be bit-identical to the inline path — correctness
+    verdicts, per-config TFLOPS, and profile breakdowns."""
+    suite = [BenchConfig("c2k", 1, 4, 4, 2048, causal=True)]
+    genomes = [seed_genome(),
+               seed_genome().with_(block_q=512, kv_in_grid=True),
+               seed_genome().with_(mask_mode="block_skip",
+                                   rescale_mode="branchless"),
+               seed_genome().with_(acc_dtype="bf16")]   # fails correctness
+    svc = ServiceBackend(suite=suite, workers=0)
+    w, t = _inproc_worker(svc.address, slots=2)
+    try:
+        assert svc.coordinator.wait_for_workers(1, timeout=10)
+        got = svc.map(genomes)
+    finally:
+        svc.close()
+        w.stop()
+        t.join(5)
+    want = make_backend("inline", suite=suite).map(genomes)
+    for a, b in zip(got, want):
+        assert a.correct == b.correct
+        assert a.values == b.values              # bit-identical, no approx
+        assert a.config_names == b.config_names
+        assert a.failure == b.failure
+        assert {n: p.breakdown() for n, p in a.profiles.items()} == \
+            {n: p.breakdown() for n, p in b.profiles.items()}
+    assert not want[-1].correct                  # the bf16 trap really fired
+
+
+def test_service_backend_dedup_and_parent_cache():
+    svc = ServiceBackend(suite=FAST_SUITE, check_correctness=False, workers=0)
+    w, t = _inproc_worker(svc.address, slots=2)
+    try:
+        assert svc.coordinator.wait_for_workers(1, timeout=10)
+        g1, g2 = seed_genome(), seed_genome().with_(block_q=256)
+        svs = svc.map([g1, g2, g1, g2, g1])      # duplicates share one task
+        assert svc.n_evaluations == 2
+        assert [sv.values for sv in svs[:2]] == [svs[2].values, svs[3].values]
+        before = svc.n_evaluations
+        again = svc.map([g1, g2])                # parent cache: no new tasks
+        assert svc.n_evaluations == before
+        assert svc.cache_hits >= 2
+        assert [a.values for a in again] == [svs[0].values, svs[1].values]
+        assert svc.in_flight == ()
+    finally:
+        svc.close()
+        w.stop()
+        t.join(5)
+
+
+def test_remote_evaluation_failure_propagates_and_is_not_cached():
+    """A deterministic evaluation failure must propagate (never requeue —
+    retrying a poisoned genome elsewhere would loop forever) and must not
+    poison the cache for a later valid spec."""
+    coord = EvalCoordinator()
+    w, t = _inproc_worker(coord.address)
+    try:
+        assert coord.wait_for_workers(1, timeout=10)
+        bad_spec = EvalSpec(suite=("not-a-config",), check_correctness=False)
+        bad = ServiceBackend(spec=bad_spec, coordinator=coord)
+        fut = bad.submit(seed_genome())
+        with pytest.raises(RuntimeError, match="remote evaluation failed"):
+            fut.result(20)
+        assert bad.in_flight == ()               # evicted, retry possible
+        good = ServiceBackend(suite=FAST_SUITE, check_correctness=False,
+                              coordinator=coord)
+        assert good(seed_genome()).values        # fleet still healthy
+        bad.close(); good.close()
+    finally:
+        coord.close()
+        w.stop()
+        t.join(5)
+
+
+def test_shared_coordinator_serves_multiple_suites():
+    """One worker fleet, many suites: each task carries its spec, so the
+    island engine's per-suite backends share a single coordinator."""
+    coord = EvalCoordinator()
+    w, t = _inproc_worker(coord.address, slots=2)
+    try:
+        assert coord.wait_for_workers(1, timeout=10)
+        a = ServiceBackend(suite=FAST_SUITE, check_correctness=False,
+                           coordinator=coord)
+        b = ServiceBackend(suite="decode", check_correctness=False,
+                           coordinator=coord)
+        g = seed_genome()
+        sva, svb = a(g), b(g)
+        assert sva.config_names != svb.config_names
+        assert sva.values == Scorer(suite=FAST_SUITE,
+                                    check_correctness=False)(g).values
+        a.close()
+        b.close()                                # coordinator stays shared
+        assert coord.n_workers == 1
+        with pytest.raises(ValueError, match="owned-coordinator only"):
+            ServiceBackend(suite=FAST_SUITE, coordinator=coord, workers=2)
+    finally:
+        coord.close()
+        w.stop()
+        t.join(5)
+
+
+def test_coordinator_close_cancels_pending_and_rejects_submit():
+    coord = EvalCoordinator()
+    spec = EvalSpec.resolve(FAST_SUITE, check_correctness=False)
+    fut = coord.submit(spec, seed_genome())      # no workers: stays queued
+    coord.close()
+    assert fut.cancelled()
+    coord.close()                                # idempotent
+    with pytest.raises(RuntimeError, match="closed EvalCoordinator"):
+        coord.submit(spec, seed_genome())
+
+
+def test_garbage_frames_do_not_kill_the_coordinator():
+    """A listener bound for remote workers will meet stray clients: garbage
+    bytes at the handshake must be rejected quietly, and a corrupt frame
+    from a REGISTERED worker must take the synchronous death path (eviction
+    with a leave event), never leave a zombie registration behind."""
+    import struct
+    coord = EvalCoordinator()
+    try:
+        stray = socket.create_connection(coord.address)
+        stray.sendall(b"GET / HTTP/1.1\r\n\r\n")   # not a frame at all
+        stray.close()
+        corrupt = socket.create_connection(coord.address)
+        protocol.send_msg(corrupt, {"type": protocol.HELLO, "name": "bad",
+                                    "slots": 1})
+        assert coord.wait_for_workers(1, timeout=10)
+        corrupt.sendall(struct.pack(">I", 4) + b"junk")  # unpicklable frame
+        deadline = time.monotonic() + 10
+        while coord.n_workers and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert coord.n_workers == 0
+        assert any(e["event"] == "leave" and "protocol error" in e["why"]
+                   for e in coord.stats()["events"])
+        corrupt.close()
+        w, t = _inproc_worker(coord.address)      # fleet still serviceable
+        assert coord.wait_for_workers(1, timeout=10)
+        w.stop()
+        t.join(5)
+    finally:
+        coord.close()
+
+
+# -- fault tolerance ------------------------------------------------------------
+
+
+def test_missed_heartbeats_evict_worker_and_requeue_onto_survivor():
+    """The asynchronous death path: a registered worker that goes silent
+    (hang/partition — the socket stays open) is evicted after dead_after_s
+    and its in-flight task completes on a later-joining live worker."""
+    coord = EvalCoordinator(heartbeat_s=0.1, dead_after_s=0.4)
+    zombie = socket.create_connection(coord.address)
+    try:
+        protocol.send_msg(zombie, {"type": protocol.HELLO, "name": "zombie",
+                                   "slots": 1})
+        assert coord.wait_for_workers(1, timeout=10)
+        spec = EvalSpec.resolve(FAST_SUITE, check_correctness=False)
+        fut = coord.submit(spec, seed_genome())  # dispatched to the zombie
+        deadline = time.monotonic() + 10
+        while coord.n_workers and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert coord.n_workers == 0              # evicted, not still trusted
+        events = coord.stats()["events"]
+        assert any(e["event"] == "leave" and "heartbeat" in e["why"]
+                   for e in events)
+        assert any(e["event"] == "requeue" for e in events)
+        w, t = _inproc_worker(coord.address, name="live")
+        assert fut.result(30).values             # survivor finished the task
+        w.stop()
+        t.join(5)
+    finally:
+        zombie.close()
+        coord.close()
+
+
+def test_worker_kill_mid_batch_requeues_onto_survivor():
+    """The synchronous death path, with real processes: SIGKILL one of two
+    workers while both are mid-evaluation; every future must still complete,
+    bit-identical to inline, and the registry must record leave+requeue."""
+    spec = EvalSpec.resolve(FAST_SUITE, check_correctness=False,
+                            service_latency_s=0.5)
+    svc = ServiceBackend(spec=spec, workers=2)
+    try:
+        genomes = [seed_genome().with_(block_q=bq, block_k=bk)
+                   for bq in (64, 128, 256, 512) for bk in (64, 128)]
+        futs = [svc.submit(g) for g in genomes]
+        time.sleep(0.6)                          # both workers mid-evaluation
+        svc._procs[0].kill()
+        got = [f.result(60) for f in futs]
+        inline = Scorer(suite=FAST_SUITE, check_correctness=False)
+        assert [sv.values for sv in got] == [inline(g).values for g in genomes]
+        st = svc.coordinator.stats()
+        assert st["tasks_requeued"] >= 1
+        assert any(e["event"] == "leave" for e in st["events"])
+        assert any(e["event"] == "requeue" for e in st["events"])
+        assert st["workers"] == 1                # the survivor
+    finally:
+        svc.close()
+
+
+def test_engine_lineage_unchanged_by_worker_kill():
+    """The end-to-end fault gate: an island run whose service loses a worker
+    mid-flight commits the exact lineage of an uninterrupted (inline) run —
+    requeue + determinism make worker death invisible to the search."""
+    def fingerprint(eng):
+        return {i.name: [(c.genome.key(), round(c.geomean, 9), c.note)
+                         for c in i.lineage.commits] for i in eng.islands}
+
+    kw = dict(n_islands=2, suite=FAST_SUITE, migration_interval=2, seed=11,
+              check_correctness=False)
+    base = IslandEvolution(backend="inline", **kw)
+    try:
+        base.run(max_steps=4)
+        want = fingerprint(base)
+    finally:
+        base.close()
+
+    eng = IslandEvolution(backend="service", service_workers=2, **kw)
+    try:
+        eng.run(max_steps=2)                     # both workers serving
+        eng._service_procs[0].kill()             # lose one mid-run
+        deadline = time.monotonic() + 20
+        while eng.service_coordinator.n_workers > 1 \
+                and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert eng.service_coordinator.n_workers == 1
+        eng.run(max_steps=2)                     # survivor carries the rest
+        assert fingerprint(eng) == want
+        assert eng.service_coordinator.stats()["left"] == 1
+    finally:
+        eng.close()
+
+
+# -- engine integration ---------------------------------------------------------
+
+
+def test_engine_rejects_service_workers_without_service_backend():
+    with pytest.raises(ValueError, match="service_workers requires"):
+        Archipelago(n_islands=2, suite=FAST_SUITE, backend="thread",
+                    service_workers=2)
