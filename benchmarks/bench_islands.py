@@ -92,6 +92,30 @@ def cold_candidates(n):
     return out
 
 
+def wire_stats(suite, genomes):
+    """Bytes-per-task on the wire, legacy vs compact, measured on the real
+    payloads: the process path's submitted argument tuples (full
+    ``evaluate_genome(genome, suite)`` pickle vs ``evaluate_frame(edits,
+    spec_id)``) and — when a coordinator's stats are merged in by the caller
+    — the service path's framed bytes.  The compact path must be >= 5x
+    smaller; the cold-batch smoke gates on the reported ratio."""
+    import pickle
+    from repro.core.evals.worker import EvalSpec, intern_spec
+    spec = EvalSpec(tuple(suite))
+    sid = intern_spec(spec)
+    full = [len(pickle.dumps((g, spec), protocol=pickle.HIGHEST_PROTOCOL))
+            for g in genomes]
+    compact = [len(pickle.dumps((g.to_edits(), sid),
+                                protocol=pickle.HIGHEST_PROTOCOL))
+               for g in genomes]
+    full_per = sum(full) / len(full)
+    compact_per = sum(compact) / len(compact)
+    return dict(process_full_bytes_per_task=full_per,
+                process_compact_bytes_per_task=compact_per,
+                process_wire_reduction=full_per / compact_per
+                if compact_per else None)
+
+
 def run_backend_race(n_candidates, service_workers: int = 0):
     """Thread vs process (vs the socket service) wall-clock on a cold batch.
 
@@ -126,13 +150,14 @@ def run_backend_race(n_candidates, service_workers: int = 0):
     print(f"thread  backend: {t_thread:.1f}s "
           f"({thread.n_evaluations} paid evaluations)")
 
-    t_svc, svc_evals, svc_slots, res_s = None, None, None, None
+    t_svc, svc_evals, svc_slots, res_s, svc_coord = None, None, None, None, None
     if service_workers:
         t0 = time.perf_counter()
         svc = make_backend("service", suite=suite, workers=service_workers)
         res_s = svc.map(genomes)
         t_svc = time.perf_counter() - t0
         svc_evals, svc_slots = svc.n_evaluations, svc.max_workers
+        svc_coord = svc.coordinator.stats()
         svc.close()
         print(f"service backend: {t_svc:.1f}s "
               f"({svc_evals} paid evaluations over {service_workers} "
@@ -150,6 +175,23 @@ def run_backend_race(n_candidates, service_workers: int = 0):
           f"({os.cpu_count()} cores visible; on a shares-throttled or busy "
           f"host the measured ratio is contention-sensitive)")
 
+    # wire bytes per task: the process path's submitted argument pickles
+    # (full genome+spec vs edit-list+interned-spec-id) and, when the service
+    # raced, the coordinator's framed bytes over the socket
+    wire = wire_stats(suite, genomes)
+    print(f"wire bytes/task (process args): "
+          f"{wire['process_full_bytes_per_task']:.0f} B full pickle -> "
+          f"{wire['process_compact_bytes_per_task']:.0f} B compact frame "
+          f"({wire['process_wire_reduction']:.1f}x smaller)")
+    if svc_coord is not None:
+        wire["service_bytes_per_task"] = svc_coord["wire_bytes_per_task"]
+        wire["service_shm_genomes"] = svc_coord["shm_genomes"]
+        print(f"wire bytes/task (service frames): "
+              f"{svc_coord['wire_bytes_per_task']:.0f} B over "
+              f"{svc_coord['wire_tasks_sent']} tasks "
+              f"({svc_coord['shm_genomes']} genomes via the same-host "
+              f"shared-memory fast path)")
+
     rows = [["process", f"{t_proc:.2f}", len(genomes), proc.n_evaluations,
              proc.max_workers],
             ["thread", f"{t_thread:.2f}", len(genomes), thread.n_evaluations,
@@ -164,7 +206,8 @@ def run_backend_race(n_candidates, service_workers: int = 0):
                 workers_thread=thread.max_workers,
                 workers_process=proc.max_workers,
                 workers_service=service_workers or None,
-                candidates=len(genomes), cores_visible=os.cpu_count())
+                candidates=len(genomes), cores_visible=os.cpu_count(),
+                wire=wire)
     emit("eval_backends",
          ["backend", "wall_s", "candidates", "evaluations", "workers"],
          rows)
@@ -427,6 +470,9 @@ def service_smoke(args) -> int:
     print(f"service {t_svc:.1f}s vs inline {t_inline:.1f}s; "
           f"bit-identical: {'OK' if cold_identical else 'MISMATCH'}; "
           f"registry events: {[e['event'] for e in coord['events']]}")
+    print(f"wire: {coord['wire_bytes_per_task']:.0f} B/task over "
+          f"{coord['wire_tasks_sent']} framed tasks, "
+          f"{coord['shm_genomes']} genomes via shared memory")
 
     print(f"\n== latency-bound race: barrier (inline, serial latencies) vs "
           f"pipelined over the socket service ({n_workers} workers x 4 "
@@ -466,6 +512,43 @@ def service_smoke(args) -> int:
     return 0 if ok else 1
 
 
+def cold_batch_smoke(args) -> int:
+    """The CI ``cold-batch`` gate: race thread vs process (vs the service
+    when ``--service-workers`` > 0) on the cold batch and FAIL unless the
+    worker-process paths carry their weight — bit-identical scores, the
+    compact wire >= 5x smaller than the legacy full-pickle frames, and
+    (on hosts with >= 2 cores, i.e. the CI runner) process beating thread
+    on wall-clock.  Writes results/bench/cold_batch.json."""
+    n = max(4, args.cold_batch or 8)
+    print(f"== cold-batch smoke: thread vs process"
+          + (" vs service" if args.service_workers else "")
+          + f", {n} cold candidates ==")
+    race = run_backend_race(n, service_workers=args.service_workers)
+
+    cores = race["cores_visible"] or 1
+    wire_ok = race["wire"]["process_wire_reduction"] is not None \
+        and race["wire"]["process_wire_reduction"] >= 5.0
+    speedup_gated = cores >= 2       # a 1-core host serializes both sides
+    speedup_ok = race["speedup"] > 1.0
+    ok = race["identical"] and wire_ok and (speedup_ok or not speedup_gated)
+    print(f"gates: bit-identical {'OK' if race['identical'] else 'FAILED'}; "
+          f"wire reduction {race['wire']['process_wire_reduction']:.1f}x "
+          f"(>= 5x: {'OK' if wire_ok else 'FAILED'}); "
+          f"process-over-thread {race['speedup']:.2f}x "
+          + (f"(> 1.0: {'OK' if speedup_ok else 'FAILED'})" if speedup_gated
+             else f"(informational — only {cores} core visible)"))
+    emit_json("cold_batch", {
+        "candidates": n, "race": race,
+        "gates": {"bit_identical": race["identical"],
+                  "wire_reduction_5x": wire_ok,
+                  "speedup_over_thread": race["speedup"],
+                  "speedup_gated": speedup_gated,
+                  "passed": ok},
+    })
+    print("cold-batch smoke: " + ("PASSED" if ok else "FAILED"))
+    return 0 if ok else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=40,
@@ -498,6 +581,12 @@ def main(argv=None):
                     help="run ONLY the service legs + their bit-identity "
                          "gates and write results/bench/eval_service.json "
                          "(the CI service-smoke step)")
+    ap.add_argument("--cold-batch-smoke", action="store_true",
+                    help="run ONLY the cold-batch backend race and GATE it: "
+                         "bit-identity, compact wire >= 5x smaller, and "
+                         "process beating thread on >= 2 cores; writes "
+                         "results/bench/cold_batch.json (the CI cold-batch "
+                         "gate)")
     ap.add_argument("--gate", choices=("all", "deterministic"), default="all",
                     help="what the exit code enforces: 'deterministic' gates "
                          "resume identity, exact resumed-vs-uninterrupted "
@@ -508,6 +597,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.service_smoke:
         return service_smoke(args)
+    if args.cold_batch_smoke:
+        return cold_batch_smoke(args)
     topologies = [t.strip() for t in args.topologies.split(",") if t.strip()]
     unknown = [t for t in topologies if t not in topology_names()]
     if unknown:
@@ -783,7 +874,8 @@ def main(argv=None):
         "backend_race": None if race is None else
             {k: race[k] for k in ("speedup", "identical", "t_thread",
                                   "t_proc", "workers_thread",
-                                  "workers_process")},
+                                  "workers_process", "cores_visible",
+                                  "wire")},
     })
     return 0 if ok else 1
 

@@ -27,13 +27,15 @@ from repro.core.evals.scorer import CORRECTNESS_TOL, InlineBackend, Scorer
 from repro.core.evals.service import (EvalCoordinator, ServiceBackend,
                                       spawn_local_workers, stop_local_workers)
 from repro.core.evals.vector import ScoreVector
-from repro.core.evals.worker import EvalSpec, evaluate_genome, warm_worker
+from repro.core.evals.worker import (EvalSpec, evaluate_frame,
+                                     evaluate_genome, intern_spec,
+                                     warm_worker)
 
 __all__ = [
     "BACKENDS", "BatchScorer", "CORRECTNESS_TOL", "ElasticProcessPool",
     "EvalBackend", "EvalCoordinator", "EvalSpec", "InlineBackend",
     "ProcessBackend", "ScoreCache", "ScoreVector", "Scorer", "ServiceBackend",
-    "ThreadBackend", "default_worker_count", "evaluate_genome", "make_backend",
-    "make_process_executor", "spawn_local_workers", "stop_local_workers",
-    "warm_worker",
+    "ThreadBackend", "default_worker_count", "evaluate_frame",
+    "evaluate_genome", "intern_spec", "make_backend", "make_process_executor",
+    "spawn_local_workers", "stop_local_workers", "warm_worker",
 ]

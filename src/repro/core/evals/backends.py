@@ -34,8 +34,8 @@ from typing import Optional, Protocol, Sequence, Union, runtime_checkable
 from repro.core.evals.cache import ScoreCache
 from repro.core.evals.scorer import InlineBackend, Scorer
 from repro.core.evals.vector import ScoreVector
-from repro.core.evals.worker import (EvalSpec, _prestart_noop, evaluate_genome,
-                                     warm_worker)
+from repro.core.evals.worker import (EvalSpec, _prestart_noop, evaluate_frame,
+                                     evaluate_genome, intern_spec, warm_worker)
 from repro.core.perfmodel import BenchConfig
 from repro.core.search_space import KernelGenome
 
@@ -152,7 +152,10 @@ class BatchScorer:
         with self._lock:
             if self._closed:
                 raise RuntimeError("submit on closed BatchScorer")
-            sv = self.base.cache.peek(key)
+            # counted lookup: one cache hit per served request, the same
+            # contract as __call__ and ParentCacheBackend.submit — so
+            # cache_hits in reports is comparable across backends
+            sv = self.base.cache.get(key)
             if sv is not None:
                 done: concurrent.futures.Future = concurrent.futures.Future()
                 done.set_result(sv)
@@ -197,25 +200,28 @@ class BatchScorer:
 
     def map(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
         """Evaluate a batch concurrently; order-preserving, duplicates collapse
-        onto one evaluation."""
-        unique: dict[str, KernelGenome] = {}
+        onto one evaluation.  Routed through :meth:`submit` so the batch shares
+        the same in-flight table as concurrent submitters — a bare executor
+        submission here would burn a slot waiting on an in-flight duplicate."""
+        unique: dict[str, concurrent.futures.Future] = {}
         for g in genomes:
-            unique.setdefault(g.key(), g)
-        futures = {k: self._executor.submit(self, g) for k, g in unique.items()}
-        return [futures[g.key()].result() for g in genomes]
+            if g.key() not in unique:
+                unique[g.key()] = self.submit(g)
+        return [unique[g.key()].result() for g in genomes]
 
     def prefetch(self, genomes: Sequence[KernelGenome]) -> None:
-        """Fire-and-forget cache warming for speculative candidates.  Skips
-        genomes already cached *or already in flight* — a duplicate submit
-        would collapse onto the in-flight evaluation anyway, but only after
-        wasting an executor slot waiting on it."""
+        """Fire-and-forget cache warming for speculative candidates.  Peeks
+        first (speculative work must not inflate the hit count), skips genomes
+        already in flight either way (``_futures`` from submits, ``_inflight``
+        from synchronous callers), and routes the rest through :meth:`submit`
+        so later submitters share the prefetch's future."""
         for g in genomes:
             key = g.key()
             with self._lock:
                 if self.base.cache.peek(key) is not None \
-                        or key in self._inflight:
+                        or key in self._inflight or key in self._futures:
                     continue
-            self._executor.submit(self, g)
+            self.submit(g)
 
     def close(self) -> None:
         """Idempotent: later calls are no-ops; ``submit`` after close raises."""
@@ -273,13 +279,20 @@ def make_process_executor(specs: Sequence[EvalSpec],
     overlaps worker warmup with whatever the parent does next.
     """
     ctx = _resolve_mp_context(mp_context)
-    workers = max_workers or os.cpu_count() or 2
+    # clamped through default_worker_count: an unclamped cpu_count() here
+    # would spawn dozens of warm jax workers on a big host
+    workers = default_worker_count(max_workers)
     if ctx.get_start_method() == "fork" and \
             any(s.check_correctness for s in specs):
         _parent_import_warmup()
+    # workers get (interned id, spec) pairs so the compact evaluate_frame
+    # path can address specs by id; warm_spec_ids advertises which ids this
+    # pool understands (ProcessBackend gates its dispatch encoding on it)
+    pairs = tuple((intern_spec(s), s) for s in specs)
     executor = concurrent.futures.ProcessPoolExecutor(
         max_workers=workers, mp_context=ctx,
-        initializer=warm_worker, initargs=(tuple(specs),))
+        initializer=warm_worker, initargs=(pairs,))
+    executor.warm_spec_ids = frozenset(sid for sid, _ in pairs)
     for _ in range(workers):
         executor.submit(_prestart_noop)
     return executor
@@ -311,6 +324,13 @@ class ParentCacheBackend:
     # -- what a subclass provides ---------------------------------------------------
     def _dispatch_eval(self, genome: KernelGenome) -> concurrent.futures.Future:
         raise NotImplementedError
+
+    def _dispatch_eval_many(self, genomes: Sequence[KernelGenome]) -> list:
+        """Dispatch a batch the parent has already deduped.  Default: one
+        dispatch per genome; backends with a batched wire (the service
+        coordinator's ``tasks`` frames) override to ship the whole batch in
+        one frame.  Called under the backend lock."""
+        return [self._dispatch_eval(g) for g in genomes]
 
     def _close_resources(self) -> None:
         raise NotImplementedError
@@ -369,21 +389,74 @@ class ParentCacheBackend:
             if not fut.cancelled() and fut.exception() is None:
                 self.cache.put(key, fut.result())
 
+    def submit_many(self, genomes: Sequence[KernelGenome]) -> list:
+        """Batch form of :meth:`submit`: one future per request (duplicates
+        share), with every genome that actually needs evaluation handed to the
+        subclass as ONE batch (:meth:`_dispatch_eval_many`) under a single
+        lock pass — the wire-level win for the service backend, where the
+        batch travels in one frame instead of len(batch) round trips."""
+        new_keys: list[str] = []
+        new_seen: set[str] = set()
+        new_genomes: list[KernelGenome] = []
+        futs: dict[str, concurrent.futures.Future] = {}
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(
+                    f"submit on closed {type(self).__name__}")
+            for g in genomes:
+                key = g.key()
+                if key in futs or key in new_seen:
+                    continue                      # within-batch duplicate
+                sv = self.cache.get(key)
+                if sv is not None:
+                    done: concurrent.futures.Future = \
+                        concurrent.futures.Future()
+                    done.set_result(sv)
+                    futs[key] = done
+                    continue
+                fut = self._futures.get(key)
+                if fut is not None:
+                    futs[key] = fut               # collapse onto in-flight
+                    continue
+                new_keys.append(key)
+                new_seen.add(key)
+                new_genomes.append(g)
+            dispatched = self._dispatch_eval_many(new_genomes) \
+                if new_genomes else []
+            for key, fut in zip(new_keys, dispatched):
+                self._paid += 1
+                self._futures[key] = fut
+                futs[key] = fut
+        # outside the lock: a completed future runs its callback synchronously
+        for key, fut in zip(new_keys, dispatched):
+            fut.add_done_callback(lambda f, key=key: self._on_done(key, f))
+        return [futs[g.key()] for g in genomes]
+
     def __call__(self, genome: KernelGenome) -> ScoreVector:
         return self.submit(genome).result()
 
     def map(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
-        """Order-preserving batch evaluation; duplicates share one task."""
-        futures = [self.submit(g) for g in genomes]
+        """Order-preserving batch evaluation; duplicates share one task and
+        the whole batch ships in one dispatch (:meth:`submit_many`)."""
+        futures = self.submit_many(genomes)
         return [f.result() for f in futures]
 
     def prefetch(self, genomes: Sequence[KernelGenome]) -> None:
-        for g in genomes:
-            key = g.key()
-            with self._lock:
-                if self.cache.peek(key) is not None or key in self._futures:
+        """Speculative batch warming: peek (hit count untouched — these are
+        guesses, not served requests), then batch-submit whatever is neither
+        cached nor in flight."""
+        todo: list[KernelGenome] = []
+        seen: set[str] = set()
+        with self._lock:
+            for g in genomes:
+                key = g.key()
+                if key in seen or self.cache.peek(key) is not None \
+                        or key in self._futures:
                     continue
-            self.submit(g)
+                seen.add(key)
+                todo.append(g)
+        if todo:
+            self.submit_many(todo)
 
     def close(self) -> None:
         """Idempotent: later calls are no-ops; ``submit`` after close raises."""
@@ -416,9 +489,21 @@ class ProcessBackend(ParentCacheBackend):
         self._executor = executor or make_process_executor(
             (self.spec,), max_workers=max_workers, mp_context=mp_context)
         self.max_workers = getattr(self._executor, "_max_workers", None) \
-            or max_workers or (os.cpu_count() or 2)
+            or default_worker_count(max_workers)
+        # compact dispatch needs workers that know this spec's interned id —
+        # true for make_process_executor/ElasticProcessPool pools, unknowable
+        # for arbitrary injected executors (tests inject thread pools), which
+        # keep the full-payload path
+        self._spec_id = intern_spec(self.spec)
+        self._compact_wire = self._spec_id in getattr(
+            self._executor, "warm_spec_ids", ())
 
     def _dispatch_eval(self, genome: KernelGenome) -> concurrent.futures.Future:
+        if self._compact_wire:
+            # seed-only frame: tens of bytes on the queue vs ~560 for the
+            # full (genome, spec) pickle — the cold-batch wire win
+            return self._executor.submit(
+                evaluate_frame, genome.to_edits(), self._spec_id)
         return self._executor.submit(evaluate_genome, genome, self.spec)
 
     def _close_resources(self) -> None:

@@ -29,7 +29,8 @@ import threading
 import time
 from typing import Callable, Optional, Sequence
 
-from repro.core.evals.worker import EvalSpec, _prestart_noop, warm_worker
+from repro.core.evals.worker import (EvalSpec, _prestart_noop, intern_spec,
+                                     warm_worker)
 
 __all__ = ["ElasticProcessPool"]
 
@@ -43,6 +44,9 @@ def _default_slot_factory(specs: Sequence[EvalSpec],
     from repro.core.evals.backends import (_jax_fork_unsafe,
                                            _parent_import_warmup,
                                            _resolve_mp_context)
+    # (interned id, spec) pairs: every slot's worker registers the ids, so
+    # the pool as a whole honours the compact evaluate_frame wire format
+    pairs = tuple((intern_spec(s), s) for s in specs)
 
     def factory() -> concurrent.futures.Executor:
         ctx = _resolve_mp_context(mp_context)
@@ -53,7 +57,7 @@ def _default_slot_factory(specs: Sequence[EvalSpec],
                 _parent_import_warmup()
         ex = concurrent.futures.ProcessPoolExecutor(
             max_workers=1, mp_context=ctx,
-            initializer=warm_worker, initargs=(tuple(specs),))
+            initializer=warm_worker, initargs=(pairs,))
         ex.submit(_prestart_noop)      # start the worker process immediately
         return ex
 
@@ -100,14 +104,23 @@ class ElasticProcessPool:
                  shrink_idle_s: float = 10.0,
                  mp_context=None,
                  slot_factory: Optional[Callable[[], concurrent.futures.Executor]] = None):
-        import os
+        from repro.core.evals.backends import default_worker_count
         if min_workers < 1:
             raise ValueError(f"min_workers must be >= 1, got {min_workers}")
         self.min_workers = min_workers
-        self.max_workers = max_workers or (os.cpu_count() or 2)
-        if self.max_workers < self.min_workers:
-            raise ValueError(f"max_workers {self.max_workers} < "
+        if max_workers is not None and max_workers < min_workers:
+            # an explicit, contradictory cap is an error; only the *default*
+            # cap below is silently lifted to the floor
+            raise ValueError(f"max_workers {max_workers} < "
                              f"min_workers {min_workers}")
+        # default cap clamped like make_process_executor — an unclamped
+        # cpu_count() would let bursts spawn dozens of warm jax workers
+        self.max_workers = max(min_workers, default_worker_count(max_workers))
+        # which interned spec ids this pool's real worker slots understand
+        # (injected slot factories run arbitrary executors -> none)
+        self.warm_spec_ids = frozenset(
+            intern_spec(s) for s in specs) if slot_factory is None \
+            else frozenset()
         # reported as the pool width by backends that introspect executors
         self._max_workers = self.max_workers
         self.grow_depth = grow_depth

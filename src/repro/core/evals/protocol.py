@@ -10,12 +10,27 @@ same serialization and inherits its bit-identity guarantee.
 
 Frame types (the ``"type"`` key of every message):
 
-  hello      worker -> coordinator  registration: name, slots (capacity)
+  hello      worker -> coordinator  registration: name, slots (capacity),
+                                    host (enables the same-host shm path)
   welcome    coordinator -> worker  assigned worker id, heartbeat interval,
                                     and the specs to pre-warm scorers for
   warm       coordinator -> worker  additional specs registered later
   task       coordinator -> worker  {id, spec, genome}: evaluate and reply
+                                    (legacy single-task frame, kept for old
+                                    workers; the coordinator now batches)
+  tasks      coordinator -> worker  {tasks: [(id, payload), ...],
+                                    specs: [(sid, spec), ...],
+                                    shm: [segment names]}: a batch of
+                                    compact assignments — payload is
+                                    ("ed", edits, sid) for a seed-relative
+                                    genome frame or ("shm", seg, off, len,
+                                    sid) for a same-host shared-memory ref;
+                                    specs/shm repeat un-acked announcements
+                                    (idempotent worker-side)
   result     worker -> coordinator  {id, ok, value | error}
+  shm_ok     worker -> coordinator  worker attached the shm segments named
+                                    in a tasks frame (same-host fast path
+                                    confirmed usable)
   heartbeat  worker -> coordinator  liveness beacon (any frame counts too)
   shutdown   coordinator -> worker  drain and exit
 
@@ -38,15 +53,25 @@ HELLO = "hello"
 WELCOME = "welcome"
 WARM = "warm"
 TASK = "task"
+TASKS = "tasks"
 RESULT = "result"
+SHM_OK = "shm_ok"
 HEARTBEAT = "heartbeat"
 SHUTDOWN = "shutdown"
 
 
+def frame_size(msg: dict) -> int:
+    """On-wire size of a message (length prefix included) — what the
+    coordinator's wire-bytes accounting and the bench's bytes-per-task
+    metric measure."""
+    return _LEN.size + len(pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL))
+
+
 def send_msg(sock: socket.socket, msg: dict,
-             lock: "threading.Lock | None" = None) -> None:
+             lock: "threading.Lock | None" = None) -> int:
     """Frame and send one message; ``lock`` serializes concurrent senders
-    (heartbeat thread vs result thread) so frames never interleave."""
+    (heartbeat thread vs result thread) so frames never interleave.
+    Returns the number of bytes put on the wire (prefix included)."""
     payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
     if len(payload) >= MAX_FRAME:
         raise ValueError(f"frame too large: {len(payload)} bytes")
@@ -56,6 +81,7 @@ def send_msg(sock: socket.socket, msg: dict,
     else:
         with lock:
             sock.sendall(data)
+    return len(data)
 
 
 def recv_msg(sock: socket.socket) -> dict:
@@ -79,8 +105,15 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
 
 
 def parse_address(address: str) -> tuple[str, int]:
-    """``HOST:PORT`` -> (host, port); the worker CLI's --connect format."""
+    """``HOST:PORT`` -> (host, port); the worker CLI's --connect format.
+    IPv6 literals use the standard bracket form — ``[::1]:9000`` -> ``::1``
+    (the brackets are wire syntax only; ``socket`` wants them stripped)."""
     host, sep, port = address.rpartition(":")
     if not sep or not host:
         raise ValueError(f"address must be HOST:PORT, got {address!r}")
+    if host.startswith("[") and host.endswith("]"):
+        host = host[1:-1]
+    elif ":" in host:
+        raise ValueError(
+            f"IPv6 address must be bracketed, like [::1]:9000; got {address!r}")
     return host, int(port)

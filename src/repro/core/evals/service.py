@@ -39,18 +39,20 @@ from __future__ import annotations
 import concurrent.futures
 import itertools
 import os
+import pickle
 import socket
 import subprocess
 import sys
 import threading
 import time
 from collections import deque
+from multiprocessing import shared_memory
 from typing import Optional, Sequence, Union
 
 from repro.core.evals import protocol
 from repro.core.evals.backends import ParentCacheBackend
 from repro.core.evals.cache import ScoreCache
-from repro.core.evals.worker import EvalSpec
+from repro.core.evals.worker import EvalSpec, intern_spec
 from repro.core.perfmodel import BenchConfig
 from repro.core.search_space import KernelGenome
 
@@ -62,9 +64,12 @@ class _RemoteWorker:
     """Registry entry for one connected worker host."""
 
     __slots__ = ("wid", "name", "slots", "conn", "send_lock", "in_flight",
-                 "last_seen", "alive")
+                 "last_seen", "alive", "host", "compact", "shm_ok",
+                 "specs_known", "segments_known")
 
-    def __init__(self, wid: int, name: str, slots: int, conn: socket.socket):
+    def __init__(self, wid: int, name: str, slots: int, conn: socket.socket, *,
+                 host: Optional[str] = None, compact: bool = False,
+                 wants_shm: bool = False):
         self.wid = wid
         self.name = name
         self.slots = max(1, slots)
@@ -73,10 +78,73 @@ class _RemoteWorker:
         self.in_flight: dict[int, dict] = {}       # task id -> task
         self.last_seen = time.monotonic()
         self.alive = True
+        # wire-format capabilities from the HELLO frame.  A worker that
+        # advertises nothing (old binary, test zombie) gets legacy per-task
+        # full-payload frames forever — capability is negotiated, not assumed.
+        self.host = host                     # for the same-host shm fast path
+        self.compact = compact               # understands batched tasks frames
+        # None = shm untried (use optimistically), False = failed, disabled
+        self.shm_ok: Optional[bool] = None if wants_shm else False
+        # announcements confirmed delivered (send succeeded); until then every
+        # tasks frame repeats them — duplicate delivery is idempotent
+        self.specs_known: set[int] = set()
+        self.segments_known: set[str] = set()
 
     @property
     def free_slots(self) -> int:
         return self.slots - len(self.in_flight)
+
+
+class _ShmGenomeStore:
+    """Append-only arena of pickled genomes in POSIX shared memory — the
+    same-host fast path's parent side.  Each unique genome (by key) is
+    written once; tasks then carry a ~30-byte ``(segment, offset, length)``
+    ref instead of the payload, and a same-host worker reads the bytes
+    straight out of the mapping (zero copies through the socket).  Append-only
+    is what makes lock-free worker reads safe: a published ref's bytes are
+    immutable for the store's lifetime.  The coordinator owns the segments
+    and unlinks them on close."""
+
+    def __init__(self, segment_bytes: int = 1 << 20):
+        self._segment_bytes = segment_bytes
+        self._segments: list[shared_memory.SharedMemory] = []
+        self._refs: dict[str, tuple[str, int, int]] = {}   # genome key -> ref
+        self._fill = 0
+        self.bytes_stored = 0
+
+    def put(self, genome: KernelGenome) -> tuple[str, int, int]:
+        """Intern one genome; returns its ``(segment name, offset, length)``."""
+        key = genome.key()
+        ref = self._refs.get(key)
+        if ref is not None:
+            return ref
+        payload = pickle.dumps(genome, protocol=pickle.HIGHEST_PROTOCOL)
+        n = len(payload)
+        if not self._segments or self._fill + n > self._segment_bytes:
+            self._segments.append(shared_memory.SharedMemory(
+                create=True, size=max(self._segment_bytes, n)))
+            self._fill = 0
+        seg = self._segments[-1]
+        seg.buf[self._fill:self._fill + n] = payload
+        ref = (seg.name, self._fill, n)
+        self._fill += n
+        self.bytes_stored += n
+        self._refs[key] = ref
+        return ref
+
+    @property
+    def n_genomes(self) -> int:
+        return len(self._refs)
+
+    def close(self) -> None:
+        for seg in self._segments:
+            try:
+                seg.close()
+                seg.unlink()
+            except OSError:
+                pass
+        self._segments.clear()
+        self._refs.clear()
 
 
 class EvalCoordinator:
@@ -101,7 +169,7 @@ class EvalCoordinator:
         self._roster = threading.Condition(self._lock)  # notified on join
         self._workers: dict[int, _RemoteWorker] = {}
         self._pending: deque[dict] = deque()
-        self._specs: list[EvalSpec] = []
+        self._specs: list[tuple[int, EvalSpec]] = []   # (interned id, spec)
         self._next_wid = itertools.count()
         self._next_tid = itertools.count()
         self._closed = False
@@ -110,6 +178,15 @@ class EvalCoordinator:
         self.tasks_completed = 0
         self.tasks_requeued = 0
         self.events: list[dict] = []
+        # wire accounting for the bench's bytes-per-task metric: every
+        # task-carrying frame's on-wire size, and the tasks it carried
+        self.wire_task_bytes = 0
+        self.wire_tasks_sent = 0
+        # same-host fast path: lazily-created genome arena, and this host's
+        # name to match worker HELLOs against
+        self._hostname = socket.gethostname()
+        self._shm_store: Optional[_ShmGenomeStore] = None
+        self._shm_broken = False    # /dev/shm unusable: stop trying
 
         self._listener = socket.create_server((host, port))
         self.address: tuple[str, int] = self._listener.getsockname()[:2]
@@ -152,6 +229,15 @@ class EvalCoordinator:
                 "tasks_requeued": self.tasks_requeued,
                 "joined": sum(1 for e in self.events if e["event"] == "join"),
                 "left": sum(1 for e in self.events if e["event"] == "leave"),
+                "wire_task_bytes": self.wire_task_bytes,
+                "wire_tasks_sent": self.wire_tasks_sent,
+                "wire_bytes_per_task": (self.wire_task_bytes /
+                                        self.wire_tasks_sent
+                                        if self.wire_tasks_sent else 0.0),
+                "shm_genomes": (self._shm_store.n_genomes
+                                if self._shm_store else 0),
+                "shm_bytes": (self._shm_store.bytes_stored
+                              if self._shm_store else 0),
                 "events": list(self.events),
             }
 
@@ -186,39 +272,58 @@ class EvalCoordinator:
         return procs
 
     # -- the scoring surface -------------------------------------------------------
-    def register_spec(self, spec: EvalSpec) -> None:
+    def register_spec(self, spec: EvalSpec) -> int:
         """Announce a spec so current AND future workers pre-warm its scorer
-        (first-evaluation latency only; tasks always carry their spec)."""
+        (first-evaluation latency only; tasks announce any spec a worker has
+        not yet confirmed).  Returns the spec's interned wire id."""
+        sid = intern_spec(spec)
         with self._lock:
-            if spec in self._specs:
-                return
-            self._specs.append(spec)
+            if any(s == spec for _, s in self._specs):
+                return sid
+            self._specs.append((sid, spec))
             workers = list(self._workers.values())
         for w in workers:
-            self._try_send(w, {"type": protocol.WARM, "specs": (spec,)})
+            if self._try_send(w, {"type": protocol.WARM,
+                                  "specs": ((sid, spec),)}) is not None:
+                with self._lock:
+                    w.specs_known.add(sid)
+        return sid
 
     def submit(self, spec: EvalSpec, genome: KernelGenome
                ) -> concurrent.futures.Future:
-        fut: concurrent.futures.Future = concurrent.futures.Future()
-        task = {"id": next(self._next_tid), "spec": spec, "genome": genome,
-                "future": fut}
+        return self.submit_many(spec, (genome,))[0]
+
+    def submit_many(self, spec: EvalSpec, genomes: Sequence[KernelGenome]
+                    ) -> list:
+        """Queue a batch under one lock pass; the whole batch rides to each
+        assigned worker in one ``tasks`` frame (see :meth:`_dispatch`)."""
+        sid = intern_spec(spec)
+        futs: list[concurrent.futures.Future] = []
         with self._lock:
             if self._closed:
                 raise RuntimeError("submit on closed EvalCoordinator")
-            self.tasks_submitted += 1
-            self._pending.append(task)
+            for genome in genomes:
+                fut: concurrent.futures.Future = concurrent.futures.Future()
+                self._pending.append({"id": next(self._next_tid), "spec": spec,
+                                      "sid": sid, "genome": genome,
+                                      "future": fut})
+                self.tasks_submitted += 1
+                futs.append(fut)
         self._dispatch()
-        return fut
+        return futs
 
     # -- dispatch ------------------------------------------------------------------
     def _dispatch(self) -> None:
-        """Feed free worker slots from the FIFO.  Socket sends happen outside
-        the registry lock (a slow peer must not stall the coordinator); a
-        failed send kills that worker and requeues, so the loop re-runs until
-        quiescent."""
+        """Feed free worker slots from the FIFO, coalescing everything
+        assigned to one worker into a single ``tasks`` frame (legacy workers
+        get per-task frames).  Socket sends happen outside the registry lock
+        (a slow peer must not stall the coordinator); a failed send kills
+        that worker and requeues, so the loop re-runs until quiescent."""
         while True:
-            assignments: list[tuple[_RemoteWorker, dict]] = []
+            batches: list[tuple[_RemoteWorker, list[dict], list[dict],
+                                set[int], set[str]]] = []
             with self._lock:
+                grouped: dict[int, tuple[_RemoteWorker, list[dict]]] = {}
                 while self._pending:
                     free = [w for w in self._workers.values()
                             if w.alive and w.free_slots > 0]
@@ -231,23 +336,75 @@ class EvalCoordinator:
                     if task["future"].cancelled():
                         continue
                     w.in_flight[task["id"]] = task
-                    assignments.append((w, task))
-            if not assignments:
+                    grouped.setdefault(w.wid, (w, []))[1].append(task)
+                for w, tasks in grouped.values():
+                    frames, sids, segs = self._encode_tasks_locked(w, tasks)
+                    batches.append((w, tasks, frames, sids, segs))
+            if not batches:
                 return
-            for w, task in assignments:
-                ok = self._try_send(w, {"type": protocol.TASK,
-                                        "id": task["id"],
-                                        "spec": task["spec"],
-                                        "genome": task["genome"]})
-                if not ok:
-                    self._worker_died(w, "send failed")   # requeues the task
+            for w, tasks, frames, sids, segs in batches:
+                sent = 0
+                for frame in frames:
+                    n = self._try_send(w, frame)
+                    if n is None:
+                        self._worker_died(w, "send failed")  # requeues
+                        sent = None
+                        break
+                    sent += n
+                if sent is not None:
+                    with self._lock:
+                        self.wire_task_bytes += sent
+                        self.wire_tasks_sent += len(tasks)
+                        # announcements riding these frames are now delivered
+                        w.specs_known |= sids
+                        w.segments_known |= segs
 
-    def _try_send(self, w: _RemoteWorker, msg: dict) -> bool:
+    def _encode_tasks_locked(self, w: _RemoteWorker, tasks: list[dict]
+                             ) -> tuple[list[dict], set[int], set[str]]:
+        """Encode one worker's assignments.  Compact workers get ONE batched
+        frame of seed-relative edit lists (or shm refs on the same host) plus
+        whatever spec/segment announcements this worker still needs; legacy
+        workers get one full-payload frame per task.  Returns the frames and
+        the announced spec ids / segment names (to confirm after the send)."""
+        if not w.compact:
+            return ([{"type": protocol.TASK, "id": t["id"], "spec": t["spec"],
+                      "genome": t["genome"]} for t in tasks], set(), set())
+        use_shm = (w.host == self._hostname and w.shm_ok is not False
+                   and not self._shm_broken)
+        entries, need_specs, need_segs = [], {}, set()
+        for t in tasks:
+            sid = t["sid"]
+            if sid not in w.specs_known:
+                need_specs[sid] = t["spec"]
+            payload = None
+            if use_shm:
+                try:
+                    if self._shm_store is None:
+                        self._shm_store = _ShmGenomeStore()
+                    seg, off, ln = self._shm_store.put(t["genome"])
+                except OSError:
+                    self._shm_broken = True     # no usable /dev/shm: fall back
+                    use_shm = False
+                else:
+                    payload = ("shm", seg, off, ln, sid)
+                    if seg not in w.segments_known:
+                        need_segs.add(seg)
+            if payload is None:
+                payload = ("ed", t["genome"].to_edits(), sid)
+            entries.append((t["id"], payload))
+        frame = {"type": protocol.TASKS, "tasks": entries}
+        if need_specs:
+            frame["specs"] = tuple(need_specs.items())
+        if need_segs:
+            frame["shm"] = tuple(need_segs)
+        return ([frame], set(need_specs), need_segs)
+
+    def _try_send(self, w: _RemoteWorker, msg: dict) -> Optional[int]:
+        """Send one frame; returns bytes written, or None on a dead socket."""
         try:
-            protocol.send_msg(w.conn, msg, lock=w.send_lock)
-            return True
+            return protocol.send_msg(w.conn, msg, lock=w.send_lock)
         except OSError:
-            return False
+            return None
 
     # -- worker lifecycle ----------------------------------------------------------
     def _accept_loop(self) -> None:
@@ -278,15 +435,21 @@ class EvalCoordinator:
             wid = next(self._next_wid)
             specs_sent = tuple(self._specs)
         w = _RemoteWorker(wid, hello.get("name") or f"worker{wid}",
-                          int(hello.get("slots", 1)), conn)
+                          int(hello.get("slots", 1)), conn,
+                          host=hello.get("host"),
+                          compact=bool(hello.get("compact")),
+                          wants_shm=bool(hello.get("shm")))
         # WELCOME goes out BEFORE the worker is dispatchable: once it is in
         # the registry, other threads (register_spec, _dispatch) may send on
-        # this socket, and a TASK/WARM frame must never beat the WELCOME
+        # this socket, and a TASK/WARM frame must never beat the WELCOME.
+        # specs travel as (interned id, spec) pairs — warm_worker registers
+        # the ids so later tasks frames can address specs by id alone.
         if not self._try_send(w, {"type": protocol.WELCOME, "worker_id": wid,
                                   "heartbeat_s": self.heartbeat_s,
                                   "specs": specs_sent}):
             conn.close()
             return
+        w.specs_known |= {sid for sid, _ in specs_sent}
         with self._lock:
             if self._closed:
                 conn.close()
@@ -296,12 +459,15 @@ class EvalCoordinator:
             self.events.append({"event": "join", "worker": w.name,
                                 "slots": w.slots,
                                 "workers": len(self._workers)})
-            missed = tuple(s for s in self._specs if s not in specs_sent)
+            missed = tuple(p for p in self._specs if p not in specs_sent)
             self._roster.notify_all()
-        if missed and not self._try_send(w, {"type": protocol.WARM,
-                                             "specs": missed}):
-            self._worker_died(w, "warm failed")
-            return
+        if missed:
+            if not self._try_send(w, {"type": protocol.WARM,
+                                      "specs": missed}):
+                self._worker_died(w, "warm failed")
+                return
+            with self._lock:
+                w.specs_known |= {sid for sid, _ in missed}
         self._dispatch()
         self._reader_loop(w)
 
@@ -323,9 +489,31 @@ class EvalCoordinator:
             kind = msg.get("type")
             if kind == protocol.RESULT:
                 self._complete(w, msg)
+            elif kind == protocol.SHM_OK:
+                with self._lock:
+                    w.shm_ok = True
+                    w.segments_known.update(msg.get("segments", ()))
             # heartbeats (and anything unknown) only refresh last_seen
 
     def _complete(self, w: _RemoteWorker, msg: dict) -> None:
+        if msg.get("shm_failure"):
+            # the worker could not attach/read the shared-memory payload —
+            # disable the fast path for it and requeue the task (front of
+            # queue, like a death requeue): it re-dispatches as an ordinary
+            # edit-list frame, so the waiting future completes late, not wrong
+            with self._lock:
+                task = w.in_flight.pop(msg["id"], None)
+                w.shm_ok = False
+                w.segments_known.clear()
+                if task is not None:
+                    self._pending.appendleft(task)
+                    self.tasks_requeued += 1
+                    self.events.append({"event": "requeue", "worker": w.name,
+                                        "tasks": 1,
+                                        "workers": len(self._workers),
+                                        "why": "shm"})
+            self._dispatch()
+            return
         with self._lock:
             task = w.in_flight.pop(msg["id"], None)
             if task is not None:
@@ -417,6 +605,8 @@ class EvalCoordinator:
             except OSError:
                 pass
             w.conn.close()
+        if self._shm_store is not None:
+            self._shm_store.close()     # unlink the same-host genome arena
 
 
 def _worker_env() -> dict:
@@ -526,6 +716,13 @@ class ServiceBackend(ParentCacheBackend):
         """One task on the wire.  ``n_evaluations`` counts these dispatches;
         a dead worker's requeues are coordinator-internal, not re-counted."""
         return self.coordinator.submit(self.spec, genome)
+
+    def _dispatch_eval_many(self, genomes: Sequence[KernelGenome]) -> list:
+        """A whole deduped batch in one coordinator pass — the tasks travel
+        to each assigned worker in a single batched frame instead of
+        len(batch) round trips (``map``/``prefetch`` land here via
+        ``ParentCacheBackend.submit_many``)."""
+        return self.coordinator.submit_many(self.spec, genomes)
 
     def _close_resources(self) -> None:
         """A shared coordinator is left running for its other backends."""

@@ -8,10 +8,27 @@ Run one per host (or several, one per core group) against a coordinator:
 The worker registers, pre-warms a per-spec :class:`Scorer` table for every
 spec the coordinator announces (so the first real evaluation pays no warmup),
 heartbeats on the interval the coordinator dictates, and streams results
-back as they complete.  Evaluation goes through the same pure
-``evaluate_genome(genome, spec)`` contract the process backend uses, so a
-ScoreVector computed here is bit-identical to one computed inline, in a
-local worker process, or on any other host.
+back as they complete.  Evaluation rebuilds the genome and scorer
+deterministically from the task payload, so a ScoreVector computed here is
+bit-identical to one computed inline, in a local worker process, or on any
+other host.
+
+Wire formats served (capabilities advertised in HELLO, never assumed):
+
+  * legacy ``task`` frames — full ``(spec, genome)`` pickles;
+  * batched ``tasks`` frames — many assignments per frame, each payload a
+    seed-relative edit list (``("ed", edits, sid)``) or, when this worker
+    runs on the coordinator's own host, a shared-memory ref
+    (``("shm", segment, offset, length, sid)``) read straight out of the
+    coordinator's genome arena.  ``sid`` names a spec announced earlier
+    (WELCOME/WARM/in-frame ``specs`` pairs); announcements repeat until a
+    carrying frame is delivered, and re-registration is a no-op, so a task
+    can never reference a spec this worker has not seen.
+
+A shared-memory ref the worker cannot attach or decode is reported as a
+``shm_failure`` result: the coordinator requeues the task as an ordinary
+edit-list frame and stops sending this worker shm refs — degraded, never
+wrong.
 
 ``--slots N`` evaluates up to N tasks concurrently on a thread pool: sleeps
 from a latency-modelled spec (``service_latency_s``) and XLA's internal
@@ -26,14 +43,35 @@ from __future__ import annotations
 
 import argparse
 import concurrent.futures
+import pickle
 import socket
 import threading
+from multiprocessing import shared_memory
 from typing import Optional, Sequence
 
 from repro.core.evals import protocol
 from repro.core.evals.worker import EvalSpec, _scorer_for, evaluate_genome
+from repro.core.search_space import KernelGenome
 
 __all__ = ["EvalServiceWorker", "main"]
+
+
+def _attach_readonly(name: str) -> shared_memory.SharedMemory:
+    """Attach an existing segment WITHOUT adopting ownership: the coordinator
+    created it and will unlink it.  Python < 3.13 has no ``track=False``, and
+    its resource tracker would unlink the segment when this process exits —
+    yanking the arena out from under the coordinator — so the registration is
+    explicitly undone."""
+    try:
+        return shared_memory.SharedMemory(name=name, track=False)
+    except TypeError:
+        seg = shared_memory.SharedMemory(name=name)
+        try:
+            from multiprocessing import resource_tracker
+            resource_tracker.unregister(seg._name, "shared_memory")
+        except Exception:
+            pass
+        return seg
 
 
 class EvalServiceWorker:
@@ -48,19 +86,46 @@ class EvalServiceWorker:
         self._sock: Optional[socket.socket] = None
         self._send_lock = threading.Lock()
         self._stop = threading.Event()
+        # per-instance, not module-global: several workers (tests) or several
+        # coordinators' id spaces must never bleed into each other
+        self._specs: dict[int, EvalSpec] = {}
+        self._segments: dict[str, shared_memory.SharedMemory] = {}
+        self._seg_lock = threading.Lock()
 
     # -- plumbing -----------------------------------------------------------------
     def _send(self, msg: dict) -> None:
         protocol.send_msg(self._sock, msg, lock=self._send_lock)
 
     def _warm(self, pool: concurrent.futures.Executor,
-              specs: Sequence[EvalSpec]) -> None:
-        """Pre-build scorers off the receive loop — a long jax proxy-input
-        build must never starve heartbeats or task intake."""
-        for spec in specs:
+              specs: Sequence) -> None:
+        """Register announced ``(sid, spec)`` pairs (bare specs tolerated) and
+        pre-build scorers off the receive loop — a long jax proxy-input build
+        must never starve heartbeats or task intake."""
+        for item in specs:
+            if isinstance(item, EvalSpec):
+                spec = item
+            else:
+                sid, spec = item
+                self._specs[int(sid)] = spec
             pool.submit(lambda s=spec: _scorer_for(s).warm())
 
+    def _shm_genome(self, seg_name: str, off: int, ln: int) -> KernelGenome:
+        """Read one pickled genome straight out of the coordinator's arena
+        (attaching the segment on first reference)."""
+        with self._seg_lock:
+            seg = self._segments.get(seg_name)
+            if seg is None:
+                seg = _attach_readonly(seg_name)
+                self._segments[seg_name] = seg
+                fresh = True
+            else:
+                fresh = False
+        if fresh:
+            self._send({"type": protocol.SHM_OK, "segments": (seg_name,)})
+        return pickle.loads(bytes(seg.buf[off:off + ln]))
+
     def _evaluate(self, task_id: int, spec: EvalSpec, genome) -> None:
+        """Legacy full-payload task frame."""
         try:
             sv = evaluate_genome(genome, spec)
             msg = {"type": protocol.RESULT, "id": task_id, "ok": True,
@@ -72,6 +137,35 @@ class EvalServiceWorker:
             self._send(msg)
         except OSError:
             self._stop.set()              # coordinator gone: wind down
+
+    def _evaluate_entry(self, task_id: int, payload: tuple) -> None:
+        """One assignment from a batched ``tasks`` frame."""
+        try:
+            if payload[0] == "shm":
+                _, seg_name, off, ln, sid = payload
+                try:
+                    genome = self._shm_genome(seg_name, off, ln)
+                except Exception:
+                    # cannot reach the arena: ask for the payload another way
+                    self._send({"type": protocol.RESULT, "id": task_id,
+                                "shm_failure": True})
+                    return
+            else:
+                _, edits, sid = payload
+                genome = KernelGenome.from_edits(edits)
+            spec = self._specs.get(sid)
+            if spec is None:
+                raise RuntimeError(f"task references unannounced spec id {sid}")
+            sv = _scorer_for(spec).score_uncached(genome)
+            msg = {"type": protocol.RESULT, "id": task_id, "ok": True,
+                   "value": sv}
+        except Exception as e:
+            msg = {"type": protocol.RESULT, "id": task_id, "ok": False,
+                   "error": f"{type(e).__name__}: {e}"}
+        try:
+            self._send(msg)
+        except OSError:
+            self._stop.set()
 
     def _heartbeat_loop(self, interval_s: float) -> None:
         while not self._stop.wait(interval_s):
@@ -93,7 +187,12 @@ class EvalServiceWorker:
         try:
             try:
                 self._send({"type": protocol.HELLO, "name": self.name,
-                            "slots": self.slots})
+                            "slots": self.slots,
+                            # capabilities: batched compact frames, and the
+                            # same-host shm fast path (the coordinator only
+                            # uses it when our hostname matches its own)
+                            "host": socket.gethostname(),
+                            "compact": True, "shm": True})
                 welcome = protocol.recv_msg(self._sock)
             except (ConnectionError, OSError):
                 return    # coordinator gone mid-handshake: a normal exit
@@ -111,7 +210,14 @@ class EvalServiceWorker:
                 except Exception:      # dead coordinator or corrupt frame
                     break
                 kind = msg.get("type")
-                if kind == protocol.TASK:
+                if kind == protocol.TASKS:
+                    # spec pairs ride in-frame until the coordinator knows we
+                    # have them; registration is synchronous (before any of
+                    # the batch evaluates) and idempotent
+                    self._warm(pool, msg.get("specs", ()))
+                    for task_id, payload in msg.get("tasks", ()):
+                        pool.submit(self._evaluate_entry, task_id, payload)
+                elif kind == protocol.TASK:
                     pool.submit(self._evaluate, msg["id"], msg["spec"],
                                 msg["genome"])
                 elif kind == protocol.WARM:
@@ -121,6 +227,13 @@ class EvalServiceWorker:
         finally:
             self._stop.set()
             pool.shutdown(wait=False, cancel_futures=True)
+            with self._seg_lock:
+                for seg in self._segments.values():
+                    try:
+                        seg.close()    # detach only; the coordinator unlinks
+                    except OSError:
+                        pass
+                self._segments.clear()
             try:
                 self._sock.close()
             except OSError:

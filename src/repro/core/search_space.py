@@ -47,6 +47,23 @@ class KernelGenome:
     def from_dict(cls, d: dict) -> "KernelGenome":
         return cls(**d)
 
+    # -- wire encoding ---------------------------------------------------------
+    def to_edits(self) -> tuple:
+        """Seed-relative edit list: ``(field_index, value)`` pairs for every
+        field that differs from the seed genome (the class defaults).  A
+        genome IS a deterministic edit list over the seed, so this is the
+        complete identity in a fraction of a full pickle — the evaluation
+        backends ship these across process/host boundaries and workers
+        rebuild with :meth:`from_edits` (bit-identical round trip)."""
+        return tuple((i, getattr(self, name))
+                     for i, (name, default) in enumerate(_GENOME_DEFAULTS)
+                     if getattr(self, name) != default)
+
+    @classmethod
+    def from_edits(cls, edits) -> "KernelGenome":
+        """Inverse of :meth:`to_edits`: apply the edit list to the seed."""
+        return cls(**{_GENOME_DEFAULTS[i][0]: v for i, v in edits})
+
     def diff(self, other: "KernelGenome") -> dict:
         """Field-level diff (the agent's 'what changed between versions')."""
         a, b = dataclasses.asdict(self), dataclasses.asdict(other)
@@ -78,6 +95,11 @@ class KernelGenome:
         for ad in ACC_DTYPES:
             if ad != self.acc_dtype:
                 yield self.with_(acc_dtype=ad)
+
+
+# field order is part of the wire format: to_edits/from_edits index into it
+_GENOME_DEFAULTS = tuple((f.name, f.default)
+                         for f in dataclasses.fields(KernelGenome))
 
 
 def seed_genome() -> KernelGenome:

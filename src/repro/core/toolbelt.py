@@ -133,12 +133,20 @@ class Toolbelt:
         if submit is None or not getattr(self.scorer, "overlapping", False):
             return 0
         cache = getattr(self.scorer, "cache", None)
-        n = 0
-        for g in genomes:
-            if cache is not None and cache.peek(g.key()) is not None:
-                continue
-            submit(g)
-            n += 1
+        todo = [g for g in genomes
+                if cache is None or cache.peek(g.key()) is None]
+        submit_many = getattr(self.scorer, "submit_many", None)
+        if submit_many is not None:
+            # one batched dispatch: on the service backend the whole burst
+            # rides to each worker in a single tasks frame
+            if todo:
+                submit_many(todo)
+            n = len(todo)
+        else:
+            n = 0
+            for g in todo:
+                submit(g)
+                n += 1
         self.n_speculative_submits += n
         return n
 
