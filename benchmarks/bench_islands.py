@@ -512,6 +512,195 @@ def service_smoke(args) -> int:
     return 0 if ok else 1
 
 
+# modelled per-evaluation cost units for the cascade's cost accounting: on
+# the real device a rung-2 compile-and-time run costs ~2 orders of magnitude
+# more than a rung-0 perfmodel closed form, with the rung-1 HLO trace in
+# between.  The cost gate uses these fixed ratios (host-independent); the
+# smoke also reports the wall seconds per rung actually measured on this host.
+CASCADE_COST_UNITS = {"perfmodel": 1.0, "hlo": 10.0, "measured": 100.0}
+
+
+def _rank_inversions(pred, meas):
+    """Pairwise order disagreements between a predicted and a measured
+    ranking — the cascade's promotion-quality metric."""
+    import itertools
+    return sum(1 for i, j in itertools.combinations(range(len(pred)), 2)
+               if (pred[i] - pred[j]) * (meas[i] - meas[j]) < 0)
+
+
+def cascade_smoke(args) -> int:
+    """The CI ``cascade-smoke`` gate for the multi-fidelity evaluation
+    cascade.  Four gates, all deterministic:
+
+      identity     an engine with the cascade enabled — promotion disabled
+                   (rung-0-only) AND promotion enabled — produces lineages
+                   bit-identical to a cascade-free engine (rung-0 scoring is
+                   pure cache warming; promotion never touches lineages);
+      promote-rate every logged cascade promotes <= 1/eta of its slate to
+                   rung 1 and <= 1/eta of those to rung 2 (the max(1, n//eta)
+                   floor is the only slack);
+      cost         total cascade cost in modelled units (CASCADE_COST_UNITS)
+                   beats evaluating the whole slate flat at rung 2;
+      calibration  the residual-driven per-bottleneck-class correction
+                   strictly reduces the rung-0-vs-rung-2 rank-inversion
+                   count on a contested slate spanning several bottleneck
+                   classes.
+
+    Writes results/bench/cascade.json."""
+    import itertools
+
+    from repro.core import Archipelago, ScoreCache, seed_genome
+    from repro.core.evals import FIDELITIES, HLO, MEASURED, PERFMODEL
+    from repro.core.perfmodel import PerfModelCalibration
+    from repro.core.search_space import KernelGenome
+
+    eta, steps = 3, min(args.steps, 8)
+    suite = [c for c in suite_by_name("mha") if c.seq_len == 4096]
+    print(f"== cascade smoke: eta={eta}, {steps} steps x 2 islands, "
+          f"{len(suite)}-config suite ==")
+
+    # -- gate 1: lineage bit-identity (off == rung-0-only == promoting) -----
+    def fingerprints(**kw):
+        eng = Archipelago(n_islands=2, suite=suite, migration_interval=2,
+                          seed=args.seed, backend="thread",
+                          check_correctness=False, **kw)
+        try:
+            eng.run(max_steps=steps)
+            return [[(c.genome.key(), c.geomean, c.note)
+                     for c in i.lineage.commits] for i in eng.islands], eng
+        finally:
+            eng.close()
+
+    base, _ = fingerprints()
+    rung0_only, _ = fingerprints(cascade_eta=eta, cascade_promote=False)
+    promoting, eng = fingerprints(cascade_eta=eta)
+    identity_ok = base == rung0_only == promoting
+    totals = eng.cascade_totals()
+    print(f"lineages: cascade-off == rung-0-only == promoting: "
+          f"{'OK' if identity_ok else 'MISMATCH'}")
+
+    # -- gate 2: promote rates from the engine's own cascade log ------------
+    rate_ok = bool(eng.cascade_log)
+    for entry in eng.cascade_log:
+        n0, n1, n2 = (entry["evals"][f] for f in FIDELITIES)
+        rate_ok = rate_ok and n1 <= max(1, n0 // eta) \
+            and n2 <= max(1, n1 // eta)
+    ev = totals["evals"]
+    print(f"promote rates over {totals['epochs']} cascades: "
+          f"{ev.get(PERFMODEL, 0)} rung-0 -> {ev.get(HLO, 0)} rung-1 -> "
+          f"{ev.get(MEASURED, 0)} rung-2 "
+          f"(per-cascade <= 1/{eta} and <= 1/{eta}^2: "
+          f"{'OK' if rate_ok else 'FAILED'})")
+
+    # engine slates are small (best + KB suggestions), so the max(1, n//eta)
+    # floor dominates their rung-2 rate; the headline <= 1/eta and <= 1/eta^2
+    # fractions are demonstrated on a full eta^2-sized slate
+    from repro.core.evals import CascadeBackend
+    cache = ScoreCache()
+    casc = CascadeBackend(
+        [make_backend("inline", suite=suite, check_correctness=False,
+                      cache=cache, fidelity=f) for f in FIDELITIES], eta=eta)
+    full = casc.run_cascade(cold_candidates(eta * eta))
+    rate1 = full["evals"][HLO] / full["slate"]
+    rate2 = full["evals"][MEASURED] / full["slate"]
+    frac_ok = rate1 <= 1 / eta and rate2 <= 1 / eta ** 2
+    casc.close()
+    print(f"full {full['slate']}-candidate slate: {full['evals'][HLO]} to "
+          f"rung 1 ({rate1:.3f} <= 1/{eta}), {full['evals'][MEASURED]} to "
+          f"rung 2 ({rate2:.3f} <= 1/{eta}^2): "
+          f"{'OK' if frac_ok else 'FAILED'}")
+    rate_ok = rate_ok and frac_ok
+
+    # -- gate 3: cascade cost < flat rung-2 cost ----------------------------
+    cascade_cost = sum(CASCADE_COST_UNITS[f] * ev.get(f, 0)
+                       for f in FIDELITIES)
+    flat_cost = CASCADE_COST_UNITS[MEASURED] * ev.get(PERFMODEL, 0)
+    cost_ok = ev.get(PERFMODEL, 0) > 0 and cascade_cost < flat_cost
+    print(f"cost: cascade {cascade_cost:.0f} units vs flat rung-2 "
+          f"{flat_cost:.0f} units "
+          f"({flat_cost / cascade_cost:.1f}x cheaper: "
+          f"{'OK' if cost_ok else 'FAILED'})" if cascade_cost else
+          "cost: no cascade evaluations recorded (FAILED)")
+
+    # wall seconds per rung on THIS host, informational (on CPU rung 2 is
+    # the modelled timer, so the modelled units above are the gated cost)
+    wall_per_rung = {}
+    g = seed_genome().with_(block_q=1024)   # not scored above: each rung cold
+    for fid in FIDELITIES:
+        scorer = Scorer(suite=suite, check_correctness=False, fidelity=fid)
+        t0 = time.perf_counter()
+        scorer(g)
+        wall_per_rung[fid] = time.perf_counter() - t0
+    print("wall s/eval on this host: "
+          + ", ".join(f"{f} {t:.3f}" for f, t in wall_per_rung.items()))
+
+    # -- gate 4: calibration reduces rank-inversion error -------------------
+    # a contested slate: structure-deduped block grid, restricted to the
+    # score band where mxu/dma/overhead-bound genomes interleave — exactly
+    # where a per-class correction must earn its keep
+    seen, grid = set(), []
+    for bq, bk, mm, kg in itertools.product(
+            (64, 128, 256, 512, 1024, 2048), (64, 128, 256, 512, 1024, 2048),
+            ("dense", "block_skip"), (True, False)):
+        sig = (max(16, min(bq, 2048) // 16), max(16, min(bk, 2048) // 16),
+               mm, kg)
+        if sig not in seen:
+            seen.add(sig)
+            grid.append(KernelGenome(bq, bk, "branchless", mm, "deferred",
+                                     kg, False))
+    cache = ScoreCache()
+    s0 = Scorer(suite=suite, check_correctness=False, cache=cache)
+    s2 = Scorer(suite=suite, check_correctness=False, cache=cache,
+                fidelity=MEASURED)
+    scored = []
+    for g in grid:
+        a, b = s0(g), s2(g)
+        if a.geomean > 0 and b.geomean > 0:
+            scored.append((a.geomean, b.geomean, a.dominant_bottleneck()))
+    best = max(a for a, _, _ in scored)
+    band = [r for r in scored if 0.12 * best <= r[0] <= 0.62 * best]
+    classes = sorted({d for *_, d in band})
+    meas = [b for _, b, _ in band]
+    raw_inv = _rank_inversions([a for a, _, _ in band], meas)
+    cal = PerfModelCalibration()
+    for a, b, d in band:
+        cal.observe(d, a, b)
+    cal_inv = _rank_inversions([cal.corrected(d, a) for a, _, d in band],
+                               meas)
+    calibration_ok = len(classes) >= 2 and cal_inv < raw_inv
+    print(f"calibration: {len(band)}-genome contested band over classes "
+          f"{classes}: rank inversions {raw_inv} raw -> {cal_inv} "
+          f"calibrated ({'OK' if calibration_ok else 'FAILED'}); factors "
+          + str({k: round(v, 3) for k, v in sorted(cal.factors.items())}))
+
+    ok = identity_ok and rate_ok and cost_ok and calibration_ok
+    emit_json("cascade", {
+        "eta": eta, "steps": steps,
+        "evals": ev, "epochs": totals["epochs"],
+        "promote_rate_rung1": rate1, "promote_rate_rung2": rate2,
+        "full_slate": full["evals"],
+        "engine_promote_rate_rung1": ev.get(HLO, 0) / ev[PERFMODEL]
+        if ev.get(PERFMODEL) else None,
+        "engine_promote_rate_rung2": ev.get(MEASURED, 0) / ev[PERFMODEL]
+        if ev.get(PERFMODEL) else None,
+        "cost_units": CASCADE_COST_UNITS,
+        "cascade_cost_units": cascade_cost, "flat_rung2_cost_units": flat_cost,
+        "wall_s_per_eval": wall_per_rung,
+        "calibration": {"band_size": len(band), "classes": classes,
+                        "raw_inversions": raw_inv,
+                        "calibrated_inversions": cal_inv,
+                        "factors": totals["calibration"]["factors"],
+                        "band_factors": cal.state()["factors"]},
+        "gates": {"lineage_identity": identity_ok,
+                  "promote_rates": rate_ok,
+                  "cascade_cheaper_than_flat": cost_ok,
+                  "calibration_reduces_rank_error": calibration_ok,
+                  "passed": ok},
+    })
+    print("cascade smoke: " + ("PASSED" if ok else "FAILED"))
+    return 0 if ok else 1
+
+
 def cold_batch_smoke(args) -> int:
     """The CI ``cold-batch`` gate: race thread vs process (vs the service
     when ``--service-workers`` > 0) on the cold batch and FAIL unless the
@@ -581,6 +770,13 @@ def main(argv=None):
                     help="run ONLY the service legs + their bit-identity "
                          "gates and write results/bench/eval_service.json "
                          "(the CI service-smoke step)")
+    ap.add_argument("--cascade-smoke", action="store_true",
+                    help="run ONLY the multi-fidelity cascade gates: lineage "
+                         "bit-identity with the cascade on, successive-"
+                         "halving promote rates, modelled cost vs flat "
+                         "rung-2, and calibration reducing rank-inversion "
+                         "error; writes results/bench/cascade.json (the CI "
+                         "cascade-smoke step)")
     ap.add_argument("--cold-batch-smoke", action="store_true",
                     help="run ONLY the cold-batch backend race and GATE it: "
                          "bit-identity, compact wire >= 5x smaller, and "
@@ -597,6 +793,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.service_smoke:
         return service_smoke(args)
+    if args.cascade_smoke:
+        return cascade_smoke(args)
     if args.cold_batch_smoke:
         return cold_batch_smoke(args)
     topologies = [t.strip() for t in args.topologies.split(",") if t.strip()]

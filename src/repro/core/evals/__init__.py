@@ -2,10 +2,13 @@
 
 Layout:
   vector.py          ScoreVector — the value of f(x), picklable
-  cache.py           ScoreCache — the explicit memo API every backend shares
-  scorer.py          Scorer / InlineBackend — correctness + perfmodel, in-process
+  cache.py           ScoreCache — the explicit memo API every backend shares —
+                     + the fidelity ladder (FIDELITIES / fidelity_key)
+  scorer.py          Scorer / InlineBackend — correctness + per-rung scoring
+                     (perfmodel | hlo roofline | measured), in-process
   worker.py          evaluate_genome / EvalSpec — the pure picklable worker fn
   backends.py        EvalBackend protocol; thread (BatchScorer) + process backends
+  cascade.py         CascadeBackend — successive-halving promotion across rungs
   elastic.py         ElasticProcessPool — worker count follows queue depth
   protocol.py        length-prefixed socket frames (spec+genome out, scores back)
   service.py         EvalCoordinator + ServiceBackend — cross-host scoring with
@@ -14,15 +17,19 @@ Layout:
 
 Every backend exposes the same sync (``__call__``/``map``) and async
 (``submit`` -> Future, with per-genome dedup) surfaces; the pipelined island
-engine drives the async one.  ``repro.core.scoring`` re-exports the stable
-names for older call sites.
+engine drives the async one.  Caches, dedup tables, and wire frames are all
+keyed per ``(genome, spec, fidelity)`` — a genome scored at one rung
+re-scores (never aliases) at another.  ``repro.core.scoring`` re-exports the
+stable names for older call sites.
 """
 from repro.core.evals.backends import (BACKENDS, BatchScorer, EvalBackend,
                                        ProcessBackend, ThreadBackend,
                                        default_worker_count, make_backend,
                                        make_process_executor)
+from repro.core.evals.cache import (FIDELITIES, HLO, MEASURED, PERFMODEL,
+                                    ScoreCache, fidelity_key, key_fidelity)
+from repro.core.evals.cascade import CascadeBackend
 from repro.core.evals.elastic import ElasticProcessPool
-from repro.core.evals.cache import ScoreCache
 from repro.core.evals.scorer import CORRECTNESS_TOL, InlineBackend, Scorer
 from repro.core.evals.service import (EvalCoordinator, ServiceBackend,
                                       spawn_local_workers, stop_local_workers)
@@ -32,10 +39,12 @@ from repro.core.evals.worker import (EvalSpec, evaluate_frame,
                                      warm_worker)
 
 __all__ = [
-    "BACKENDS", "BatchScorer", "CORRECTNESS_TOL", "ElasticProcessPool",
-    "EvalBackend", "EvalCoordinator", "EvalSpec", "InlineBackend",
+    "BACKENDS", "BatchScorer", "CORRECTNESS_TOL", "CascadeBackend",
+    "ElasticProcessPool", "EvalBackend", "EvalCoordinator", "EvalSpec",
+    "FIDELITIES", "HLO", "InlineBackend", "MEASURED", "PERFMODEL",
     "ProcessBackend", "ScoreCache", "ScoreVector", "Scorer", "ServiceBackend",
     "ThreadBackend", "default_worker_count", "evaluate_frame",
-    "evaluate_genome", "intern_spec", "make_backend", "make_process_executor",
-    "spawn_local_workers", "stop_local_workers", "warm_worker",
+    "evaluate_genome", "fidelity_key", "intern_spec", "key_fidelity",
+    "make_backend", "make_process_executor", "spawn_local_workers",
+    "stop_local_workers", "warm_worker",
 ]

@@ -31,7 +31,7 @@ import sys
 import threading
 from typing import Optional, Protocol, Sequence, Union, runtime_checkable
 
-from repro.core.evals.cache import ScoreCache
+from repro.core.evals.cache import PERFMODEL, ScoreCache, fidelity_key
 from repro.core.evals.scorer import InlineBackend, Scorer
 from repro.core.evals.vector import ScoreVector
 from repro.core.evals.worker import (EvalSpec, _prestart_noop, evaluate_frame,
@@ -129,6 +129,10 @@ class BatchScorer:
     def cache_hits(self) -> int:
         return self.base.cache.hits
 
+    def score_key(self, genome: KernelGenome) -> str:
+        """The wrapped scorer's fidelity-aware cache/dedup key."""
+        return self.base.score_key(genome)
+
     @property
     def n_evaluations(self) -> int:
         return self.base.n_evaluations
@@ -148,7 +152,7 @@ class BatchScorer:
         submitted -> the shared future; otherwise dispatch onto the executor.
         A failed evaluation is dropped from the submit table (never cached),
         so a later submit retries — mirroring the ``__call__`` contract."""
-        key = genome.key()
+        key = self.base.score_key(genome)
         with self._lock:
             if self._closed:
                 raise RuntimeError("submit on closed BatchScorer")
@@ -173,7 +177,7 @@ class BatchScorer:
             self._futures.pop(key, None)
 
     def __call__(self, genome: KernelGenome) -> ScoreVector:
-        key = genome.key()
+        key = self.base.score_key(genome)
         cache = self.base.cache
         while True:
             with self._lock:
@@ -205,9 +209,10 @@ class BatchScorer:
         submission here would burn a slot waiting on an in-flight duplicate."""
         unique: dict[str, concurrent.futures.Future] = {}
         for g in genomes:
-            if g.key() not in unique:
-                unique[g.key()] = self.submit(g)
-        return [unique[g.key()].result() for g in genomes]
+            key = self.base.score_key(g)
+            if key not in unique:
+                unique[key] = self.submit(g)
+        return [unique[self.base.score_key(g)].result() for g in genomes]
 
     def prefetch(self, genomes: Sequence[KernelGenome]) -> None:
         """Fire-and-forget cache warming for speculative candidates.  Peeks
@@ -216,7 +221,7 @@ class BatchScorer:
         from synchronous callers), and routes the rest through :meth:`submit`
         so later submitters share the prefetch's future."""
         for g in genomes:
-            key = g.key()
+            key = self.base.score_key(g)
             with self._lock:
                 if self.base.cache.peek(key) is not None \
                         or key in self._inflight or key in self._futures:
@@ -325,6 +330,13 @@ class ParentCacheBackend:
     def _dispatch_eval(self, genome: KernelGenome) -> concurrent.futures.Future:
         raise NotImplementedError
 
+    def score_key(self, genome: KernelGenome) -> str:
+        """Cache/dedup key at this backend's fidelity (``spec.fidelity``) —
+        rung 0 keys stay the bare genome key, higher rungs prefix, so two
+        backends of one suite at different rungs can share one cache without
+        ever aliasing (the engine's cascade does exactly that)."""
+        return fidelity_key(genome.key(), self.spec.fidelity)
+
     def _dispatch_eval_many(self, genomes: Sequence[KernelGenome]) -> list:
         """Dispatch a batch the parent has already deduped.  Default: one
         dispatch per genome; backends with a batched wire (the service
@@ -362,7 +374,7 @@ class ParentCacheBackend:
     def submit(self, genome: KernelGenome) -> concurrent.futures.Future:
         """Cache hit -> completed future; in flight -> the shared future;
         otherwise dispatch to a worker."""
-        key = genome.key()
+        key = self.score_key(genome)
         with self._lock:
             if self._closed:
                 raise RuntimeError(
@@ -404,7 +416,7 @@ class ParentCacheBackend:
                 raise RuntimeError(
                     f"submit on closed {type(self).__name__}")
             for g in genomes:
-                key = g.key()
+                key = self.score_key(g)
                 if key in futs or key in new_seen:
                     continue                      # within-batch duplicate
                 sv = self.cache.get(key)
@@ -430,7 +442,7 @@ class ParentCacheBackend:
         # outside the lock: a completed future runs its callback synchronously
         for key, fut in zip(new_keys, dispatched):
             fut.add_done_callback(lambda f, key=key: self._on_done(key, f))
-        return [futs[g.key()] for g in genomes]
+        return [futs[self.score_key(g)] for g in genomes]
 
     def __call__(self, genome: KernelGenome) -> ScoreVector:
         return self.submit(genome).result()
@@ -449,7 +461,7 @@ class ParentCacheBackend:
         seen: set[str] = set()
         with self._lock:
             for g in genomes:
-                key = g.key()
+                key = self.score_key(g)
                 if key in seen or self.cache.peek(key) is not None \
                         or key in self._futures:
                     continue
@@ -519,31 +531,42 @@ def make_backend(name: str,
     ('inline' | 'thread' | 'process' | 'service'; see ``BACKENDS``).
 
     ``suite`` is a registered suite name, an explicit BenchConfig sequence,
-    a pre-resolved :class:`EvalSpec`, or None (MHA default); remaining
-    keywords go to the backend constructor (e.g. ``executor=`` to share a
-    pool, ``max_workers=``, or — for 'service' — ``coordinator=`` /
-    ``workers=`` to share or spawn a worker fleet).
+    a pre-resolved :class:`EvalSpec`, or None (MHA default); ``fidelity``
+    selects the evaluation rung ('perfmodel' | 'hlo' | 'measured', overriding
+    a pre-resolved spec's rung) and ``cache`` injects a shared
+    :class:`ScoreCache` — sibling backends of one suite at different rungs
+    share a cache safely because keys carry the fidelity.  Remaining keywords
+    go to the backend constructor (e.g. ``executor=`` to share a pool,
+    ``max_workers=``, or — for 'service' — ``coordinator=`` / ``workers=`` to
+    share or spawn a worker fleet).
     """
+    fid = kw.pop("fidelity", None)
+    cache = kw.pop("cache", None)
     spec = EvalSpec.resolve(suite,
                             kw.pop("check_correctness", True),
                             kw.pop("rng_seed", 0),
-                            kw.pop("service_latency_s", 0.0))
+                            kw.pop("service_latency_s", 0.0),
+                            fid if fid is not None else PERFMODEL)
+    if fid is not None and spec.fidelity != fid:
+        spec = spec.with_fidelity(fid)      # suite arrived as an EvalSpec
     if name == "inline":
         return InlineBackend(suite=list(spec.suite),
                              check_correctness=spec.check_correctness,
-                             rng_seed=spec.rng_seed,
-                             service_latency_s=spec.service_latency_s, **kw)
+                             rng_seed=spec.rng_seed, cache=cache,
+                             service_latency_s=spec.service_latency_s,
+                             fidelity=spec.fidelity, **kw)
     if name == "thread":
         return ThreadBackend(Scorer(suite=list(spec.suite),
                                     check_correctness=spec.check_correctness,
-                                    rng_seed=spec.rng_seed,
-                                    service_latency_s=spec.service_latency_s),
+                                    rng_seed=spec.rng_seed, cache=cache,
+                                    service_latency_s=spec.service_latency_s,
+                                    fidelity=spec.fidelity),
                              **kw)
     if name == "process":
-        return ProcessBackend(spec=spec, **kw)
+        return ProcessBackend(spec=spec, cache=cache, **kw)
     if name == "service":
         # imported here, not at module top: service.py subclasses
         # ParentCacheBackend from THIS module (import cycle otherwise)
         from repro.core.evals.service import ServiceBackend
-        return ServiceBackend(spec=spec, **kw)
+        return ServiceBackend(spec=spec, cache=cache, **kw)
     raise ValueError(f"unknown eval backend {name!r}; known: {BACKENDS}")

@@ -1,10 +1,17 @@
 """Explicit score-cache API shared by every evaluation backend.
 
-One :class:`ScoreCache` memoizes ``genome.key() -> ScoreVector``.  It is the
+One :class:`ScoreCache` memoizes ``score key -> ScoreVector``.  It is the
 *only* supported way to read or seed memoized scores: backends, the island
 engine, and tests all go through this API instead of poking scorer
 internals.  All access is thread-safe; hit/miss accounting is built in so
 shared-cache savings are observable (``IslandReport.cache_hits``).
+
+Score keys carry the evaluation *fidelity* (:func:`fidelity_key`): the
+baseline ``perfmodel`` rung keys by the bare ``genome.key()`` — every
+existing call site and persisted payload stays valid — and the higher rungs
+of the evaluation cascade (``hlo``, ``measured``) prefix the genome key, so
+one shared cache can hold a genome's score at several fidelities without the
+rungs ever aliasing each other.
 """
 from __future__ import annotations
 
@@ -12,6 +19,37 @@ import threading
 from typing import Optional
 
 from repro.core.evals.vector import ScoreVector
+
+# the evaluation-cascade fidelity ladder, cheapest rung first.  Defined here
+# (the dependency floor of repro.core.evals) so the scorer, the worker spec,
+# and the backends all share one source of truth without import cycles.
+PERFMODEL, HLO, MEASURED = "perfmodel", "hlo", "measured"
+FIDELITIES = (PERFMODEL, HLO, MEASURED)
+
+_FID_SEP = "::"
+
+
+def fidelity_key(genome_key: str, fidelity: str = PERFMODEL) -> str:
+    """The cache/dedup key for scoring ``genome_key`` at ``fidelity``.
+
+    Rung 0 (``perfmodel``) keys are the bare genome key — bit-compatible
+    with every pre-cascade call site (engine peeks, test seeding, persisted
+    caches).  Higher rungs prefix, so a genome scored at rung 0 re-scores at
+    rung 2 instead of aliasing onto the cheap result."""
+    if fidelity == PERFMODEL:
+        return genome_key
+    if fidelity not in FIDELITIES:
+        raise ValueError(
+            f"unknown fidelity {fidelity!r}; known: {FIDELITIES}")
+    return f"{fidelity}{_FID_SEP}{genome_key}"
+
+
+def key_fidelity(key: str) -> str:
+    """Inverse of :func:`fidelity_key`: which rung a cache key belongs to.
+    Genome keys are sorted JSON over identifier-ish field values, so a
+    recognized ``fidelity::`` prefix is unambiguous."""
+    fid, sep, _rest = key.partition(_FID_SEP)
+    return fid if sep and fid in FIDELITIES else PERFMODEL
 
 
 class ScoreCache:
@@ -54,3 +92,19 @@ class ScoreCache:
     def clear(self) -> None:
         with self._lock:
             self._data.clear()
+
+    def stats(self) -> dict:
+        """Hit/miss counters plus per-fidelity entry counts — how cascade
+        savings are observed per island (``Toolbelt.stats``/``IslandReport``):
+        the entry split shows how many genomes paid which rung."""
+        with self._lock:
+            per_fidelity: dict[str, int] = {}
+            for key in self._data:
+                fid = key_fidelity(key)
+                per_fidelity[fid] = per_fidelity.get(fid, 0) + 1
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "entries": len(self._data),
+                "per_fidelity": per_fidelity,
+            }

@@ -6,7 +6,12 @@ dict.  Messages carry :class:`~repro.core.evals.worker.EvalSpec` +
 and :class:`~repro.core.evals.vector.ScoreVector` results worker->coordinator
 — all three are plain picklable dataclasses the process backend already
 ships across process boundaries, so the socket transport reuses the exact
-same serialization and inherits its bit-identity guarantee.
+same serialization and inherits its bit-identity guarantee.  The evaluation
+*fidelity* rung travels as part of the spec's value (``EvalSpec.fidelity``):
+two rungs of one suite are two different interned specs on the wire, so
+worker scorer tables and task frames are keyed per ``(genome, spec,
+fidelity)`` with no frame-format change — and the shm genome arena stays
+safely shared across rungs, since it stores only the genome payload.
 
 Frame types (the ``"type"`` key of every message):
 

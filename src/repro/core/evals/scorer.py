@@ -3,13 +3,24 @@
 Correctness is executed for real: the genome is materialized into its Pallas
 kernel and run in ``interpret=True`` mode on CPU against the ``ref.py``
 oracle, on a reduced proxy shape (full 32k shapes are not runnable in the
-interpreter; the kernel's behaviour is shape-generic).  Throughput comes from
-``perfmodel.estimate`` — see that module's docstring for the machine model.
+interpreter; the kernel's behaviour is shape-generic).  Throughput depends on
+the scorer's *fidelity* rung (the evaluation cascade's ladder):
+
+- ``perfmodel`` (rung 0, default): ``perfmodel.estimate`` — see that module's
+  docstring for the machine model.  Bit-identical to the pre-cascade scorer.
+- ``hlo`` (rung 1): trace the genome's kernel to HLO on the reduced proxy
+  shape and score with the roofline three-term model over
+  ``HloAnalysis.summary`` totals (compute/memory/collective).
+- ``measured`` (rung 2): compile-and-time the kernel on the proxy shape when
+  an accelerator is attached; on CPU-only hosts, fall back to the
+  deterministic ``perfmodel.measured_estimate`` modelled timer.
 
 :class:`Scorer` is a deterministic function of the genome: the proxy inputs
-are rebuilt from ``rng_seed`` alone, so two scorers with the same suite and
-seed — in the same process or different ones — return bit-identical
-:class:`ScoreVector`s.  The process backend leans on exactly this property.
+are rebuilt from ``rng_seed`` alone, so two scorers with the same suite,
+seed, and fidelity — in the same process or different ones — return
+bit-identical :class:`ScoreVector`s.  The process backend leans on exactly
+this property.  :meth:`Scorer.score_key` carries the fidelity into the cache
+key (``cache.fidelity_key``) so rungs never alias one another.
 """
 from __future__ import annotations
 
@@ -20,24 +31,54 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core import perfmodel
-from repro.core.evals.cache import ScoreCache
+from repro.core.evals.cache import (FIDELITIES, HLO, MEASURED, PERFMODEL,
+                                    ScoreCache, fidelity_key)
 from repro.core.evals.vector import ScoreVector
-from repro.core.perfmodel import BenchConfig, estimate, mha_suite
+from repro.core.perfmodel import (KERNEL_LAUNCH, BenchConfig, estimate,
+                                  measured_estimate, mha_suite)
 from repro.core.search_space import KernelGenome
 
 CORRECTNESS_TOL = 2e-5
 
+# proxy geometry shared by the correctness check and the hlo/measured rungs:
+# small enough for the interpreter, big enough that blocks/windows survive
+PROXY_SEQ = 160
+
+
+def _proxy_window(window: Optional[int], ref_seq: int) -> Optional[int]:
+    """Scale a suite config's window onto the proxy sequence length.
+
+    The proxy runs at ``PROXY_SEQ`` tokens, so a window is rescaled in
+    proportion to the config's own sequence length, clamped so it stays a
+    *partial* window on the proxy (floor 16 = one block row; ceiling
+    ``PROXY_SEQ - 32`` keeps some tokens masked).  Two suites with distinct
+    window sets now map to distinct proxy shapes instead of both collapsing
+    to w=48."""
+    if window is None:
+        return None
+    ref_seq = max(int(ref_seq), 1)
+    return max(16, min(PROXY_SEQ - 32, round(window * PROXY_SEQ / ref_seq)))
+
 
 def _correctness_proxy_shapes(suite: Sequence[BenchConfig]):
-    """Small executable shapes covering the mask/GQA space of the suite."""
+    """Small executable shapes covering the mask/window/GQA space of the
+    suite.  One shape per distinct ``(causal, proxy window)`` pair, with the
+    proxy window derived from the configs that use that window (largest
+    sequence length among them anchors the rescale)."""
     shapes = []
+    seen = set()
     has_gqa = any(c.n_heads != c.n_kv_heads for c in suite)
     for causal in sorted({c.causal for c in suite}):
         windows = sorted({c.window for c in suite}, key=lambda w: (w is None, w))
         for window in windows:
-            w = None if window is None else 48
+            ref_seq = max((c.seq_len for c in suite if c.window == window),
+                          default=PROXY_SEQ)
+            w = _proxy_window(window, ref_seq)
+            if (causal, w) in seen:
+                continue
+            seen.add((causal, w))
             shapes.append(dict(B=1, Hq=4, Hkv=(2 if has_gqa else 4),
-                               S=160, D=64, causal=causal, window=w))
+                               S=PROXY_SEQ, D=64, causal=causal, window=w))
     return shapes
 
 
@@ -51,18 +92,27 @@ class Scorer:
     def __init__(self, suite: Optional[Sequence[BenchConfig]] = None,
                  check_correctness: bool = True, rng_seed: int = 0,
                  cache: Optional[ScoreCache] = None,
-                 service_latency_s: float = 0.0):
+                 service_latency_s: float = 0.0,
+                 fidelity: str = PERFMODEL):
         """``service_latency_s`` > 0 holds every *paid* evaluation for that
         long before scoring — modelling a latency-bound evaluation service
         (cross-host scoring, hardware in the loop; the paper's f is a GPU
         verification run the agent keeps proposing against).  The sleep
         costs no CPU and never changes values, so backends stay
         bit-identical; benchmarks use it to isolate stepping-strategy
-        overlap from host CPU capacity."""
+        overlap from host CPU capacity.
+
+        ``fidelity`` selects the throughput rung (see the module docstring);
+        it flows into :meth:`score_key` so a shared :class:`ScoreCache`
+        holds each rung's scores under distinct keys."""
+        if fidelity not in FIDELITIES:
+            raise ValueError(f"unknown fidelity {fidelity!r}; "
+                             f"known: {FIDELITIES}")
         self.suite = list(suite) if suite is not None else mha_suite()
         self.check_correctness = check_correctness
         self.rng_seed = rng_seed
         self.service_latency_s = service_latency_s
+        self.fidelity = fidelity
         self.cache = cache if cache is not None else ScoreCache()
         self.n_evaluations = 0
         self._count_lock = threading.Lock()
@@ -117,8 +167,14 @@ class Scorer:
         return True, ""
 
     # -- scoring ----------------------------------------------------------------
+    def score_key(self, genome: KernelGenome) -> str:
+        """The cache/dedup key for this genome *at this scorer's fidelity*.
+        Backends key their caches, in-flight tables, and futures with this so
+        a genome scored at rung 0 re-scores (never aliases) at rung 2."""
+        return fidelity_key(genome.key(), self.fidelity)
+
     def __call__(self, genome: KernelGenome) -> ScoreVector:
-        key = genome.key()
+        key = self.score_key(genome)
         sv = self.cache.get(key)
         if sv is not None:
             return sv
@@ -141,18 +197,156 @@ class Scorer:
                 return ScoreVector(tuple(c.name for c in self.suite),
                                    tuple(0.0 for _ in self.suite), False, why)
 
-        values, profiles = [], {}
-        for cfg in self.suite:
-            p = estimate(genome, cfg)
-            profiles[cfg.name] = p
-            values.append(p.tflops if p.feasible else 0.0)
+        if self.fidelity == HLO:
+            values, profiles = self._hlo_values(genome)
+        elif self.fidelity == MEASURED:
+            values, profiles = self._measured_values(genome)
+        else:
+            values, profiles = [], {}
+            for cfg in self.suite:
+                p = estimate(genome, cfg)
+                profiles[cfg.name] = p
+                values.append(p.tflops if p.feasible else 0.0)
         failure = ""
         if any(v == 0.0 for v in values):
             bad = [c.name for c, v in zip(self.suite, values) if v == 0.0]
             failure = "infeasible on: " + ", ".join(
-                f"{n} ({profiles[n].infeasible_reason})" for n in bad)
+                f"{n} ({profiles[n].infeasible_reason})" if n in profiles
+                else n for n in bad)
         return ScoreVector(tuple(c.name for c in self.suite), tuple(values),
                            True, failure, profiles)
+
+    # -- higher-fidelity rungs -------------------------------------------------
+    def _proxy_trace_groups(self):
+        """Suite configs grouped by the proxy shape they trace at.  The proxy
+        varies only in the mask (causal × rescaled window) — batch/heads/seq
+        are fixed small — so a suite's N configs usually need just one or two
+        traces per genome."""
+        has_gqa = any(c.n_heads != c.n_kv_heads for c in self.suite)
+        groups: dict = {}
+        for cfg in self.suite:
+            ref_seq = max(c.seq_len for c in self.suite if c.window == cfg.window)
+            w = _proxy_window(cfg.window, ref_seq)
+            key = (cfg.causal, w)
+            groups.setdefault(key, []).append(cfg)
+        return has_gqa, groups
+
+    def _trace_hlo_summary(self, genome: KernelGenome, causal: bool,
+                           window: Optional[int], has_gqa: bool) -> dict:
+        """Lower the genome's kernel (interpret mode, proxy shape) to HLO and
+        return ``HloAnalysis(...).summary()``.  Abstract tracing only — no
+        arrays are materialized and nothing executes."""
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.flash_attention import flash_attention
+        from repro.launch.hlo_analysis import HloAnalysis
+        kw = genome.kernel_kwargs()
+        kw["block_q"] = max(16, min(kw["block_q"], 2048) // 16)
+        kw["block_k"] = max(16, min(kw["block_k"], 2048) // 16)
+        hq, hkv = 4, (2 if has_gqa else 4)
+        q = jax.ShapeDtypeStruct((1, hq, PROXY_SEQ, 64), jnp.float32)
+        k = jax.ShapeDtypeStruct((1, hkv, PROXY_SEQ, 64), jnp.float32)
+        v = jax.ShapeDtypeStruct((1, hkv, PROXY_SEQ, 64), jnp.float32)
+        fn = functools.partial(flash_attention, causal=causal, window=window,
+                               interpret=True, **kw)
+        compiled = jax.jit(fn).lower(q, k, v).compile()
+        return HloAnalysis(compiled.as_text()).summary()
+
+    @staticmethod
+    def roofline_tflops(summary: dict) -> float:
+        """The rung-1 score formula: achieved TFLOP/s of the traced kernel
+        under the roofline three-term model — HLO flops over the binding
+        term (compute vs memory vs collective) plus launch overhead.  A
+        staticmethod so tests can assert rung-1 values agree with
+        ``HloAnalysis.summary`` totals without re-tracing."""
+        from repro.launch.hlo_analysis import roofline_terms
+        t = max(roofline_terms(summary).values())
+        return summary.get("flops", 0) / (t + KERNEL_LAUNCH) / 1e12
+
+    def _hlo_values(self, genome: KernelGenome):
+        """Rung 1: one HLO trace per distinct proxy mask shape; every config
+        sharing that shape shares the roofline score.  Perfmodel feasibility
+        still gates each config (an over-VMEM genome scores 0.0 on that
+        config at every rung)."""
+        has_gqa, groups = self._proxy_trace_groups()
+        by_name: dict[str, float] = {}
+        profiles: dict = {}
+        for (causal, window), cfgs in sorted(
+                groups.items(), key=lambda kv: (kv[0][0], kv[0][1] is None,
+                                                kv[0][1] or 0)):
+            try:
+                summary = self._trace_hlo_summary(genome, causal, window,
+                                                  has_gqa)
+                value = self.roofline_tflops(summary)
+            except Exception:        # trace/lowering failure -> rung-1 zero
+                value = 0.0
+            for cfg in cfgs:
+                p = estimate(genome, cfg)
+                profiles[cfg.name] = p
+                by_name[cfg.name] = value if p.feasible else 0.0
+        return [by_name[c.name] for c in self.suite], profiles
+
+    def _measured_values(self, genome: KernelGenome):
+        """Rung 2: compile-and-time on the proxy shape when a real
+        accelerator backs jax; otherwise the deterministic
+        ``perfmodel.measured_estimate`` modelled timer (CPU hosts, CI) so
+        backends stay bit-identical and kill/resume replays."""
+        import jax
+        if jax.default_backend() != "cpu":      # pragma: no cover - no TPU in CI
+            return self._timed_values(genome)
+        values, profiles = [], {}
+        for cfg in self.suite:
+            p = measured_estimate(genome, cfg)
+            profiles[cfg.name] = p
+            values.append(p.tflops if p.feasible else 0.0)
+        return values, profiles
+
+    def _timed_values(self, genome: KernelGenome):  # pragma: no cover - needs TPU
+        """Wall-clock the compiled kernel per proxy mask shape; convert to
+        TFLOP/s via the traced kernel's own HLO flop count."""
+        import functools
+        import time
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.flash_attention import flash_attention
+        from repro.launch.hlo_analysis import HloAnalysis
+        kw = genome.kernel_kwargs()
+        kw["block_q"] = max(16, min(kw["block_q"], 2048) // 16)
+        kw["block_k"] = max(16, min(kw["block_k"], 2048) // 16)
+        has_gqa, groups = self._proxy_trace_groups()
+        rng = np.random.default_rng(self.rng_seed)
+        by_name: dict[str, float] = {}
+        profiles: dict = {}
+        for (causal, window), cfgs in sorted(
+                groups.items(), key=lambda kv: (kv[0][0], kv[0][1] is None,
+                                                kv[0][1] or 0)):
+            hq, hkv = 4, (2 if has_gqa else 4)
+            q = jnp.asarray(rng.normal(size=(1, hq, PROXY_SEQ, 64)), jnp.float32)
+            k = jnp.asarray(rng.normal(size=(1, hkv, PROXY_SEQ, 64)), jnp.float32)
+            v = jnp.asarray(rng.normal(size=(1, hkv, PROXY_SEQ, 64)), jnp.float32)
+            try:
+                fn = jax.jit(functools.partial(flash_attention, causal=causal,
+                                               window=window, **kw))
+                compiled = fn.lower(q, k, v).compile()
+                flops = HloAnalysis(compiled.as_text()).summary().get("flops", 0)
+                compiled(q, k, v).block_until_ready()          # warmup
+                t0 = time.perf_counter()
+                for _ in range(3):
+                    compiled(q, k, v).block_until_ready()
+                dt = (time.perf_counter() - t0) / 3
+                value = flops / dt / 1e12 if dt > 0 else 0.0
+            except Exception:
+                value = 0.0
+            for cfg in cfgs:
+                p = estimate(genome, cfg)
+                profiles[cfg.name] = p
+                by_name[cfg.name] = value if p.feasible else 0.0
+        return [by_name[c.name] for c in self.suite], profiles
 
     def baselines(self) -> dict:
         """Expert (cuDNN-analogue) and FA-reference scores on this suite."""

@@ -32,7 +32,11 @@ and ``stats()`` snapshots the registry.
 
 The parent keeps the shared :class:`ScoreCache` and the in-flight future
 table (duplicate submissions for one genome collapse onto one wire task),
-so cache behaviour is identical to the process backend's.
+so cache behaviour is identical to the process backend's.  Both are keyed by
+``ParentCacheBackend.score_key`` — the fidelity-aware key — so several
+ServiceBackends of one suite at different cascade rungs can share a cache
+AND a coordinator (each rung's spec interns to its own wire id) without a
+rung-0 result ever masking a rung-2 task.
 """
 from __future__ import annotations
 

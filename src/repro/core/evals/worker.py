@@ -24,6 +24,7 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Sequence, Union
 
+from repro.core.evals.cache import FIDELITIES, PERFMODEL
 from repro.core.evals.scorer import Scorer
 from repro.core.evals.vector import ScoreVector
 from repro.core.perfmodel import BenchConfig, suite_by_name
@@ -34,17 +35,36 @@ from repro.core.search_space import KernelGenome
 class EvalSpec:
     """Everything a worker needs to rebuild a :class:`Scorer`: the resolved
     benchmark configs (BenchConfig is a frozen, picklable dataclass), the
-    correctness toggle, the proxy-input RNG seed, and the modelled
-    evaluation-service latency (see ``Scorer.service_latency_s``)."""
+    correctness toggle, the proxy-input RNG seed, the modelled
+    evaluation-service latency (see ``Scorer.service_latency_s``), and the
+    evaluation *fidelity* rung (see ``cache.FIDELITIES``).
+
+    Fidelity is part of the spec's value, so interning (:func:`intern_spec`)
+    hands every rung its own wire id: worker scorer tables, process-pool
+    tasks, and service frames are keyed per ``(genome, spec, fidelity)``
+    without any transport-layer change — two rungs of one suite are simply
+    two different specs on the wire."""
     suite: tuple                  # tuple[BenchConfig, ...]
     check_correctness: bool = True
     rng_seed: int = 0
     service_latency_s: float = 0.0
+    fidelity: str = PERFMODEL
+
+    def __post_init__(self):
+        if self.fidelity not in FIDELITIES:
+            raise ValueError(f"unknown fidelity {self.fidelity!r}; "
+                             f"known: {FIDELITIES}")
+
+    def with_fidelity(self, fidelity: str) -> "EvalSpec":
+        """The same evaluation target at another rung of the ladder."""
+        return EvalSpec(self.suite, self.check_correctness, self.rng_seed,
+                        self.service_latency_s, fidelity)
 
     @classmethod
     def resolve(cls, suite: Union[str, Sequence[BenchConfig], "EvalSpec", None],
                 check_correctness: bool = True, rng_seed: int = 0,
-                service_latency_s: float = 0.0) -> "EvalSpec":
+                service_latency_s: float = 0.0,
+                fidelity: str = PERFMODEL) -> "EvalSpec":
         """Accept a registered suite name ('mha', 'mha+gqa'), an explicit
         config sequence, an EvalSpec (returned as-is), or None (MHA default)."""
         if isinstance(suite, EvalSpec):
@@ -56,7 +76,8 @@ class EvalSpec:
             cfgs = mha_suite()
         else:
             cfgs = list(suite)
-        return cls(tuple(cfgs), check_correctness, rng_seed, service_latency_s)
+        return cls(tuple(cfgs), check_correctness, rng_seed,
+                   service_latency_s, fidelity)
 
 
 # -- parent-side spec interning ---------------------------------------------------
@@ -106,7 +127,8 @@ def _scorer_for(spec: EvalSpec) -> Scorer:
         scorer = Scorer(suite=list(spec.suite),
                         check_correctness=spec.check_correctness,
                         rng_seed=spec.rng_seed,
-                        service_latency_s=spec.service_latency_s)
+                        service_latency_s=spec.service_latency_s,
+                        fidelity=spec.fidelity)
         _WORKER_SCORERS[spec] = scorer
         while len(_WORKER_SCORERS) > max(1, SCORER_CACHE_CAP):
             _WORKER_SCORERS.popitem(last=False)      # evict least recently used
@@ -139,7 +161,8 @@ def evaluate_genome(genome: KernelGenome,
                     suite: Union[str, EvalSpec],
                     *, check_correctness: bool = True,
                     rng_seed: int = 0,
-                    service_latency_s: float = 0.0) -> ScoreVector:
+                    service_latency_s: float = 0.0,
+                    fidelity: str = PERFMODEL) -> ScoreVector:
     """Evaluate one genome on one suite — the full-payload task function.
 
     ``suite`` is a registered suite name (resolved through the perfmodel
@@ -150,7 +173,7 @@ def evaluate_genome(genome: KernelGenome,
     never on which process runs it.
     """
     spec = EvalSpec.resolve(suite, check_correctness, rng_seed,
-                            service_latency_s)
+                            service_latency_s, fidelity)
     return _scorer_for(spec).score_uncached(genome)
 
 

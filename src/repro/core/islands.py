@@ -78,12 +78,14 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence, Union
 
-from repro.core.evals import (BatchScorer, ElasticProcessPool, EvalCoordinator,
-                              EvalSpec, make_backend, make_process_executor,
+from repro.core.evals import (HLO, MEASURED, BatchScorer, CascadeBackend,
+                              ElasticProcessPool, EvalCoordinator, EvalSpec,
+                              make_backend, make_process_executor,
                               stop_local_workers)
 from repro.core.evals.protocol import parse_address
 from repro.core.knowledge import KnowledgeBase, suggestion_sort_key
-from repro.core.perfmodel import BenchConfig, registered_suites, suite_by_name
+from repro.core.perfmodel import (BenchConfig, PerfModelCalibration,
+                                  registered_suites, suite_by_name)
 from repro.core.population import Commit, Lineage, atomic_write_json
 from repro.core.search_space import KernelGenome, seed_genome
 from repro.core.supervisor import Supervisor
@@ -129,6 +131,8 @@ class IslandReport:
     proposed: int = 0             # speculative proposal-phase submissions
     eval_workers: dict = field(default_factory=dict)  # suite -> pool width
     eval_pool: dict = field(default_factory=dict)     # elastic pool stats
+    score_caches: dict = field(default_factory=dict)  # suite -> ScoreCache.stats()
+    cascade: dict = field(default_factory=dict)       # cascade totals + factors
 
 
 class EpochMemoryView:
@@ -473,7 +477,10 @@ class IslandEvolution:
                  service_workers: int = 0,
                  service_listen: str = "127.0.0.1:0",
                  migrant_policy: str = "best",
-                 migrant_k: int = 3):
+                 migrant_k: int = 3,
+                 cascade_eta: Optional[int] = None,
+                 cascade_slate: int = 8,
+                 cascade_promote: bool = True):
         """``prefetch`` > 0 speculatively batch-evaluates that many KB
         candidate edits per island step on the scorer executor (cache warming
         only — lineages are identical with or without it, it can only trade
@@ -526,7 +533,24 @@ class IslandEvolution:
         bit-identical to the historical behaviour) or ``'top-k'`` (its
         ``migrant_k`` best distinct genomes; the recipient re-scores all of
         them on its own suite and adopts the best survivor, since the
-        donor's best at home is not always the best transfer)."""
+        donor's best at home is not always the best transfer).
+
+        ``cascade_eta`` (>= 2) turns on the multi-fidelity evaluation
+        cascade: every epoch barrier, each island's candidate slate (its
+        best genome + up to ``cascade_slate`` KB suggestions) runs
+        successive halving across the fidelity ladder — the whole slate at
+        rung 0 (``perfmodel``, through the island's own backend, so it is
+        pure cache warming), the top ``1/eta`` at rung 1 (``hlo``:
+        HLO-trace + roofline), the top ``1/eta`` of that at rung 2
+        (``measured``) — and measured-vs-predicted residuals feed a
+        per-bottleneck-class EMA correction that sharpens rung-0 promotion
+        ranking over the run (:class:`~repro.core.perfmodel
+        .PerfModelCalibration`; persisted in the archipelago payload, so
+        kill/resume replays identical promotion and correction decisions).
+        ``cascade_promote=False`` keeps the cascade at rung 0 only — the
+        bit-identity gate benchmarks use it to assert lineages match a
+        cascade-free run exactly.  Lineage commits are *never* scored above
+        rung 0; the cascade only decides where expensive signal is bought."""
         self.specs = list(specs) if specs is not None else \
             default_specs(n_islands, seed=seed)
         if not self.specs:
@@ -549,6 +573,15 @@ class IslandEvolution:
             raise ValueError(f"migrant_k must be >= 1, got {migrant_k}")
         self.migrant_policy = migrant_policy
         self.migrant_k = migrant_k
+        if cascade_eta is not None and cascade_eta < 2:
+            raise ValueError(f"cascade_eta must be >= 2, got {cascade_eta}")
+        if cascade_slate < 1:
+            raise ValueError(f"cascade_slate must be >= 1, got {cascade_slate}")
+        self.cascade_eta = cascade_eta
+        self.cascade_slate = cascade_slate
+        self.cascade_promote = cascade_promote
+        self.calibration = PerfModelCalibration()
+        self.cascade_log: list[dict] = []
         self._prefetch_allocator = (PrefetchAllocator(prefetch_budget)
                                     if prefetch_budget is not None else None)
         self.memory = RefutedMemory()
@@ -582,14 +615,22 @@ class IslandEvolution:
         eval_specs = {
             key: EvalSpec.resolve(cfgs, check_correctness=check_correctness)
             for key, cfgs in suite_cfgs.items()}
+        # higher-fidelity rungs of each suite (cascade only): correctness was
+        # already verified at rung 0, so the expensive rungs skip it
+        rung_specs = {
+            key: [EvalSpec(espec.suite, False, espec.rng_seed,
+                           espec.service_latency_s, fid)
+                  for fid in (HLO, MEASURED)]
+            for key, espec in eval_specs.items()} if cascade_eta else {}
+        warm_specs = tuple(eval_specs.values()) + tuple(
+            s for rungs in rung_specs.values() for s in rungs)
         if backend == "process":
             # elastic: capacity follows queue depth (the pipelined proposal
             # bursts); fixed: the PR 2 warm pool sized once from cpu_count
             self._process_pool = (
-                ElasticProcessPool(tuple(eval_specs.values()),
-                                   max_workers=elastic_workers)
+                ElasticProcessPool(warm_specs, max_workers=elastic_workers)
                 if elastic_workers else
-                make_process_executor(tuple(eval_specs.values())))
+                make_process_executor(warm_specs))
         # cross-host scoring: ONE coordinator (worker fleet) serves every
         # suite's backend — tasks carry their spec, workers warm per spec
         self.service_coordinator = None
@@ -601,6 +642,7 @@ class IslandEvolution:
                 # on timeout this closes the coordinator + stops the procs
                 self._service_procs = self.service_coordinator.spawn_workers(
                     service_workers)
+        self.cascades: dict[str, CascadeBackend] = {}
         for key, espec in eval_specs.items():
             extra = ({"executor": self._process_pool}
                      if backend == "process" else
@@ -611,6 +653,17 @@ class IslandEvolution:
             if backend == "inline":
                 sc.warm()            # lazy proxy build must not race islands
             self.scorers[key] = sc
+            if cascade_eta:
+                # sibling rung backends share the rung-0 cache (fidelity-
+                # prefixed keys keep rungs from aliasing) and the same
+                # executor/coordinator, so the cascade adds no new pools
+                shared_cache = getattr(sc, "cache", None)
+                rungs = [sc] + [
+                    make_backend(backend, suite=rspec, cache=shared_cache,
+                                 **extra)
+                    for rspec in rung_specs[key]]
+                self.cascades[key] = CascadeBackend(
+                    rungs, eta=cascade_eta, calibration=self.calibration)
 
         def scorer_for(suite_name: Optional[str]):
             return self.scorers[suite_name or "default"]
@@ -764,7 +817,11 @@ class IslandEvolution:
                        if isinstance(self._process_pool, ElasticProcessPool)
                        else self.service_coordinator.stats()
                        if self.service_coordinator is not None
-                       else {}))
+                       else {}),
+            score_caches={key: s.cache.stats()
+                          for key, s in self.scorers.items()
+                          if hasattr(getattr(s, "cache", None), "stats")},
+            cascade=self.cascade_totals())
 
     def _bootstrap_batch(self) -> None:
         """Batch-evaluate the starting genomes of all not-yet-seeded islands
@@ -797,16 +854,61 @@ class IslandEvolution:
             # the barrier-mode KB prefetch
             isl.prefetch_cap = isl.prefetch_k = alloc.get(isl.name, 0)
 
+    def _cascade_slate(self, island: Island) -> list[KernelGenome]:
+        """The candidate slate one island feeds the cascade: its current best
+        plus the KB's top suggested edits, deterministically ordered
+        (``suggestion_sort_key``) and capped at ``cascade_slate``.  A pure
+        function of the lineage + KB state the payload persists, so a
+        resumed run rebuilds the identical slate."""
+        best = island.lineage.best()
+        if best is None:
+            return []
+        sv = island.scorer(best.genome)              # cached after stepping
+        if not sv.correct:
+            return [best.genome]
+        sugg = island.kb.suggestions(best.genome, sv, island.scorer.suite,
+                                     sv.dominant_bottleneck(), count=False)
+        sugg = sorted(sugg, key=suggestion_sort_key)[:self.cascade_slate]
+        return [best.genome] + [best.genome.with_(**s.edit) for s in sugg]
+
+    def _run_cascades(self) -> None:
+        """One successive-halving pass per island, in island order (the
+        calibration EMA update order is part of the replayed decision
+        sequence).  Rung-0 scoring goes through each island's own backend —
+        pure cache warming — so lineages never depend on this running."""
+        if not self.cascades:
+            return
+        epoch = len(self.cascade_log) and self.cascade_log[-1]["epoch"] + 1
+        for isl, spec in zip(self.islands, self.specs):
+            cascade = self.cascades[spec.target_suite or "default"]
+            log = cascade.run_cascade(self._cascade_slate(isl),
+                                      promote=self.cascade_promote)
+            self.cascade_log.append({"epoch": int(epoch), "island": isl.name,
+                                     **log})
+
+    def cascade_totals(self) -> dict:
+        """Aggregate cascade accounting (per-rung eval counts over all epochs
+        + current calibration factors) for reports and benchmarks."""
+        if not self.cascades:
+            return {}
+        totals: dict[str, int] = {}
+        for entry in self.cascade_log:
+            for fid, n in entry["evals"].items():
+                totals[fid] = totals.get(fid, 0) + n
+        return {"eta": self.cascade_eta, "epochs": len(self.cascade_log),
+                "evals": totals, "calibration": self.calibration.state()}
+
     def _epoch_barrier(self) -> None:
-        """Epoch barrier: publish refuted memory, migrate along the topology's
-        edges, record acceptance per edge, re-divide the speculative-prefetch
-        budget, persist.  Nothing here waits on scoring futures — in
-        pipelined mode each island's next-step proposals keep evaluating in
-        the workers while this runs."""
+        """Epoch barrier: publish refuted memory, run the evaluation cascade,
+        migrate along the topology's edges, record acceptance per edge,
+        re-divide the speculative-prefetch budget, persist.  Nothing here
+        waits on scoring futures — in pipelined mode each island's next-step
+        proposals keep evaluating in the workers while this runs."""
         for isl in self.islands:
             mem = isl.tools.memory_refuted
             if isinstance(mem, EpochMemoryView):
                 mem.publish()
+        self._run_cascades()
         stats = self.migration_stats
         stats.island_best = [isl.best_geomean() for isl in self.islands]
         edges = self.topology.edges(len(self.islands), stats)
@@ -853,6 +955,11 @@ class IslandEvolution:
                          "state": self.topology.state()},
             "migration_stats": self.migration_stats.to_payload(),
             "refuted": self.memory.to_payload(),
+            # calibration factors must survive kill/resume bit-exactly, or a
+            # resumed cascade would rank (and so promote) differently; the
+            # log tail is observability only
+            "cascade": {"calibration": self.calibration.state(),
+                        "log": self.cascade_log[-64:]} if self.cascades else {},
             "islands": [
                 {"name": isl.name,
                  "suite": spec.target_suite or "default",
@@ -924,6 +1031,11 @@ class IslandEvolution:
                 mem = isl.tools.memory_refuted
                 if isinstance(mem, EpochMemoryView):
                     mem.refreeze()
+        cascade = payload.get("cascade") or {}
+        if cascade.get("calibration"):
+            self.calibration.load_state(cascade["calibration"])
+        if cascade.get("log"):
+            self.cascade_log = list(cascade["log"])
 
     @classmethod
     def resume(cls, persist_path: str, **kw) -> "IslandEvolution":
@@ -970,6 +1082,8 @@ class IslandEvolution:
                                      for _ in range(n)])
 
     def close(self) -> None:
+        for cascade in self.cascades.values():
+            cascade.close()          # higher rungs; rung-0 close is idempotent
         for scorer in self.scorers.values():
             scorer.close()
         self._pool.shutdown(wait=True, cancel_futures=True)

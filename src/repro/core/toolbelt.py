@@ -133,8 +133,13 @@ class Toolbelt:
         if submit is None or not getattr(self.scorer, "overlapping", False):
             return 0
         cache = getattr(self.scorer, "cache", None)
+        # peek under the backend's own (fidelity-aware) key when it has one,
+        # so a rung-0 cache entry never masks a higher-rung submission
+        keyer = getattr(self.scorer, "score_key", None)
+        score_key = keyer if keyer is not None else \
+            (lambda g: g.key())
         todo = [g for g in genomes
-                if cache is None or cache.peek(g.key()) is None]
+                if cache is None or cache.peek(score_key(g)) is None]
         submit_many = getattr(self.scorer, "submit_many", None)
         if submit_many is not None:
             # one batched dispatch: on the service backend the whole burst
@@ -186,4 +191,7 @@ class Toolbelt:
             "kb_consults": self.kb.n_consults,
             "refuted_memories": len(self.memory_refuted),
             "eval_workers": getattr(self.scorer, "max_workers", None),
+            "score_cache": (self.scorer.cache.stats()
+                            if hasattr(getattr(self.scorer, "cache", None),
+                                       "stats") else {}),
         }

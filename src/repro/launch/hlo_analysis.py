@@ -345,6 +345,20 @@ def analyze_text(text: str) -> dict:
     return HloAnalysis(text).summary()
 
 
+def roofline_terms(summary: dict) -> dict:
+    """The roofline three-term seconds for a :meth:`HloAnalysis.summary` —
+    the same ``{"compute","memory","collective"}`` shape the dryrun records
+    carry in ``terms_s``, built from perfmodel's machine constants (the one
+    source of truth).  The evaluation cascade's ``hlo`` rung scores with the
+    max of these terms; ``roofline.py`` renders the same numbers."""
+    from repro.core.perfmodel import HBM_BW, ICI_BW, PEAK_FLOPS
+    return {
+        "compute": summary.get("flops", 0) / PEAK_FLOPS,
+        "memory": summary.get("bytes_accessed", 0) / HBM_BW,
+        "collective": summary.get("collective_total_bytes", 0) / ICI_BW,
+    }
+
+
 if __name__ == "__main__":
     import sys
 

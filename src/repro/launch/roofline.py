@@ -14,6 +14,8 @@ import glob
 import json
 import os
 
+from repro.core.perfmodel import PEAK_FLOPS
+
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
@@ -52,8 +54,10 @@ def rows_for(recs: list[dict]) -> list[list]:
         t = r["terms_s"]
         bound = max(t.values())
         # fraction of the ideal roofline: ideal = model work at peak; achieved
-        # bound-term time is the modelled step floor
-        ideal = r["model_flops_per_chip"] / 197e12
+        # bound-term time is the modelled step floor.  PEAK_FLOPS is the one
+        # machine-model source of truth (perfmodel) — the evaluation
+        # cascade's rung-1 roofline and this report must agree on it.
+        ideal = r["model_flops_per_chip"] / PEAK_FLOPS
         frac = ideal / bound if bound > 0 else 0.0
         rows.append([
             r["arch"], r["cell"],
