@@ -63,10 +63,13 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 from common import chart, emit, emit_json, geomean  # noqa: E402
 
-from repro.core import (ContinuousEvolution, ElasticProcessPool, EvalSpec,
-                        IslandEvolution, KernelGenome, ProcessBackend, Scorer,
-                        ServiceBackend, make_backend, scenario_specs,
-                        suite_by_name, topology_names)  # noqa: E402
+from repro.core import (ContinuousEvolution, ElasticProcessPool, EngineConfig,
+                        EvalConfig, EvalCoordinator, EvalSpec, IslandEvolution,
+                        KernelGenome, MigrationConfig, ProcessBackend, Scorer,
+                        SearchFrontier, SearchJob, ServiceBackend,
+                        lineage_fingerprint, make_backend, register_suite,
+                        scenario_specs, suite_by_name,
+                        topology_names)  # noqa: E402
 
 UNION = "mha+gqa+decode"
 
@@ -738,6 +741,184 @@ def cold_batch_smoke(args) -> int:
     return 0 if ok else 1
 
 
+def frontier_smoke(args) -> int:
+    """The CI ``frontier-smoke`` gate for evolution-as-a-service.  Four
+    gates, all written to results/bench/frontier.json:
+
+    1. scheduler trace — a raw 1-slot fake worker drains two 3:1-weighted
+       tenants; the grant sequence must follow argmin(granted/weight)
+       EXACTLY (contended grants split 8:3 before the light tenant drains
+       alone);
+    2. two concurrent jobs with unequal priority on one 2-slot fleet both
+       complete, with per-tenant slot-grant accounting favouring the heavy
+       tenant on contended grants;
+    3. a worker SIGKILLed mid-job changes NEITHER job's final lineage;
+    4. a frontier job is bit-identical to the same seed run through
+       IslandEvolution(backend="service") directly.
+    """
+    import socket
+
+    from repro.core.evals import protocol
+
+    suite = [c for c in suite_by_name("mha") if c.seq_len == 4096]
+    register_suite("frontier-bench", lambda: suite, overwrite=True)
+    steps, interval, seed = 10, 2, args.seed
+
+    def job(priority, jseed):
+        return SearchJob(suite="frontier-bench", steps=steps,
+                         migration_interval=interval, n_islands=2,
+                         priority=priority, seed=jseed)
+
+    def fingerprint_of(frontier, job_id):
+        done = frontier.job_events(job_id)[-1]
+        return done.kind, done.data.get("fingerprint"), done.data
+
+    # -- gate 1: the weighted-fair grant sequence, observed grant by grant ---------
+    print("== frontier smoke: scheduler trace (weights 3:1, one 1-slot "
+          "worker) ==")
+    spec = EvalSpec.resolve(suite, check_correctness=False)
+    ga, gb = cold_candidates(2)
+    coord = EvalCoordinator()
+    sock = None
+    try:
+        coord.set_tenant_weight("hi", 3.0)
+        coord.set_tenant_weight("lo", 1.0)
+        futs = coord.submit_many(spec, [ga] * 8, tenant="hi")
+        futs += coord.submit_many(spec, [gb] * 8, tenant="lo")
+        sock = socket.create_connection(coord.address)
+        protocol.send_msg(sock, {"type": protocol.HELLO, "name": "fake",
+                                 "slots": 1, "compact": True,
+                                 "host": "elsewhere"})
+        assert protocol.recv_msg(sock)["type"] == protocol.WELCOME
+        order = []
+        for _ in range(16):
+            msg = protocol.recv_msg(sock)
+            while msg["type"] != protocol.TASKS:
+                msg = protocol.recv_msg(sock)
+            tid, payload = msg["tasks"][0]
+            order.append("hi" if KernelGenome.from_edits(payload[1]) == ga
+                         else "lo")
+            protocol.send_msg(sock, {"type": protocol.RESULT, "id": tid,
+                                     "ok": True, "value": 0})
+        for f in futs:
+            f.result(10)
+        trace_tenants = coord.stats()["tenants"]
+    finally:
+        if sock is not None:
+            sock.close()
+        coord.close()
+    expected = ["hi", "lo", "hi", "hi", "hi", "lo", "hi", "hi",
+                "hi", "lo", "hi", "lo", "lo", "lo", "lo", "lo"]
+    trace_ok = order == expected
+    trace_contended = {t: trace_tenants[t]["granted_contended"]
+                       for t in ("hi", "lo")}
+    contended_total = sum(trace_contended.values())
+    print(f"grant order: {''.join('H' if o == 'hi' else 'L' for o in order)} "
+          f"({'OK' if trace_ok else 'MISMATCH'}); contended split "
+          f"{trace_contended['hi']}:{trace_contended['lo']} "
+          f"(share {trace_contended['hi'] / contended_total:.2f} "
+          f"vs weight share 0.75)")
+
+    # -- gate 2: two unequal-priority jobs on one 2-slot fleet ---------------------
+    print(f"\n== concurrent jobs: priority 3 vs 1, {steps} steps x 2 "
+          f"islands each, 2-slot fleet ==")
+    t0 = time.perf_counter()
+    frontier = SearchFrontier(workers=2)
+    try:
+        fleet_slots = frontier.coordinator.total_slots
+        hi = frontier.submit(job(3.0, seed))
+        lo = frontier.submit(job(1.0, seed + 1))
+        statuses = {jid: frontier.wait(jid, timeout=600) for jid in (hi, lo)}
+        wall = time.perf_counter() - t0
+        st = frontier.stats()
+        tenants = st["coordinator"]["tenants"]
+        _, fp_hi, done_hi = fingerprint_of(frontier, hi)
+        _, fp_lo, done_lo = fingerprint_of(frontier, lo)
+    finally:
+        frontier.close()
+    jobs_ok = all(s == "done" for s in statuses.values())
+    hi_c = tenants[hi]["granted_contended"]
+    lo_c = tenants[lo]["granted_contended"]
+    fair_ok = (tenants[hi]["granted"] > 0 and tenants[lo]["granted"] > 0
+               and (hi_c >= lo_c or hi_c + lo_c == 0))
+    print(f"both jobs: {statuses} in {wall:.1f}s on {fleet_slots} slots; "
+          f"grants hi {tenants[hi]['granted']} ({hi_c} contended) vs "
+          f"lo {tenants[lo]['granted']} ({lo_c} contended); "
+          f"spend {done_hi['spent']} vs {done_lo['spent']} paid evals "
+          f"({'OK' if jobs_ok and fair_ok else 'FAILED'})")
+
+    # -- gate 3: SIGKILL a worker mid-job; both lineages must not move -------------
+    print(f"\n== worker-kill invariance: same two jobs, 3 workers, one "
+          f"SIGKILLed mid-run ==")
+    frontier = SearchFrontier(workers=3)
+    try:
+        hi2 = frontier.submit(job(3.0, seed))
+        lo2 = frontier.submit(job(1.0, seed + 1))
+        time.sleep(0.4)
+        running_at_kill = {jid: frontier.stats()["jobs"][jid]["status"]
+                           for jid in (hi2, lo2)}
+        frontier._procs[0].kill()
+        statuses2 = {jid: frontier.wait(jid, timeout=600)
+                     for jid in (hi2, lo2)}
+        cstats = frontier.stats()["coordinator"]
+        _, fp_hi2, _ = fingerprint_of(frontier, hi2)
+        _, fp_lo2, _ = fingerprint_of(frontier, lo2)
+    finally:
+        frontier.close()
+    killed_mid_job = any(s == "running" for s in running_at_kill.values())
+    kill_ok = (all(s == "done" for s in statuses2.values())
+               and fp_hi2 == fp_hi and fp_lo2 == fp_lo)
+    print(f"jobs finished {statuses2} with {cstats['workers']} surviving "
+          f"workers, {cstats['tasks_requeued']} tasks requeued "
+          f"(mid-job kill: {killed_mid_job}); lineages unchanged: "
+          f"{'OK' if kill_ok else 'MISMATCH'}")
+
+    # -- gate 4: frontier vs direct engine bit-identity ----------------------------
+    print(f"\n== frontier vs IslandEvolution(backend='service') directly, "
+          f"seed {seed} ==")
+    direct = IslandEvolution(config=EngineConfig(
+        n_islands=2, suite=suite, seed=seed,
+        evals=EvalConfig(backend="service", service_workers=2),
+        migration=MigrationConfig(interval=interval)))
+    try:
+        direct.run(max_steps=steps)
+        direct_ok = lineage_fingerprint(direct) == fp_hi
+    finally:
+        direct.close()
+    print(f"lineage bit-identical: {'OK' if direct_ok else 'MISMATCH'}")
+
+    ok = trace_ok and jobs_ok and fair_ok and kill_ok and direct_ok
+    emit_json("frontier", {
+        "scheduler_trace": {"weights": {"hi": 3.0, "lo": 1.0},
+                            "order": order, "expected": expected,
+                            "contended": trace_contended,
+                            "contended_share_hi":
+                                trace_contended["hi"] / contended_total,
+                            "tenants": trace_tenants},
+        "concurrent_jobs": {"fleet_slots": fleet_slots, "wall_s": wall,
+                            "steps": steps, "statuses": statuses,
+                            "tenants": tenants,
+                            "spent": {"hi": done_hi["spent"],
+                                      "lo": done_lo["spent"]},
+                            "best_geomean": {
+                                "hi": done_hi["best_geomean"],
+                                "lo": done_lo["best_geomean"]}},
+        "worker_kill": {"workers": 3, "killed_mid_job": killed_mid_job,
+                        "statuses": statuses2,
+                        "tasks_requeued": cstats["tasks_requeued"],
+                        "surviving_workers": cstats["workers"],
+                        "lineage_unchanged": kill_ok},
+        "gates": {"scheduler_trace_exact": trace_ok,
+                  "concurrent_jobs_complete": jobs_ok,
+                  "weighted_fair_grants": fair_ok,
+                  "kill_invariant_lineage": kill_ok,
+                  "frontier_vs_direct_identical": direct_ok,
+                  "passed": ok},
+    })
+    print("frontier smoke: " + ("PASSED" if ok else "FAILED"))
+    return 0 if ok else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=40,
@@ -783,6 +964,13 @@ def main(argv=None):
                          "process beating thread on >= 2 cores; writes "
                          "results/bench/cold_batch.json (the CI cold-batch "
                          "gate)")
+    ap.add_argument("--frontier-smoke", action="store_true",
+                    help="run ONLY the evolution-as-a-service gates: the "
+                         "weighted-fair grant trace, concurrent unequal-"
+                         "priority jobs on one shared fleet, mid-job worker-"
+                         "kill lineage invariance, and frontier-vs-direct "
+                         "bit-identity; writes results/bench/frontier.json "
+                         "(the CI frontier-smoke step)")
     ap.add_argument("--gate", choices=("all", "deterministic"), default="all",
                     help="what the exit code enforces: 'deterministic' gates "
                          "resume identity, exact resumed-vs-uninterrupted "
@@ -797,6 +985,8 @@ def main(argv=None):
         return cascade_smoke(args)
     if args.cold_batch_smoke:
         return cold_batch_smoke(args)
+    if args.frontier_smoke:
+        return frontier_smoke(args)
     topologies = [t.strip() for t in args.topologies.split(",") if t.strip()]
     unknown = [t for t in topologies if t not in topology_names()]
     if unknown:

@@ -1,0 +1,110 @@
+"""Evolution-as-a-service: one shared worker fleet, many search jobs.
+
+Starts a long-lived SearchFrontier (the always-on mode from the ROADMAP's
+north star), spins up localhost socket workers, and submits concurrent
+SearchJobs over the wire with a FrontierClient — a high-priority decode
+search and a low-priority generalist sweep contending for the same
+evaluation slots under weighted-fair scheduling (priority x remaining
+budget).  Events stream back live: lineage commits, budget spend, best
+scores, completion.
+
+  PYTHONPATH=src python examples/search_service.py
+  PYTHONPATH=src python examples/search_service.py --workers 4 --steps 12
+
+To serve real remote tenants, bind a public address and point workers and
+clients at it from other hosts:
+
+  # the service host
+  PYTHONPATH=src python examples/search_service.py --listen 0.0.0.0:5123
+  # extra worker capacity, any host
+  python -m repro.core.evals.service_worker --connect SERVICE:5123
+  # a tenant, any host
+  client = FrontierClient(("SERVICE", 5123))
+  job_id = client.submit(SearchJob(suite="decode", budget=200, priority=2))
+
+The engine itself is configured the same way everywhere now — config
+objects, not kwarg soup:
+
+  IslandEvolution(config=EngineConfig(
+      n_islands=4, suite=mha_suite(), seed=0,
+      evals=EvalConfig(backend="process"),
+      migration=MigrationConfig(topology="adaptive", interval=4)))
+"""
+import argparse
+import threading
+
+from repro.core import FrontierClient, SearchFrontier, SearchJob
+
+
+def stream_job(client, job, tag):
+    job_id = client.submit(job)
+    print(f"[{tag}] accepted as {job_id} (priority {job.priority}, "
+          f"budget {job.budget})")
+    for ev in client.stream(job_id):
+        if ev.kind == "commit":
+            print(f"[{tag}] {ev.t:6.1f}s commit on island "
+                  f"{ev.data.get('island')}: geomean "
+                  f"{ev.data.get('geomean', 0):.3f}")
+        elif ev.kind == "progress":
+            print(f"[{tag}] {ev.t:6.1f}s step {ev.data['steps_done']}, "
+                  f"spent {ev.data['spent']}/{ev.data['budget']}")
+        elif ev.kind in ("done", "cancelled", "failed"):
+            print(f"[{tag}] {ev.kind}: {ev.data.get('steps', '?')} steps, "
+                  f"{ev.data.get('spent', '?')} paid evals, best geomean "
+                  f"{ev.data.get('best_geomean', 0):.3f}")
+    return job_id
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--listen", default="127.0.0.1:0",
+                    help="host:port the frontier (workers AND clients) binds")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="localhost socket workers to spawn into the fleet")
+    ap.add_argument("--steps", type=int, default=8,
+                    help="archipelago steps per job")
+    ap.add_argument("--budget", type=int, default=300,
+                    help="paid-evaluation budget per job")
+    args = ap.parse_args()
+
+    frontier = SearchFrontier(listen=args.listen, workers=args.workers)
+    host, port = frontier.address
+    print(f"frontier up at {host}:{port} with "
+          f"{frontier.coordinator.total_slots} evaluation slots\n")
+    try:
+        with FrontierClient(frontier.address) as client:
+            # two tenants, one fleet: the decode search outbids the sweep
+            # 3:1 on contended slots until its budget drains
+            jobs = [
+                ("decode", SearchJob(suite="decode", priority=3.0,
+                                     budget=args.budget, steps=args.steps,
+                                     seed=0)),
+                ("sweep", SearchJob(suite="mha+gqa+decode", priority=1.0,
+                                    budget=args.budget, steps=args.steps,
+                                    seed=1)),
+            ]
+            # one client connection is single-reader: one connection per
+            # concurrently-streamed job keeps the streams independent
+            clients = [FrontierClient(frontier.address) for _ in jobs[1:]]
+            threads = [threading.Thread(target=stream_job,
+                                        args=(c, job, tag))
+                       for c, (tag, job) in zip([client] + clients, jobs)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            for c in clients:
+                c.close()
+
+        st = frontier.stats()
+        print("\nper-tenant slot grants (weighted fair):")
+        for tid, t in sorted(st["coordinator"]["tenants"].items()):
+            print(f"  {tid}: {t['granted']} granted "
+                  f"({t['granted_contended']} contended), "
+                  f"{t['completed']} completed")
+    finally:
+        frontier.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,19 @@
 from repro.core.agent import AgentPolicy, Directive, ScriptedAgent, VariationResult
-from repro.core.evals import (BACKENDS, BatchScorer, ElasticProcessPool,
+from repro.core.config import (EngineConfig, EvalConfig, MigrationConfig,
+                               engine_config_from_legacy)
+from repro.core.evals import (BatchScorer, ElasticProcessPool,
                               EvalBackend, EvalCoordinator, EvalSpec,
                               InlineBackend, ProcessBackend, ScoreCache,
                               ScoreVector, Scorer, ServiceBackend,
-                              ThreadBackend, default_worker_count,
-                              evaluate_genome, make_backend,
-                              spawn_local_workers, stop_local_workers)
+                              ThreadBackend, backend_info,
+                              default_worker_count, evaluate_genome,
+                              make_backend, register_backend,
+                              registered_backends, spawn_local_workers,
+                              stop_local_workers, unregister_backend)
 from repro.core.evolution import ContinuousEvolution, EvolutionReport
+from repro.core.frontier import (JobEvent, SearchFrontier, SearchJob,
+                                 lineage_fingerprint)
+from repro.core.frontier_client import FrontierClient
 from repro.core.islands import (Archipelago, Island, IslandEvolution,
                                 IslandReport, IslandSpec, PrefetchAllocator,
                                 default_specs, scenario_specs)
@@ -28,12 +35,17 @@ from repro.core.variation import (AgenticVariationOperator, PlanExecuteSummarize
 
 __all__ = [
     "AgentPolicy", "Directive", "ScriptedAgent", "VariationResult",
-    "BACKENDS", "BatchScorer", "ElasticProcessPool", "EvalBackend",
+    "EngineConfig", "EvalConfig", "MigrationConfig",
+    "engine_config_from_legacy",
+    "BatchScorer", "ElasticProcessPool", "EvalBackend",
     "EvalCoordinator", "EvalSpec", "InlineBackend", "ProcessBackend",
     "ScoreCache", "ScoreVector", "Scorer", "ServiceBackend", "ThreadBackend",
-    "default_worker_count", "evaluate_genome", "make_backend",
-    "spawn_local_workers", "stop_local_workers",
+    "backend_info", "default_worker_count", "evaluate_genome", "make_backend",
+    "register_backend", "registered_backends", "spawn_local_workers",
+    "stop_local_workers", "unregister_backend",
     "ContinuousEvolution", "EvolutionReport", "KnowledgeBase",
+    "JobEvent", "SearchFrontier", "SearchJob", "lineage_fingerprint",
+    "FrontierClient",
     "Archipelago", "Island", "IslandEvolution", "IslandReport", "IslandSpec",
     "PrefetchAllocator", "default_specs", "scenario_specs",
     "BenchConfig", "decode_suite", "estimate", "expert_reference",

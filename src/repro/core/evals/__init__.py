@@ -7,44 +7,57 @@ Layout:
   scorer.py          Scorer / InlineBackend — correctness + per-rung scoring
                      (perfmodel | hlo roofline | measured), in-process
   worker.py          evaluate_genome / EvalSpec — the pure picklable worker fn
-  backends.py        EvalBackend protocol; thread (BatchScorer) + process backends
+  backends.py        EvalBackend protocol + the backend registry
+                     (register_backend); thread (BatchScorer) + process ship
+                     here, service/cascade/frontier self-register
   cascade.py         CascadeBackend — successive-halving promotion across rungs
   elastic.py         ElasticProcessPool — worker count follows queue depth
-  protocol.py        length-prefixed socket frames (spec+genome out, scores back)
-  service.py         EvalCoordinator + ServiceBackend — cross-host scoring with
-                     a live worker registry, heartbeats, fault-tolerant requeue
+  protocol.py        length-prefixed socket frames (spec+genome out, scores
+                     back; job/job_event frames for the search frontier)
+  service.py         EvalCoordinator + ServiceBackend — cross-host scoring on
+                     one asyncio event loop: live worker registry, heartbeats,
+                     fault-tolerant requeue, weighted-fair tenant scheduling,
+                     client sessions for the search frontier
   service_worker.py  the remote worker entrypoint (python -m ... --connect)
 
 Every backend exposes the same sync (``__call__``/``map``) and async
 (``submit`` -> Future, with per-genome dedup) surfaces; the pipelined island
 engine drives the async one.  Caches, dedup tables, and wire frames are all
 keyed per ``(genome, spec, fidelity)`` — a genome scored at one rung
-re-scores (never aliases) at another.  ``repro.core.scoring`` re-exports the
-stable names for older call sites.
+re-scores (never aliases) at another.
+
+``__all__`` below IS the supported surface (the public-API snapshot test
+pins it); everything else in the submodules is implementation detail.
 """
-from repro.core.evals.backends import (BACKENDS, BatchScorer, EvalBackend,
+from repro.core.evals.backends import (BackendInfo, BatchScorer, EvalBackend,
                                        ProcessBackend, ThreadBackend,
-                                       default_worker_count, make_backend,
+                                       backend_info, default_worker_count,
+                                       make_backend, register_backend,
+                                       registered_backends,
+                                       unregister_backend,
                                        make_process_executor)
 from repro.core.evals.cache import (FIDELITIES, HLO, MEASURED, PERFMODEL,
                                     ScoreCache, fidelity_key, key_fidelity)
 from repro.core.evals.cascade import CascadeBackend
 from repro.core.evals.elastic import ElasticProcessPool
 from repro.core.evals.scorer import CORRECTNESS_TOL, InlineBackend, Scorer
-from repro.core.evals.service import (EvalCoordinator, ServiceBackend,
-                                      spawn_local_workers, stop_local_workers)
+from repro.core.evals.service import (ClientSession, EvalCoordinator,
+                                      ServiceBackend, spawn_local_workers,
+                                      stop_local_workers)
 from repro.core.evals.vector import ScoreVector
-from repro.core.evals.worker import (EvalSpec, evaluate_frame,
+# importable for tests/internal callers, deliberately NOT in __all__ —
+# wire-level helpers are implementation detail, not supported surface
+from repro.core.evals.worker import (EvalSpec, evaluate_frame,  # noqa: F401
                                      evaluate_genome, intern_spec,
                                      warm_worker)
 
 __all__ = [
-    "BACKENDS", "BatchScorer", "CORRECTNESS_TOL", "CascadeBackend",
-    "ElasticProcessPool", "EvalBackend", "EvalCoordinator", "EvalSpec",
-    "FIDELITIES", "HLO", "InlineBackend", "MEASURED", "PERFMODEL",
+    "BackendInfo", "BatchScorer", "CORRECTNESS_TOL", "CascadeBackend",
+    "ClientSession", "ElasticProcessPool", "EvalBackend", "EvalCoordinator",
+    "EvalSpec", "FIDELITIES", "HLO", "InlineBackend", "MEASURED", "PERFMODEL",
     "ProcessBackend", "ScoreCache", "ScoreVector", "Scorer", "ServiceBackend",
-    "ThreadBackend", "default_worker_count", "evaluate_frame",
-    "evaluate_genome", "fidelity_key", "intern_spec", "key_fidelity",
-    "make_backend", "make_process_executor", "spawn_local_workers",
-    "stop_local_workers", "warm_worker",
+    "ThreadBackend", "backend_info", "default_worker_count",
+    "evaluate_genome", "make_backend", "make_process_executor",
+    "register_backend", "registered_backends", "spawn_local_workers",
+    "stop_local_workers", "unregister_backend",
 ]

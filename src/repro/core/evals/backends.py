@@ -25,11 +25,14 @@ inherits warm modules instead of paying its own multi-second import.
 from __future__ import annotations
 
 import concurrent.futures
+import importlib
 import multiprocessing
 import os
 import sys
 import threading
-from typing import Optional, Protocol, Sequence, Union, runtime_checkable
+from dataclasses import dataclass
+from typing import (Callable, Optional, Protocol, Sequence, Union,
+                    runtime_checkable)
 
 from repro.core.evals.cache import PERFMODEL, ScoreCache, fidelity_key
 from repro.core.evals.scorer import InlineBackend, Scorer
@@ -39,7 +42,86 @@ from repro.core.evals.worker import (EvalSpec, _prestart_noop, evaluate_frame,
 from repro.core.perfmodel import BenchConfig
 from repro.core.search_space import KernelGenome
 
-BACKENDS = ("inline", "thread", "process", "service")
+
+# -- the backend registry ------------------------------------------------------
+#
+# Mirrors perfmodel.register_suite: backends self-register a factory under a
+# name instead of living as hardcoded branches in make_backend, so the
+# service / cascade / frontier modules (and out-of-tree extensions) plug in
+# without this module importing them.  The metadata fields are what the
+# island engine's generic wiring reads: which shared resource a backend of
+# this name wants injected (a process/thread executor, or the coordinator).
+
+@dataclass(frozen=True)
+class BackendInfo:
+    """One registry entry: the factory plus the wiring metadata the island
+    engine uses to hand shared resources to backends it builds per suite."""
+    name: str
+    factory: Callable[..., "EvalBackend"]
+    executor: Optional[str] = None     # "thread" | "process": wants a pool
+    needs_coordinator: bool = False    # wants the shared EvalCoordinator
+
+_REGISTRY: dict[str, BackendInfo] = {}
+
+# backends that register on first use, keyed by the module that registers
+# them — make_backend imports lazily so the registry never forces the
+# service/cascade stacks (and their import cycles) on inline users
+_LAZY_MODULES = {
+    "service": "repro.core.evals.service",
+    "cascade": "repro.core.evals.cascade",
+    "frontier": "repro.core.frontier",
+}
+
+
+def register_backend(name: str,
+                     factory: Optional[Callable[..., "EvalBackend"]] = None, *,
+                     executor: Optional[str] = None,
+                     needs_coordinator: bool = False,
+                     overwrite: bool = False):
+    """Register an evaluation-backend factory under ``name`` (usable directly
+    or as a decorator, like :func:`perfmodel.register_suite`).
+
+    The factory is called as ``factory(spec=EvalSpec, cache=ScoreCache|None,
+    **kw)`` — :func:`make_backend` resolves suite/fidelity/cache once, every
+    backend receives the same pre-resolved spec.  ``executor`` /
+    ``needs_coordinator`` tell the island engine which shared resource to
+    inject when it builds this backend per suite."""
+    if not name or not name.replace("_", "").replace("-", "").isalnum():
+        raise ValueError(f"invalid backend name {name!r}")
+
+    def _register(fn):
+        if name in _REGISTRY and not overwrite:
+            raise ValueError(f"backend {name!r} already registered "
+                             "(overwrite=True replaces)")
+        _REGISTRY[name] = BackendInfo(name, fn, executor=executor,
+                                      needs_coordinator=needs_coordinator)
+        return fn
+
+    return _register if factory is None else _register(factory)
+
+
+def unregister_backend(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def registered_backends() -> tuple[str, ...]:
+    """Currently-registered backend names, sorted (lazily-registered ones —
+    service, cascade, frontier — appear once their module has loaded)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def backend_info(name: str) -> BackendInfo:
+    """Resolve one registry entry, importing a known lazy provider module on
+    first miss; unknown names raise the stable ``unknown eval backend``
+    ValueError every caller (engine included) matches on."""
+    info = _REGISTRY.get(name)
+    if info is None and name in _LAZY_MODULES:
+        importlib.import_module(_LAZY_MODULES[name])
+        info = _REGISTRY.get(name)
+    if info is None:
+        known = tuple(sorted(set(_REGISTRY) | set(_LAZY_MODULES)))
+        raise ValueError(f"unknown eval backend {name!r}; known: {known}")
+    return info
 
 
 def default_worker_count(max_workers: Optional[int] = None,
@@ -527,8 +609,10 @@ def make_backend(name: str,
                  suite: Union[str, Sequence[BenchConfig], EvalSpec,
                               None] = None,
                  **kw) -> "EvalBackend":
-    """Build an evaluation backend by name — the single dispatch point
-    ('inline' | 'thread' | 'process' | 'service'; see ``BACKENDS``).
+    """Build an evaluation backend by name — the single dispatch point over
+    the registry (see :func:`register_backend` / :func:`registered_backends`;
+    'inline' | 'thread' | 'process' ship from this module, 'service' |
+    'cascade' | 'frontier' self-register on first use).
 
     ``suite`` is a registered suite name, an explicit BenchConfig sequence,
     a pre-resolved :class:`EvalSpec`, or None (MHA default); ``fidelity``
@@ -536,7 +620,7 @@ def make_backend(name: str,
     a pre-resolved spec's rung) and ``cache`` injects a shared
     :class:`ScoreCache` — sibling backends of one suite at different rungs
     share a cache safely because keys carry the fidelity.  Remaining keywords
-    go to the backend constructor (e.g. ``executor=`` to share a pool,
+    go to the backend factory (e.g. ``executor=`` to share a pool,
     ``max_workers=``, or — for 'service' — ``coordinator=`` / ``workers=`` to
     share or spawn a worker fleet).
     """
@@ -549,24 +633,33 @@ def make_backend(name: str,
                             fid if fid is not None else PERFMODEL)
     if fid is not None and spec.fidelity != fid:
         spec = spec.with_fidelity(fid)      # suite arrived as an EvalSpec
-    if name == "inline":
-        return InlineBackend(suite=list(spec.suite),
-                             check_correctness=spec.check_correctness,
-                             rng_seed=spec.rng_seed, cache=cache,
-                             service_latency_s=spec.service_latency_s,
-                             fidelity=spec.fidelity, **kw)
-    if name == "thread":
-        return ThreadBackend(Scorer(suite=list(spec.suite),
-                                    check_correctness=spec.check_correctness,
-                                    rng_seed=spec.rng_seed, cache=cache,
-                                    service_latency_s=spec.service_latency_s,
-                                    fidelity=spec.fidelity),
-                             **kw)
-    if name == "process":
-        return ProcessBackend(spec=spec, cache=cache, **kw)
-    if name == "service":
-        # imported here, not at module top: service.py subclasses
-        # ParentCacheBackend from THIS module (import cycle otherwise)
-        from repro.core.evals.service import ServiceBackend
-        return ServiceBackend(spec=spec, cache=cache, **kw)
-    raise ValueError(f"unknown eval backend {name!r}; known: {BACKENDS}")
+    return backend_info(name).factory(spec=spec, cache=cache, **kw)
+
+
+def _inline_factory(spec: EvalSpec, cache: Optional[ScoreCache] = None,
+                    **kw) -> InlineBackend:
+    return InlineBackend(suite=list(spec.suite),
+                         check_correctness=spec.check_correctness,
+                         rng_seed=spec.rng_seed, cache=cache,
+                         service_latency_s=spec.service_latency_s,
+                         fidelity=spec.fidelity, **kw)
+
+
+def _thread_factory(spec: EvalSpec, cache: Optional[ScoreCache] = None,
+                    **kw) -> ThreadBackend:
+    return ThreadBackend(Scorer(suite=list(spec.suite),
+                                check_correctness=spec.check_correctness,
+                                rng_seed=spec.rng_seed, cache=cache,
+                                service_latency_s=spec.service_latency_s,
+                                fidelity=spec.fidelity),
+                         **kw)
+
+
+def _process_factory(spec: EvalSpec, cache: Optional[ScoreCache] = None,
+                     **kw) -> ProcessBackend:
+    return ProcessBackend(spec=spec, cache=cache, **kw)
+
+
+register_backend("inline", _inline_factory)
+register_backend("thread", _thread_factory, executor="thread")
+register_backend("process", _process_factory, executor="process")

@@ -31,8 +31,11 @@ from __future__ import annotations
 import concurrent.futures
 from typing import Optional, Sequence
 
-from repro.core.evals.cache import FIDELITIES, HLO, MEASURED, PERFMODEL
+from repro.core.evals.backends import make_backend, register_backend
+from repro.core.evals.cache import (FIDELITIES, HLO, MEASURED, PERFMODEL,
+                                    ScoreCache)
 from repro.core.evals.vector import ScoreVector
+from repro.core.evals.worker import EvalSpec
 from repro.core.perfmodel import PerfModelCalibration
 from repro.core.search_space import KernelGenome
 
@@ -210,3 +213,25 @@ class CascadeBackend:
         log["calibration"] = self.calibration.state()
         self.last_run = log
         return log
+
+
+def _cascade_factory(spec: EvalSpec, cache: Optional[ScoreCache] = None, *,
+                     rungs: Optional[Sequence] = None, base: str = "thread",
+                     fidelities: Optional[Sequence[str]] = None,
+                     eta: int = DEFAULT_ETA,
+                     calibration: Optional[PerfModelCalibration] = None,
+                     **kw) -> CascadeBackend:
+    """Registry factory: pass pre-built ``rungs`` (the island engine does —
+    it wires shared executors/coordinators itself), or let the factory build
+    one backend per fidelity rung through :func:`make_backend`, all sharing
+    one cache (fidelity-prefixed keys keep rungs from aliasing)."""
+    if rungs is None:
+        shared = cache if cache is not None else ScoreCache()
+        rungs = [make_backend(base, suite=spec.with_fidelity(f),
+                              cache=shared, **kw)
+                 for f in (fidelities if fidelities is not None
+                           else FIDELITIES)]
+    return CascadeBackend(rungs, eta=eta, calibration=calibration)
+
+
+register_backend("cascade", _cascade_factory)

@@ -39,12 +39,27 @@ Frame types (the ``"type"`` key of every message):
   heartbeat  worker -> coordinator  liveness beacon (any frame counts too)
   shutdown   coordinator -> worker  drain and exit
 
+Search-frontier frames (clients, not workers — a HELLO whose ``role`` is
+``"client"`` routes the connection to the frontier's client session handler;
+legacy workers never send ``role``, so PR 6 worker binaries are untouched):
+
+  job         client -> frontier    {job: {...}}: submit a search job; the
+                                    frontier replies with a stream of
+                                    job_event frames (first: "accepted",
+                                    carrying the assigned job id)
+  job_cancel  client -> frontier    {job: job_id}: stop a running job at its
+                                    next chunk boundary
+  job_event   frontier -> client    {job, kind, t, data}: lineage commits,
+                                    budget spend, completion, ... — the
+                                    streamed lifecycle of a submitted job
+
 Transport security: frames are pickles, so the listener must only ever be
 reachable by trusted workers (loopback, or a private cluster network) — the
 same trust model as multiprocessing's own pickle-over-pipe transport.
 """
 from __future__ import annotations
 
+import asyncio
 import pickle
 import socket
 import struct
@@ -63,6 +78,9 @@ RESULT = "result"
 SHM_OK = "shm_ok"
 HEARTBEAT = "heartbeat"
 SHUTDOWN = "shutdown"
+JOB = "job"
+JOB_CANCEL = "job_cancel"
+JOB_EVENT = "job_event"
 
 
 def frame_size(msg: dict) -> int:
@@ -72,15 +90,22 @@ def frame_size(msg: dict) -> int:
     return _LEN.size + len(pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL))
 
 
+def encode_frame(msg: dict) -> bytes:
+    """Frame one message into its exact wire bytes (length prefix included).
+    The async coordinator encodes at enqueue time — wire accounting reads
+    ``len(encode_frame(msg))``, which equals :func:`frame_size`."""
+    payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
+    if len(payload) >= MAX_FRAME:
+        raise ValueError(f"frame too large: {len(payload)} bytes")
+    return _LEN.pack(len(payload)) + payload
+
+
 def send_msg(sock: socket.socket, msg: dict,
              lock: "threading.Lock | None" = None) -> int:
     """Frame and send one message; ``lock`` serializes concurrent senders
     (heartbeat thread vs result thread) so frames never interleave.
     Returns the number of bytes put on the wire (prefix included)."""
-    payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
-    if len(payload) >= MAX_FRAME:
-        raise ValueError(f"frame too large: {len(payload)} bytes")
-    data = _LEN.pack(len(payload)) + payload
+    data = encode_frame(msg)
     if lock is None:
         sock.sendall(data)
     else:
@@ -107,6 +132,35 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
             raise ConnectionError("peer closed the connection")
         buf.extend(chunk)
     return bytes(buf)
+
+
+async def async_recv_msg(reader: asyncio.StreamReader) -> dict:
+    """Async twin of :func:`recv_msg` for the coordinator's event loop.
+    EOF/short reads surface as ``ConnectionError`` (same dead-peer contract
+    as the blocking helper); a corrupt payload raises whatever ``pickle``
+    raises, which the reader treats as a protocol error."""
+    try:
+        header = await reader.readexactly(_LEN.size)
+    except asyncio.IncompleteReadError as e:
+        raise ConnectionError("peer closed the connection") from e
+    (n,) = _LEN.unpack(header)
+    if n >= MAX_FRAME:
+        raise ConnectionError(f"oversized frame announced: {n} bytes")
+    try:
+        payload = await reader.readexactly(n)
+    except asyncio.IncompleteReadError as e:
+        raise ConnectionError("peer closed the connection") from e
+    return pickle.loads(payload)
+
+
+async def async_send_msg(writer: asyncio.StreamWriter, msg: dict) -> int:
+    """Frame and send one message on a stream writer, draining the transport
+    buffer — the await IS the backpressure: a slow peer stalls only its own
+    sender coroutine, never the event loop."""
+    data = encode_frame(msg)
+    writer.write(data)
+    await writer.drain()
+    return len(data)
 
 
 def parse_address(address: str) -> tuple[str, int]:

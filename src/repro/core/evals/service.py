@@ -11,16 +11,40 @@ inline path for exactly the reason process results are: a worker rebuilds
 its :class:`~repro.core.evals.worker.EvalSpec` scorer deterministically, so
 WHERE an evaluation runs can never change its value.
 
+Concurrency model: ONE asyncio event loop on a background thread owns every
+connection.  Each peer gets a reader coroutine and a sender coroutine fed by
+a per-connection FIFO queue of pre-encoded frames; the sender ``await``\\ s
+``writer.drain()`` after every frame, so a slow peer stalls only its own
+sender — explicit per-connection backpressure instead of one blocked thread
+per socket.  Frame ordering guarantees (WELCOME before any TASK/WARM, WARM
+before a tasks frame that addresses the spec by id) fall out of queue FIFO
+order.  Registry state is guarded by a plain ``threading.Lock`` held only
+for short critical sections and never across an ``await``, so the public
+surface (``submit_many``, ``stats``, ``wait_for_workers``, ``close``) stays
+callable from any thread; submissions hop onto the loop with
+``call_soon_threadsafe``.
+
+Multi-tenant scheduling: every task belongs to a *tenant* (the default ""
+tenant preserves the historical single-queue FIFO bit for bit).  Pending
+tasks queue per tenant, and each free slot is granted to the pending tenant
+minimizing ``granted / weight`` (tenant id breaks ties) — weighted fair
+sharing, with weights set by the search frontier to priority x remaining
+budget.  ``granted_contended`` counts grants made while >= 2 tenants were
+queued: the fairness benchmark gates on each tenant's share of exactly
+those grants, the only ones where the scheduler had a real choice.
+
 Fault model (the paper's 7-day-run regime: workers come and go, the search
 must not notice):
 
   * a worker's death is detected two ways — synchronously, when its socket
-    drops (kill/crash/network reset), and asynchronously, when it misses
-    heartbeats for ``dead_after_s`` (hang/partition);
-  * every task in flight on a dead worker is requeued at the FRONT of the
-    pending queue (original submission order) and re-dispatched to the
-    surviving workers — the waiting future never notices, and determinism
-    makes the retried result identical to the one the dead worker owed;
+    drops (kill/crash/network reset) or its sender fails, and
+    asynchronously, when it misses heartbeats for ``dead_after_s``
+    (hang/partition);
+  * every task in flight on a dead worker is requeued at the FRONT of its
+    tenant's pending queue (original submission order) and re-dispatched to
+    the surviving workers — the waiting future never notices, and
+    determinism makes the retried result identical to the one the dead
+    worker owed;
   * a task that *fails* (the evaluation itself raised) is NOT requeued: the
     scorer is deterministic, so retrying a poisoned genome elsewhere would
     loop forever.  The exception propagates to the caller, mirroring the
@@ -28,7 +52,8 @@ must not notice):
 
 Topology is observable like :class:`ElasticProcessPool`'s resizes: ``join``
 / ``leave`` / ``requeue`` events accumulate in ``EvalCoordinator.events``
-and ``stats()`` snapshots the registry.
+and ``stats()`` snapshots the registry (now including per-tenant grant
+accounting).
 
 The parent keeps the shared :class:`ScoreCache` and the in-flight future
 table (duplicate submissions for one genome collapse onto one wire task),
@@ -37,9 +62,17 @@ so cache behaviour is identical to the process backend's.  Both are keyed by
 ServiceBackends of one suite at different cascade rungs can share a cache
 AND a coordinator (each rung's spec interns to its own wire id) without a
 rung-0 result ever masking a rung-2 task.
+
+Client sessions: a HELLO frame whose ``role`` is ``"client"`` routes the
+connection to the frontier layer instead of the worker registry — the
+coordinator keeps a :class:`ClientSession` per such peer and hands inbound
+frames to ``on_client_msg`` (set by :class:`~repro.core.frontier
+.SearchFrontier`).  Workers never send ``role``, so PR 6 worker binaries
+register exactly as before.
 """
 from __future__ import annotations
 
+import asyncio
 import concurrent.futures
 import itertools
 import os
@@ -51,34 +84,57 @@ import threading
 import time
 from collections import deque
 from multiprocessing import shared_memory
-from typing import Optional, Sequence, Union
+from typing import Callable, Optional, Sequence, Union
 
 from repro.core.evals import protocol
-from repro.core.evals.backends import ParentCacheBackend
+from repro.core.evals.backends import ParentCacheBackend, register_backend
 from repro.core.evals.cache import ScoreCache
 from repro.core.evals.worker import EvalSpec, intern_spec
 from repro.core.perfmodel import BenchConfig
 from repro.core.search_space import KernelGenome
 
-__all__ = ["EvalCoordinator", "ServiceBackend", "spawn_local_workers",
-           "stop_local_workers"]
+__all__ = ["ClientSession", "EvalCoordinator", "ServiceBackend",
+           "spawn_local_workers", "stop_local_workers"]
+
+DEFAULT_TENANT = ""
+
+
+class _Tenant:
+    """Per-tenant scheduling state: a FIFO of pending tasks plus the grant
+    accounting the weighted-fair scheduler and ``stats()`` read."""
+
+    __slots__ = ("tid", "weight", "queue", "submitted", "granted",
+                 "granted_contended", "completed")
+
+    def __init__(self, tid: str, weight: float = 1.0):
+        self.tid = tid
+        self.weight = max(float(weight), 1e-9)
+        self.queue: deque[dict] = deque()
+        self.submitted = 0
+        self.granted = 0            # slot grants (dispatches incl. retries)
+        self.granted_contended = 0  # grants while >= 2 tenants were queued
+        self.completed = 0
 
 
 class _RemoteWorker:
     """Registry entry for one connected worker host."""
 
-    __slots__ = ("wid", "name", "slots", "conn", "send_lock", "in_flight",
-                 "last_seen", "alive", "host", "compact", "shm_ok",
-                 "specs_known", "segments_known")
+    __slots__ = ("wid", "name", "slots", "reader", "writer", "queue",
+                 "sender", "conn_task", "in_flight", "last_seen", "alive",
+                 "host", "compact", "shm_ok", "specs_known", "segments_known")
 
-    def __init__(self, wid: int, name: str, slots: int, conn: socket.socket, *,
+    def __init__(self, wid: int, name: str, slots: int,
+                 reader: asyncio.StreamReader, writer: asyncio.StreamWriter, *,
                  host: Optional[str] = None, compact: bool = False,
                  wants_shm: bool = False):
         self.wid = wid
         self.name = name
         self.slots = max(1, slots)
-        self.conn = conn
-        self.send_lock = threading.Lock()
+        self.reader = reader
+        self.writer = writer
+        self.queue: asyncio.Queue = asyncio.Queue()  # encoded outbound frames
+        self.sender: Optional[asyncio.Task] = None
+        self.conn_task: Optional[asyncio.Task] = None
         self.in_flight: dict[int, dict] = {}       # task id -> task
         self.last_seen = time.monotonic()
         self.alive = True
@@ -89,14 +145,47 @@ class _RemoteWorker:
         self.compact = compact               # understands batched tasks frames
         # None = shm untried (use optimistically), False = failed, disabled
         self.shm_ok: Optional[bool] = None if wants_shm else False
-        # announcements confirmed delivered (send succeeded); until then every
-        # tasks frame repeats them — duplicate delivery is idempotent
+        # announcements already enqueued ahead of any frame that would need
+        # them (queue FIFO order makes enqueue == ordered delivery-or-death)
         self.specs_known: set[int] = set()
         self.segments_known: set[str] = set()
 
     @property
     def free_slots(self) -> int:
         return self.slots - len(self.in_flight)
+
+
+class ClientSession:
+    """One connected frontier client (HELLO ``role: "client"``).
+
+    ``send`` is thread-safe — it hops the encoded frame onto the event loop
+    and into this connection's FIFO sender queue — so the frontier's job
+    threads can stream :class:`~repro.core.frontier.JobEvent` frames without
+    touching the loop directly."""
+
+    __slots__ = ("cid", "name", "queue", "sender", "conn_task", "alive",
+                 "_loop")
+
+    def __init__(self, cid: int, name: str, loop: asyncio.AbstractEventLoop):
+        self.cid = cid
+        self.name = name
+        self.queue: asyncio.Queue = asyncio.Queue()
+        self.sender: Optional[asyncio.Task] = None
+        self.conn_task: Optional[asyncio.Task] = None
+        self.alive = True
+        self._loop = loop
+
+    def send(self, msg: dict) -> bool:
+        """Enqueue one frame for this client; False if the session (or the
+        loop) is already gone — the caller just stops streaming."""
+        if not self.alive:
+            return False
+        try:
+            data = protocol.encode_frame(msg)
+            self._loop.call_soon_threadsafe(self.queue.put_nowait, data)
+            return True
+        except RuntimeError:
+            return False
 
 
 class _ShmGenomeStore:
@@ -155,12 +244,15 @@ class EvalCoordinator:
     """Listens for workers, keeps the live host registry, dispatches tasks.
 
     ``submit(spec, genome)`` returns a ``Future[ScoreVector]`` immediately;
-    tasks queue until a worker with a free slot exists, are dispatched
+    tasks queue per tenant until a worker with a free slot exists, slots are
+    granted weighted-fair across queued tenants (the default tenant alone
+    degenerates to the historical FIFO), tasks are dispatched
     least-loaded-first (deterministic id tie-break), and survive the death
     of their worker via front-of-queue requeue.  One coordinator serves any
     number of :class:`ServiceBackend`\\ s (each task carries its own spec;
     workers warm a per-spec scorer table on demand), which is how the island
-    engine shares one worker fleet across all suites.
+    engine — and the search frontier's whole job population — shares one
+    worker fleet across all suites.
     """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
@@ -172,16 +264,24 @@ class EvalCoordinator:
         self._lock = threading.Lock()
         self._roster = threading.Condition(self._lock)  # notified on join
         self._workers: dict[int, _RemoteWorker] = {}
-        self._pending: deque[dict] = deque()
+        self._clients: dict[int, ClientSession] = {}
+        self._tenants: dict[str, _Tenant] = {}
         self._specs: list[tuple[int, EvalSpec]] = []   # (interned id, spec)
         self._next_wid = itertools.count()
+        self._next_cid = itertools.count()
         self._next_tid = itertools.count()
         self._closed = False
         self.peak_workers = 0
         self.tasks_submitted = 0
         self.tasks_completed = 0
         self.tasks_requeued = 0
+        self.granted_contended = 0
         self.events: list[dict] = []
+        # frontier hooks: called on the EVENT LOOP thread for every frame a
+        # client session sends / when one disconnects — handlers must not block
+        self.on_client_msg: Optional[Callable[[ClientSession, dict], None]] \
+            = None
+        self.on_client_close: Optional[Callable[[ClientSession], None]] = None
         # wire accounting for the bench's bytes-per-task metric: every
         # task-carrying frame's on-wire size, and the tasks it carried
         self.wire_task_bytes = 0
@@ -192,16 +292,44 @@ class EvalCoordinator:
         self._shm_store: Optional[_ShmGenomeStore] = None
         self._shm_broken = False    # /dev/shm unusable: stop trying
 
+        # the listening socket is created synchronously so .address is known
+        # before __init__ returns; the event loop adopts it via start_server
         self._listener = socket.create_server((host, port))
         self.address: tuple[str, int] = self._listener.getsockname()[:2]
-        self._accept_thread = threading.Thread(
-            target=self._accept_loop, name="eval-coordinator-accept",
-            daemon=True)
-        self._accept_thread.start()
-        self._monitor_thread = threading.Thread(
-            target=self._monitor_loop, name="eval-coordinator-monitor",
-            daemon=True)
-        self._monitor_thread.start()
+        self._loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(
+            target=self._loop_main, name="eval-coordinator-loop", daemon=True)
+        self._thread.start()
+        asyncio.run_coroutine_threadsafe(self._start(), self._loop).result()
+
+    # -- the event loop ------------------------------------------------------------
+    def _loop_main(self) -> None:
+        asyncio.set_event_loop(self._loop)
+        try:
+            self._loop.run_forever()
+        finally:
+            # drain whatever close() left cancelled, then free the loop
+            pending = asyncio.all_tasks(self._loop)
+            for task in pending:
+                task.cancel()
+            if pending:
+                self._loop.run_until_complete(asyncio.gather(
+                    *pending, return_exceptions=True))
+            self._loop.close()
+
+    async def _start(self) -> None:
+        self._listener.setblocking(False)
+        self._server = await asyncio.start_server(
+            self._handle_conn, sock=self._listener)
+        self._monitor_task = self._loop.create_task(self._monitor())
+
+    def _call_soon(self, fn, *args) -> None:
+        """Schedule a callback on the loop from any thread; a no-op once the
+        loop is shutting down (callers are all best-effort nudges)."""
+        try:
+            self._loop.call_soon_threadsafe(fn, *args)
+        except RuntimeError:
+            pass
 
     # -- introspection ------------------------------------------------------------
     @property
@@ -217,7 +345,7 @@ class EvalCoordinator:
     @property
     def queue_depth(self) -> int:
         with self._lock:
-            return len(self._pending)
+            return sum(len(t.queue) for t in self._tenants.values())
 
     def stats(self) -> dict:
         with self._lock:
@@ -225,12 +353,14 @@ class EvalCoordinator:
                 "workers": len(self._workers),
                 "peak_workers": self.peak_workers,
                 "total_slots": sum(w.slots for w in self._workers.values()),
-                "queue_depth": len(self._pending),
+                "queue_depth": sum(len(t.queue)
+                                   for t in self._tenants.values()),
                 "in_flight": sum(len(w.in_flight)
                                  for w in self._workers.values()),
                 "tasks_submitted": self.tasks_submitted,
                 "tasks_completed": self.tasks_completed,
                 "tasks_requeued": self.tasks_requeued,
+                "granted_contended": self.granted_contended,
                 "joined": sum(1 for e in self.events if e["event"] == "join"),
                 "left": sum(1 for e in self.events if e["event"] == "leave"),
                 "wire_task_bytes": self.wire_task_bytes,
@@ -242,6 +372,14 @@ class EvalCoordinator:
                                 if self._shm_store else 0),
                 "shm_bytes": (self._shm_store.bytes_stored
                               if self._shm_store else 0),
+                "clients": len(self._clients),
+                "tenants": {t.tid: {"weight": t.weight,
+                                    "queued": len(t.queue),
+                                    "submitted": t.submitted,
+                                    "granted": t.granted,
+                                    "granted_contended": t.granted_contended,
+                                    "completed": t.completed}
+                            for t in self._tenants.values()},
                 "events": list(self.events),
             }
 
@@ -275,6 +413,19 @@ class EvalCoordinator:
                 f"{timeout_s:.0f}s")
         return procs
 
+    # -- tenants -------------------------------------------------------------------
+    def _tenant_locked(self, tid: str) -> _Tenant:
+        t = self._tenants.get(tid)
+        if t is None:
+            t = self._tenants[tid] = _Tenant(tid)
+        return t
+
+    def set_tenant_weight(self, tenant: str, weight: float) -> None:
+        """Set one tenant's fair-share weight (the frontier re-computes
+        priority x remaining-budget at every job chunk boundary)."""
+        with self._lock:
+            self._tenant_locked(tenant).weight = max(float(weight), 1e-9)
+
     # -- the scoring surface -------------------------------------------------------
     def register_spec(self, spec: EvalSpec) -> int:
         """Announce a spec so current AND future workers pre-warm its scorer
@@ -285,20 +436,26 @@ class EvalCoordinator:
             if any(s == spec for _, s in self._specs):
                 return sid
             self._specs.append((sid, spec))
-            workers = list(self._workers.values())
-        for w in workers:
-            if self._try_send(w, {"type": protocol.WARM,
-                                  "specs": ((sid, spec),)}) is not None:
-                with self._lock:
-                    w.specs_known.add(sid)
+        self._call_soon(self._warm_workers, sid, spec)
         return sid
 
-    def submit(self, spec: EvalSpec, genome: KernelGenome
-               ) -> concurrent.futures.Future:
-        return self.submit_many(spec, (genome,))[0]
+    def _warm_workers(self, sid: int, spec: EvalSpec) -> None:
+        """Loop-thread: enqueue a WARM frame to every live worker that has
+        not seen this spec.  FIFO queues make the announcement ordered ahead
+        of any later tasks frame addressing the spec by id."""
+        with self._lock:
+            for w in self._workers.values():
+                if w.alive and sid not in w.specs_known:
+                    self._enqueue_locked(w, {"type": protocol.WARM,
+                                             "specs": ((sid, spec),)})
+                    w.specs_known.add(sid)
 
-    def submit_many(self, spec: EvalSpec, genomes: Sequence[KernelGenome]
-                    ) -> list:
+    def submit(self, spec: EvalSpec, genome: KernelGenome, *,
+               tenant: str = DEFAULT_TENANT) -> concurrent.futures.Future:
+        return self.submit_many(spec, (genome,), tenant=tenant)[0]
+
+    def submit_many(self, spec: EvalSpec, genomes: Sequence[KernelGenome], *,
+                    tenant: str = DEFAULT_TENANT) -> list:
         """Queue a batch under one lock pass; the whole batch rides to each
         assigned worker in one ``tasks`` frame (see :meth:`_dispatch`)."""
         sid = intern_spec(spec)
@@ -306,62 +463,76 @@ class EvalCoordinator:
         with self._lock:
             if self._closed:
                 raise RuntimeError("submit on closed EvalCoordinator")
+            t = self._tenant_locked(tenant)
             for genome in genomes:
                 fut: concurrent.futures.Future = concurrent.futures.Future()
-                self._pending.append({"id": next(self._next_tid), "spec": spec,
-                                      "sid": sid, "genome": genome,
-                                      "future": fut})
+                t.queue.append({"id": next(self._next_tid), "spec": spec,
+                                "sid": sid, "genome": genome,
+                                "tenant": tenant, "future": fut})
+                t.submitted += 1
                 self.tasks_submitted += 1
                 futs.append(fut)
-        self._dispatch()
+        self._call_soon(self._dispatch)
         return futs
 
-    # -- dispatch ------------------------------------------------------------------
+    # -- dispatch (loop thread only) -------------------------------------------------
     def _dispatch(self) -> None:
-        """Feed free worker slots from the FIFO, coalescing everything
-        assigned to one worker into a single ``tasks`` frame (legacy workers
-        get per-task frames).  Socket sends happen outside the registry lock
-        (a slow peer must not stall the coordinator); a failed send kills
-        that worker and requeues, so the loop re-runs until quiescent."""
-        while True:
-            batches: list[tuple[_RemoteWorker, list[dict], list[dict],
-                                set[int], set[str]]] = []
-            with self._lock:
-                grouped: dict[int, tuple[_RemoteWorker, list[dict]]] = {}
-                while self._pending:
-                    free = [w for w in self._workers.values()
-                            if w.alive and w.free_slots > 0]
-                    if not free:
-                        break
-                    # least-loaded first; wid breaks ties deterministically
-                    w = min(free, key=lambda w: (len(w.in_flight) / w.slots,
-                                                 w.wid))
-                    task = self._pending.popleft()
-                    if task["future"].cancelled():
-                        continue
-                    w.in_flight[task["id"]] = task
-                    grouped.setdefault(w.wid, (w, []))[1].append(task)
-                for w, tasks in grouped.values():
-                    frames, sids, segs = self._encode_tasks_locked(w, tasks)
-                    batches.append((w, tasks, frames, sids, segs))
-            if not batches:
+        """Feed free worker slots from the tenant queues — each grant goes to
+        the queued tenant minimizing granted/weight (weighted fair; the
+        default tenant alone is plain FIFO) and to the least-loaded worker
+        (wid tie-break) — coalescing everything assigned to one worker into
+        a single ``tasks`` frame (legacy workers get per-task frames).
+        Frames are encoded here and enqueued on each worker's sender queue;
+        enqueue cannot fail, so a send failure surfaces in the sender
+        coroutine as a worker death (requeue + re-dispatch), never here."""
+        with self._lock:
+            if self._closed:
                 return
-            for w, tasks, frames, sids, segs in batches:
+            grouped: dict[int, tuple[_RemoteWorker, list[dict]]] = {}
+            while True:
+                queued = [t for t in self._tenants.values() if t.queue]
+                if not queued:
+                    break
+                free = [w for w in self._workers.values()
+                        if w.alive and w.free_slots > 0]
+                if not free:
+                    break
+                contended = len(queued) >= 2
+                # weighted fair share: grant the slot to the queued tenant
+                # with the lowest granted/weight (tenant id breaks ties)
+                t = min(queued, key=lambda t: (t.granted / t.weight, t.tid))
+                task = t.queue.popleft()
+                if task["future"].cancelled():
+                    continue
+                # least-loaded first; wid breaks ties deterministically
+                w = min(free, key=lambda w: (len(w.in_flight) / w.slots,
+                                             w.wid))
+                w.in_flight[task["id"]] = task
+                t.granted += 1
+                if contended:
+                    t.granted_contended += 1
+                    self.granted_contended += 1
+                grouped.setdefault(w.wid, (w, []))[1].append(task)
+            for w, tasks in grouped.values():
+                frames, sids, segs = self._encode_tasks_locked(w, tasks)
                 sent = 0
                 for frame in frames:
-                    n = self._try_send(w, frame)
-                    if n is None:
-                        self._worker_died(w, "send failed")  # requeues
-                        sent = None
-                        break
-                    sent += n
-                if sent is not None:
-                    with self._lock:
-                        self.wire_task_bytes += sent
-                        self.wire_tasks_sent += len(tasks)
-                        # announcements riding these frames are now delivered
-                        w.specs_known |= sids
-                        w.segments_known |= segs
+                    sent += self._enqueue_locked(w, frame)
+                # accounted at enqueue time, under the lock: strictly before
+                # the worker can have received the frame, with the exact
+                # on-wire size (encode_frame bytes == protocol.frame_size)
+                self.wire_task_bytes += sent
+                self.wire_tasks_sent += len(tasks)
+                w.specs_known |= sids
+                w.segments_known |= segs
+
+    def _enqueue_locked(self, w: _RemoteWorker, msg: dict) -> int:
+        """Encode one frame onto a worker's sender queue; returns its exact
+        on-wire size.  FIFO per connection — enqueue order IS delivery order
+        (or the worker dies and everything requeues)."""
+        data = protocol.encode_frame(msg)
+        w.queue.put_nowait(data)
+        return len(data)
 
     def _encode_tasks_locked(self, w: _RemoteWorker, tasks: list[dict]
                              ) -> tuple[list[dict], set[int], set[str]]:
@@ -369,7 +540,7 @@ class EvalCoordinator:
         frame of seed-relative edit lists (or shm refs on the same host) plus
         whatever spec/segment announcements this worker still needs; legacy
         workers get one full-payload frame per task.  Returns the frames and
-        the announced spec ids / segment names (to confirm after the send)."""
+        the announced spec ids / segment names (confirmed at enqueue)."""
         if not w.compact:
             return ([{"type": protocol.TASK, "id": t["id"], "spec": t["spec"],
                       "genome": t["genome"]} for t in tasks], set(), set())
@@ -403,82 +574,77 @@ class EvalCoordinator:
             frame["shm"] = tuple(need_segs)
         return ([frame], set(need_specs), need_segs)
 
-    def _try_send(self, w: _RemoteWorker, msg: dict) -> Optional[int]:
-        """Send one frame; returns bytes written, or None on a dead socket."""
+    # -- connection handling (loop thread) -------------------------------------------
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
         try:
-            return protocol.send_msg(w.conn, msg, lock=w.send_lock)
-        except OSError:
-            return None
-
-    # -- worker lifecycle ----------------------------------------------------------
-    def _accept_loop(self) -> None:
-        while True:
-            try:
-                conn, _addr = self._listener.accept()
-            except OSError:
-                return                     # listener closed: shutting down
-            threading.Thread(target=self._serve_worker, args=(conn,),
-                             name="eval-coordinator-worker",
-                             daemon=True).start()
-
-    def _serve_worker(self, conn: socket.socket) -> None:
-        try:
-            hello = protocol.recv_msg(conn)
+            hello = await protocol.async_recv_msg(reader)
             if hello.get("type") != protocol.HELLO:
-                conn.close()
+                writer.close()
                 return
         except Exception:
             # anything up to and including garbage bytes from a stray
-            # client (the listener may be bound 0.0.0.0): not a worker
-            conn.close()
+            # client (the listener may be bound 0.0.0.0): not a peer
+            writer.close()
             return
+        if hello.get("role") == "client":
+            await self._serve_client(hello, reader, writer)
+        else:
+            await self._serve_worker(hello, reader, writer)
+
+    async def _sender_loop(self, w: _RemoteWorker) -> None:
+        """Drain one worker's frame queue onto its socket.  ``drain()`` is
+        the backpressure: a slow worker blocks only this coroutine while its
+        queue absorbs bursts.  A send failure is a synchronous death."""
+        try:
+            while True:
+                data = await w.queue.get()
+                if data is None:
+                    return
+                w.writer.write(data)
+                await w.writer.drain()
+        except asyncio.CancelledError:
+            raise
+        except (ConnectionError, OSError):
+            self._worker_died(w, "send failed")
+
+    async def _serve_worker(self, hello: dict, reader: asyncio.StreamReader,
+                            writer: asyncio.StreamWriter) -> None:
         with self._lock:
             if self._closed:
-                conn.close()
+                writer.close()
                 return
             wid = next(self._next_wid)
+            w = _RemoteWorker(wid, hello.get("name") or f"worker{wid}",
+                              int(hello.get("slots", 1)), reader, writer,
+                              host=hello.get("host"),
+                              compact=bool(hello.get("compact")),
+                              wants_shm=bool(hello.get("shm")))
+            w.conn_task = asyncio.current_task()
+            # WELCOME is enqueued before the worker becomes dispatchable, in
+            # the same critical section — queue FIFO order guarantees no
+            # TASK/WARM frame ever beats it.  specs travel as (interned id,
+            # spec) pairs; warm_worker registers the ids so later tasks
+            # frames can address specs by id alone.
             specs_sent = tuple(self._specs)
-        w = _RemoteWorker(wid, hello.get("name") or f"worker{wid}",
-                          int(hello.get("slots", 1)), conn,
-                          host=hello.get("host"),
-                          compact=bool(hello.get("compact")),
-                          wants_shm=bool(hello.get("shm")))
-        # WELCOME goes out BEFORE the worker is dispatchable: once it is in
-        # the registry, other threads (register_spec, _dispatch) may send on
-        # this socket, and a TASK/WARM frame must never beat the WELCOME.
-        # specs travel as (interned id, spec) pairs — warm_worker registers
-        # the ids so later tasks frames can address specs by id alone.
-        if not self._try_send(w, {"type": protocol.WELCOME, "worker_id": wid,
-                                  "heartbeat_s": self.heartbeat_s,
-                                  "specs": specs_sent}):
-            conn.close()
-            return
-        w.specs_known |= {sid for sid, _ in specs_sent}
-        with self._lock:
-            if self._closed:
-                conn.close()
-                return
+            self._enqueue_locked(w, {"type": protocol.WELCOME,
+                                     "worker_id": wid,
+                                     "heartbeat_s": self.heartbeat_s,
+                                     "specs": specs_sent})
+            w.specs_known |= {sid for sid, _ in specs_sent}
             self._workers[wid] = w
             self.peak_workers = max(self.peak_workers, len(self._workers))
             self.events.append({"event": "join", "worker": w.name,
                                 "slots": w.slots,
                                 "workers": len(self._workers)})
-            missed = tuple(p for p in self._specs if p not in specs_sent)
             self._roster.notify_all()
-        if missed:
-            if not self._try_send(w, {"type": protocol.WARM,
-                                      "specs": missed}):
-                self._worker_died(w, "warm failed")
-                return
-            with self._lock:
-                w.specs_known |= {sid for sid, _ in missed}
+        w.sender = self._loop.create_task(self._sender_loop(w))
         self._dispatch()
-        self._reader_loop(w)
-
-    def _reader_loop(self, w: _RemoteWorker) -> None:
         while True:
             try:
-                msg = protocol.recv_msg(w.conn)
+                msg = await protocol.async_recv_msg(w.reader)
+            except asyncio.CancelledError:
+                return
             except (ConnectionError, OSError):
                 self._worker_died(w, "connection lost")
                 return
@@ -499,6 +665,62 @@ class EvalCoordinator:
                     w.segments_known.update(msg.get("segments", ()))
             # heartbeats (and anything unknown) only refresh last_seen
 
+    async def _serve_client(self, hello: dict, reader: asyncio.StreamReader,
+                            writer: asyncio.StreamWriter) -> None:
+        with self._lock:
+            if self._closed or self.on_client_msg is None:
+                writer.close()      # nobody is serving jobs on this fleet
+                return
+            cid = next(self._next_cid)
+            session = ClientSession(cid, hello.get("name") or f"client{cid}",
+                                    self._loop)
+            session.conn_task = asyncio.current_task()
+            self._clients[cid] = session
+        session.queue.put_nowait(protocol.encode_frame(
+            {"type": protocol.WELCOME, "client_id": cid}))
+        session.sender = self._loop.create_task(
+            self._client_sender(session, writer))
+        try:
+            while True:
+                try:
+                    msg = await protocol.async_recv_msg(reader)
+                except asyncio.CancelledError:
+                    return
+                except Exception:
+                    return           # client went away (or spoke garbage)
+                handler = self.on_client_msg
+                if handler is not None:
+                    try:
+                        handler(session, msg)
+                    except Exception:
+                        pass         # a bad job payload must not kill the loop
+        finally:
+            session.alive = False
+            with self._lock:
+                self._clients.pop(cid, None)
+            if session.sender is not None:
+                session.sender.cancel()
+            writer.close()
+            closer = self.on_client_close
+            if closer is not None:
+                try:
+                    closer(session)
+                except Exception:
+                    pass
+
+    async def _client_sender(self, session: ClientSession,
+                             writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                data = await session.queue.get()
+                if data is None:
+                    return
+                writer.write(data)
+                await writer.drain()
+        except (asyncio.CancelledError, ConnectionError, OSError):
+            session.alive = False
+
+    # -- results + death (loop thread) ------------------------------------------------
     def _complete(self, w: _RemoteWorker, msg: dict) -> None:
         if msg.get("shm_failure"):
             # the worker could not attach/read the shared-memory payload —
@@ -510,7 +732,7 @@ class EvalCoordinator:
                 w.shm_ok = False
                 w.segments_known.clear()
                 if task is not None:
-                    self._pending.appendleft(task)
+                    self._tenant_locked(task["tenant"]).queue.appendleft(task)
                     self.tasks_requeued += 1
                     self.events.append({"event": "requeue", "worker": w.name,
                                         "tasks": 1,
@@ -522,6 +744,7 @@ class EvalCoordinator:
             task = w.in_flight.pop(msg["id"], None)
             if task is not None:
                 self.tasks_completed += 1
+                self._tenant_locked(task["tenant"]).completed += 1
         if task is None:
             return        # task was requeued past this worker; stale result
         fut = task["future"]
@@ -552,10 +775,10 @@ class EvalCoordinator:
                 # backend lock (held around coordinator.submit on the
                 # submit path: cancelling here would invert the lock order)
                 to_cancel, orphans = orphans, []
-            # front of the queue, original order: requeued work must not
-            # queue behind speculation submitted after it
+            # front of the tenant's queue, original order: requeued work must
+            # not queue behind speculation submitted after it
             for task in reversed(orphans):
-                self._pending.appendleft(task)
+                self._tenant_locked(task["tenant"]).queue.appendleft(task)
             self.tasks_requeued += len(orphans)
             self.events.append({"event": "leave", "worker": w.name,
                                 "workers": len(self._workers), "why": why})
@@ -565,18 +788,19 @@ class EvalCoordinator:
                                     "workers": len(self._workers)})
         for task in to_cancel:
             task["future"].cancel()
+        if w.sender is not None:
+            w.sender.cancel()
         try:
-            w.conn.shutdown(socket.SHUT_RDWR)
-        except OSError:
+            w.writer.close()
+        except Exception:
             pass
-        w.conn.close()
         self._dispatch()
 
-    def _monitor_loop(self) -> None:
+    async def _monitor(self) -> None:
         """Evict workers that stopped heartbeating (hang/partition — the
         asynchronous half of dead-worker detection)."""
         while True:
-            time.sleep(min(self.heartbeat_s, self.dead_after_s) / 2.0)
+            await asyncio.sleep(min(self.heartbeat_s, self.dead_after_s) / 2.0)
             with self._lock:
                 if self._closed:
                     return
@@ -588,27 +812,68 @@ class EvalCoordinator:
                     w, f"missed heartbeats for {self.dead_after_s:.1f}s")
 
     # -- lifecycle -----------------------------------------------------------------
+    async def _shutdown(self, workers: list[_RemoteWorker],
+                        clients: list[ClientSession]) -> None:
+        for w in workers:
+            try:
+                w.queue.put_nowait(protocol.encode_frame(
+                    {"type": protocol.SHUTDOWN}))
+                w.queue.put_nowait(None)          # sender: flush then exit
+            except Exception:
+                pass
+        for c in clients:
+            c.alive = False
+            c.queue.put_nowait(None)
+        senders = [w.sender for w in workers if w.sender is not None] \
+            + [c.sender for c in clients if c.sender is not None]
+        if senders:
+            await asyncio.wait(senders, timeout=2.0)
+        self._server.close()
+        self._monitor_task.cancel()
+        for w in workers:
+            try:
+                w.writer.close()
+            except Exception:
+                pass
+            if w.conn_task is not None:
+                w.conn_task.cancel()
+        for c in clients:
+            if c.conn_task is not None:
+                c.conn_task.cancel()
+        await self._server.wait_closed()
+
     def close(self) -> None:
         """Idempotent: cancel queued work, tell workers to exit, stop
-        listening.  ``submit`` afterwards raises."""
+        listening, stop the event loop.  ``submit`` afterwards raises."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
             workers = list(self._workers.values())
-            pending = list(self._pending)
-            self._pending.clear()
+            clients = list(self._clients.values())
+            pending = [task for t in self._tenants.values()
+                       for task in t.queue]
+            for t in self._tenants.values():
+                t.queue.clear()
         for task in pending:
             task["future"].cancel()
-        for w in workers:
-            self._try_send(w, {"type": protocol.SHUTDOWN})
+        try:
+            asyncio.run_coroutine_threadsafe(
+                self._shutdown(workers, clients), self._loop).result(5.0)
+        except Exception:
+            pass
+        self._call_soon(self._loop.stop)
+        self._thread.join(timeout=5.0)
         self._listener.close()
-        for w in workers:
-            try:
-                w.conn.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
-            w.conn.close()
+        # readers the loop never got to run again: their in-flight futures
+        # would otherwise dangle forever
+        leftovers: list[dict] = []
+        with self._lock:
+            for w in workers:
+                leftovers.extend(w.in_flight.values())
+                w.in_flight.clear()
+        for task in leftovers:
+            task["future"].cancel()
         if self._shm_store is not None:
             self._shm_store.close()     # unlink the same-host genome arena
 
@@ -678,6 +943,9 @@ class ServiceBackend(ParentCacheBackend):
     sets the owned coordinator's bind address: the loopback default serves
     single-host fleets; bind ``"0.0.0.0:PORT"`` to let workers on OTHER
     hosts register (then give them this host's reachable name/IP).
+    ``tenant`` names the coordinator scheduling tenant this backend's tasks
+    bill against — the frontier runs each job under its own tenant so the
+    weighted-fair scheduler can apportion the shared fleet's slots.
     """
 
     def __init__(self, suite: Union[str, Sequence[BenchConfig], None] = None, *,
@@ -688,10 +956,12 @@ class ServiceBackend(ParentCacheBackend):
                  worker_slots: int = 1,
                  worker_timeout_s: float = 60.0,
                  listen: str = "127.0.0.1:0",
+                 tenant: str = DEFAULT_TENANT,
                  cache: Optional[ScoreCache] = None):
         super().__init__(spec if spec is not None else EvalSpec.resolve(
             suite, check_correctness, rng_seed), cache)
         self._own_coordinator = coordinator is None
+        self.tenant = tenant
         self.coordinator = coordinator if coordinator is not None \
             else EvalCoordinator(*protocol.parse_address(listen))
         self._procs: list[subprocess.Popen] = []
@@ -719,17 +989,26 @@ class ServiceBackend(ParentCacheBackend):
     def _dispatch_eval(self, genome: KernelGenome) -> concurrent.futures.Future:
         """One task on the wire.  ``n_evaluations`` counts these dispatches;
         a dead worker's requeues are coordinator-internal, not re-counted."""
-        return self.coordinator.submit(self.spec, genome)
+        return self.coordinator.submit(self.spec, genome, tenant=self.tenant)
 
     def _dispatch_eval_many(self, genomes: Sequence[KernelGenome]) -> list:
         """A whole deduped batch in one coordinator pass — the tasks travel
         to each assigned worker in a single batched frame instead of
         len(batch) round trips (``map``/``prefetch`` land here via
         ``ParentCacheBackend.submit_many``)."""
-        return self.coordinator.submit_many(self.spec, genomes)
+        return self.coordinator.submit_many(self.spec, genomes,
+                                            tenant=self.tenant)
 
     def _close_resources(self) -> None:
         """A shared coordinator is left running for its other backends."""
         if self._own_coordinator:
             self.coordinator.close()
             stop_local_workers(self._procs)
+
+
+def _service_factory(spec: EvalSpec, cache: Optional[ScoreCache] = None,
+                     **kw) -> ServiceBackend:
+    return ServiceBackend(spec=spec, cache=cache, **kw)
+
+
+register_backend("service", _service_factory, needs_coordinator=True)

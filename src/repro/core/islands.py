@@ -78,10 +78,12 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence, Union
 
+from repro.core.config import (EngineConfig, EvalConfig, MigrationConfig,
+                               engine_config_from_legacy)
 from repro.core.evals import (HLO, MEASURED, BatchScorer, CascadeBackend,
                               ElasticProcessPool, EvalCoordinator, EvalSpec,
-                              make_backend, make_process_executor,
-                              stop_local_workers)
+                              backend_info, make_backend,
+                              make_process_executor, stop_local_workers)
 from repro.core.evals.protocol import parse_address
 from repro.core.knowledge import KnowledgeBase, suggestion_sort_key
 from repro.core.perfmodel import (BenchConfig, PerfModelCalibration,
@@ -459,29 +461,21 @@ class PrefetchAllocator:
 class IslandEvolution:
     """N-island parallel evolution engine (see module docstring)."""
 
-    def __init__(self, n_islands: int = 4,
-                 specs: Optional[Sequence[IslandSpec]] = None,
-                 suite: Optional[Sequence[BenchConfig]] = None,
-                 migration_interval: int = 4,
-                 persist_path: Optional[str] = None,
-                 max_workers: Optional[int] = None,
-                 seed: int = 0,
-                 supervisor_patience: int = 3,
-                 prefetch: int = 0,
-                 backend: str = "thread",
-                 check_correctness: bool = True,
-                 topology: Union[str, MigrationTopology] = "ring",
-                 pipeline: bool = False,
-                 elastic_workers: int = 0,
-                 prefetch_budget: Optional[int] = None,
-                 service_workers: int = 0,
-                 service_listen: str = "127.0.0.1:0",
-                 migrant_policy: str = "best",
-                 migrant_k: int = 3,
-                 cascade_eta: Optional[int] = None,
-                 cascade_slate: int = 8,
-                 cascade_promote: bool = True):
-        """``prefetch`` > 0 speculatively batch-evaluates that many KB
+    def __init__(self, config: Optional[EngineConfig] = None, *,
+                 on_commit: Optional[Callable[[dict], None]] = None,
+                 **legacy):
+        """The supported construction is ``IslandEvolution(config=
+        EngineConfig(...))`` — see :mod:`repro.core.config` for the three
+        dataclasses (engine / evals / migration).  The historical flat
+        kwargs (``backend=``, ``topology=``, ``n_islands=``, ...) keep
+        working through a mapping shim that emits one DeprecationWarning per
+        alias; ``EngineConfig.from_kwargs(**flat)`` is the warning-free flat
+        spelling.  ``on_commit`` is a runtime hook (never persisted): called
+        with every commit-event dict (``{"t", "island", "geomean",
+        "values"}``) as islands commit — the search frontier streams these
+        to job clients.
+
+        ``prefetch`` > 0 speculatively batch-evaluates that many KB
         candidate edits per island step on the scorer executor (cache warming
         only — lineages are identical with or without it, it can only trade
         extra evaluations for wall-clock overlap).
@@ -551,6 +545,35 @@ class IslandEvolution:
         bit-identity gate benchmarks use it to assert lineages match a
         cascade-free run exactly.  Lineage commits are *never* scored above
         rung 0; the cascade only decides where expensive signal is bought."""
+        if config is not None and legacy:
+            raise TypeError(
+                "pass either config=EngineConfig(...) or the legacy flat "
+                f"kwargs, not both (got config and {sorted(legacy)})")
+        if config is None:
+            config = engine_config_from_legacy(legacy)
+        self.config = config
+        self._on_commit = on_commit
+        ev, mig = config.evals, config.migration
+        n_islands, specs, suite = config.n_islands, config.specs, config.suite
+        seed = config.seed
+        migration_interval = mig.interval
+        persist_path = config.persist_path
+        max_workers = config.max_workers
+        supervisor_patience = config.supervisor_patience
+        prefetch = config.prefetch
+        prefetch_budget = config.prefetch_budget
+        pipeline = config.pipeline
+        backend = ev.backend
+        check_correctness = ev.check_correctness
+        elastic_workers = ev.elastic_workers
+        service_workers = ev.service_workers
+        service_listen = ev.service_listen
+        cascade_eta = ev.cascade_eta
+        cascade_slate = ev.cascade_slate
+        cascade_promote = ev.cascade_promote
+        topology = mig.topology
+        migrant_policy = mig.migrant_policy
+        migrant_k = mig.migrant_k
         self.specs = list(specs) if specs is not None else \
             default_specs(n_islands, seed=seed)
         if not self.specs:
@@ -624,7 +647,11 @@ class IslandEvolution:
             for key, espec in eval_specs.items()} if cascade_eta else {}
         warm_specs = tuple(eval_specs.values()) + tuple(
             s for rungs in rung_specs.values() for s in rungs)
-        if backend == "process":
+        # which shared resource this backend wants injected is registry
+        # metadata, not a name branch — raises the stable 'unknown eval
+        # backend' ValueError for unregistered names
+        info = backend_info(backend)
+        if info.executor == "process":
             # elastic: capacity follows queue depth (the pipelined proposal
             # bursts); fixed: the PR 2 warm pool sized once from cpu_count
             self._process_pool = (
@@ -632,23 +659,32 @@ class IslandEvolution:
                 if elastic_workers else
                 make_process_executor(warm_specs))
         # cross-host scoring: ONE coordinator (worker fleet) serves every
-        # suite's backend — tasks carry their spec, workers warm per spec
-        self.service_coordinator = None
+        # suite's backend — tasks carry their spec, workers warm per spec.
+        # An injected coordinator (EvalConfig.coordinator — how the search
+        # frontier runs many engines against one fleet) is shared, never
+        # owned: close() leaves it running.
+        self.service_coordinator = ev.coordinator
+        self._own_coordinator = False
         self._service_procs: list = []
-        if backend == "service":
+        if info.needs_coordinator and self.service_coordinator is None:
             self.service_coordinator = EvalCoordinator(
                 *parse_address(service_listen))
+            self._own_coordinator = True
             if service_workers:
                 # on timeout this closes the coordinator + stops the procs
                 self._service_procs = self.service_coordinator.spawn_workers(
                     service_workers)
         self.cascades: dict[str, CascadeBackend] = {}
         for key, espec in eval_specs.items():
-            extra = ({"executor": self._process_pool}
-                     if backend == "process" else
-                     {"executor": scorer_pool} if backend == "thread" else
-                     {"coordinator": self.service_coordinator}
-                     if backend == "service" else {})
+            extra: dict = {}
+            if info.executor == "process":
+                extra["executor"] = self._process_pool
+            elif info.executor == "thread":
+                extra["executor"] = scorer_pool
+            if info.needs_coordinator:
+                extra["coordinator"] = self.service_coordinator
+                if ev.tenant:
+                    extra["tenant"] = ev.tenant
             sc = make_backend(backend, suite=espec, **extra)
             if backend == "inline":
                 sc.warm()            # lazy proxy build must not race islands
@@ -699,13 +735,21 @@ class IslandEvolution:
     # -- event log (bench instrumentation) ---------------------------------------
     def _record_commit(self, island: Island) -> None:
         b = island.lineage.best()
+        event = {
+            "t": 0.0 if self._t0 is None else time.time() - self._t0,
+            "island": island.name,
+            "geomean": island.best_geomean(),
+            "values": tuple(b.values) if b else (),
+        }
         with self._events_lock:
-            self.commit_events.append({
-                "t": 0.0 if self._t0 is None else time.time() - self._t0,
-                "island": island.name,
-                "geomean": island.best_geomean(),
-                "values": tuple(b.values) if b else (),
-            })
+            self.commit_events.append(event)
+        if self._on_commit is not None:
+            # runtime observer (the frontier's event stream); an observer
+            # failure must never poison the island's stepping thread
+            try:
+                self._on_commit(dict(event))
+            except Exception:
+                pass
 
     # -- aggregate metrics --------------------------------------------------------
     def best(self) -> tuple[Optional[str], Optional[Commit]]:
@@ -949,6 +993,10 @@ class IslandEvolution:
         payload = {
             "format": ARCHIPELAGO_FORMAT,
             "seed": self.seed,
+            # the construction config rides along (runtime-only fields
+            # excluded), so resume(path) can rebuild the engine from the
+            # payload alone — kwarg-path saves resume under the config path
+            "config": self.config.to_payload(),
             "migration_interval": self.migration_interval,
             "migrations_accepted": self.migrations_accepted,
             "topology": {"name": getattr(self.topology, "name", "custom"),
@@ -1038,9 +1086,29 @@ class IslandEvolution:
             self.cascade_log = list(cascade["log"])
 
     @classmethod
-    def resume(cls, persist_path: str, **kw) -> "IslandEvolution":
-        """Rebuild an engine and pick up exactly where a killed run stopped."""
-        engine = cls(persist_path=persist_path, **kw)
+    def resume(cls, persist_path: str,
+               config: Optional[EngineConfig] = None,
+               **kw) -> "IslandEvolution":
+        """Rebuild an engine and pick up exactly where a killed run stopped.
+
+        With neither ``config`` nor kwargs, the engine is rebuilt from the
+        construction config embedded in the persisted payload (pre-config
+        payloads fall back to defaults); an explicit ``config`` or legacy
+        kwargs override the persisted one."""
+        if config is None and not kw and os.path.exists(persist_path):
+            try:
+                with open(persist_path) as f:
+                    payload = json.load(f)
+                if payload.get("format") == ARCHIPELAGO_FORMAT \
+                        and "config" in payload:
+                    config = EngineConfig.from_payload(payload["config"])
+            except (OSError, ValueError, KeyError, TypeError):
+                config = None       # torn/pre-config file: default engine
+        if config is not None:
+            config.persist_path = persist_path
+            engine = cls(config=config)
+        else:
+            engine = cls(persist_path=persist_path, **kw)
         if os.path.exists(persist_path):
             engine.load_state(persist_path)
         return engine
@@ -1090,8 +1158,10 @@ class IslandEvolution:
         self._scorer_pool.shutdown(wait=True, cancel_futures=True)
         if self._process_pool is not None:
             self._process_pool.shutdown(wait=True, cancel_futures=True)
-        if self.service_coordinator is not None:
-            # backends share (and so never close) the engine's coordinator
+        if self.service_coordinator is not None and self._own_coordinator:
+            # backends share (and so never close) the engine's coordinator;
+            # an INJECTED coordinator (EvalConfig.coordinator) belongs to the
+            # frontier and outlives every job engine
             self.service_coordinator.close()
             stop_local_workers(self._service_procs)
 

@@ -1,0 +1,147 @@
+"""The config-object engine API: EngineConfig/EvalConfig/MigrationConfig
+construction vs the legacy flat kwargs (bit-identical lineages across
+backends), once-per-alias deprecation warnings, payload round-trip, and
+kwarg-path persistence resuming under the config path."""
+import json
+import warnings
+
+import pytest
+
+from repro.core import (EngineConfig, EvalConfig, IslandEvolution,
+                        IslandSpec, MigrationConfig, seed_genome)
+from repro.core.config import (engine_config_from_legacy,
+                               reset_deprecation_warnings)
+from repro.core.frontier import lineage_fingerprint
+from repro.core.perfmodel import BenchConfig
+
+FAST_SUITE = [BenchConfig("c4k", 8, 16, 16, 4096, causal=True),
+              BenchConfig("n4k", 8, 16, 16, 4096, causal=False)]
+
+FLAT = dict(n_islands=2, suite=FAST_SUITE, migration_interval=2, seed=5,
+            check_correctness=False)
+
+
+def _run_fingerprint(engine, steps=4):
+    try:
+        engine.run(max_steps=steps)
+        return lineage_fingerprint(engine)
+    finally:
+        engine.close()
+
+
+# -- construction equivalence --------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,extra", [
+    ("thread", {}),
+    ("process", {}),
+    ("service", {"service_workers": 1}),
+])
+def test_legacy_kwargs_and_config_object_bit_identical(backend, extra):
+    """The same search through both constructors, on every executor family:
+    the config redesign must not perturb a single commit."""
+    legacy = IslandEvolution(backend=backend, **extra, **FLAT)
+    cfg = EngineConfig(
+        n_islands=2, suite=FAST_SUITE, seed=5,
+        evals=EvalConfig(backend=backend, check_correctness=False,
+                         service_workers=extra.get("service_workers", 0)),
+        migration=MigrationConfig(interval=2))
+    configured = IslandEvolution(config=cfg)
+    assert _run_fingerprint(legacy) == _run_fingerprint(configured)
+
+
+def test_from_kwargs_is_the_warning_free_flat_spelling():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = EngineConfig.from_kwargs(backend="thread", topology="star",
+                                       n_islands=3, migrant_k=2,
+                                       cascade_eta=3)
+    assert cfg.evals.backend == "thread"
+    assert cfg.migration.topology == "star"
+    assert cfg.migration.migrant_k == 2
+    assert cfg.n_islands == 3
+    assert cfg.evals.cascade_eta == 3
+
+
+def test_config_and_legacy_kwargs_are_mutually_exclusive():
+    with pytest.raises(TypeError, match="not both"):
+        IslandEvolution(config=EngineConfig(), n_islands=2)
+
+
+def test_unknown_legacy_kwarg_raises():
+    with pytest.raises(TypeError, match="unknown IslandEvolution arguments"):
+        engine_config_from_legacy({"n_isles": 2})
+
+
+# -- deprecation warnings ------------------------------------------------------
+
+
+def test_deprecation_fires_exactly_once_per_alias():
+    reset_deprecation_warnings()
+    with pytest.deprecated_call(match="n_islands"):
+        engine_config_from_legacy({"n_islands": 2})
+    # the same alias again: silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        engine_config_from_legacy({"n_islands": 3})
+    # a different alias still fires, and names the config destination
+    with pytest.deprecated_call(match="EngineConfig.migration.interval"):
+        engine_config_from_legacy({"migration_interval": 8})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        engine_config_from_legacy({"migration_interval": 2, "n_islands": 4})
+
+
+# -- payload round-trip --------------------------------------------------------
+
+
+def test_config_payload_roundtrip_is_json_safe():
+    cfg = EngineConfig(
+        n_islands=2, suite=FAST_SUITE, seed=9, prefetch=2, pipeline=True,
+        specs=[IslandSpec(name="a", operator="avo",
+                          init_genome=seed_genome().with_(block_q=256)),
+               IslandSpec(name="b", operator="single-shot")],
+        evals=EvalConfig(backend="process", check_correctness=False,
+                         cascade_eta=3),
+        migration=MigrationConfig(topology="star", interval=3,
+                                  migrant_policy="top-k", migrant_k=2))
+    back = EngineConfig.from_payload(json.loads(json.dumps(cfg.to_payload())))
+    assert back.n_islands == 2 and back.seed == 9
+    assert back.pipeline is True and back.prefetch == 2
+    assert back.suite == FAST_SUITE
+    assert back.evals.backend == "process"
+    assert back.evals.check_correctness is False
+    assert back.evals.cascade_eta == 3
+    assert back.migration.topology == "star"
+    assert back.migration.migrant_policy == "top-k"
+    assert [s.name for s in back.specs] == ["a", "b"]
+    assert back.specs[0].init_genome == seed_genome().with_(block_q=256)
+    assert back.specs[1].init_genome is None
+
+
+def test_runtime_only_fields_never_persist():
+    cfg = EngineConfig(evals=EvalConfig(coordinator=object(), tenant="job-1"))
+    payload = cfg.to_payload()
+    assert "coordinator" not in payload["evals"]
+    assert "tenant" not in payload["evals"]
+    json.dumps(payload)                        # and the rest is JSON-safe
+
+
+# -- kwarg-path persistence resumes under the config path ----------------------
+
+
+def test_kwarg_persisted_run_resumes_under_config_path(tmp_path):
+    path = str(tmp_path / "arch.json")
+    engine = IslandEvolution(backend="thread", persist_path=path, **FLAT)
+    engine.run(max_steps=4)
+    fp = lineage_fingerprint(engine)
+    engine.close()
+
+    resumed = IslandEvolution.resume(path)     # no kwargs: config from payload
+    try:
+        assert resumed.config.evals.backend == "thread"
+        assert resumed.config.migration.interval == 2
+        assert resumed.config.suite == FAST_SUITE
+        assert lineage_fingerprint(resumed) == fp
+    finally:
+        resumed.close()

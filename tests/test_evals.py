@@ -395,19 +395,17 @@ def test_process_backend_bit_identical_to_inline():
     assert not want[-1].correct                  # the bf16 trap really fired
 
 
-# -- the deprecated compat shim ------------------------------------------------
+# -- the removed compat shim ---------------------------------------------------
 
 
-def test_scoring_shim_warns_and_still_reexports():
-    """repro.core.scoring is a deprecated alias for repro.core.evals: it must
-    say so on import and keep the stable names pointing at the real ones."""
+def test_scoring_shim_is_gone():
+    """repro.core.scoring (deprecated in PR 5) is deleted; the supported
+    import path is repro.core.evals."""
     import importlib
     import sys
     sys.modules.pop("repro.core.scoring", None)
-    with pytest.deprecated_call(match="repro.core.scoring is deprecated"):
-        shim = importlib.import_module("repro.core.scoring")
-    assert shim.Scorer is Scorer
-    assert shim.make_backend is make_backend
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.core.scoring")
 
 
 # -- scenario registry ---------------------------------------------------------

@@ -1,0 +1,249 @@
+"""The evolution-as-a-service frontier: job lifecycle (accepted -> started ->
+commits -> done), determinism against a direct engine run, multi-tenant
+weighted-fair slot grants on one shared fleet, budget/deadline/cancel
+stopping, and the wire client.  The heavyweight gates (apportionment under
+load, mid-job worker SIGKILL invariance) live in benchmarks/bench_islands.py
+--frontier-smoke; these tests pin the functional contracts."""
+import socket
+
+import pytest
+
+from repro.core import (EngineConfig, EvalConfig, FrontierClient,
+                        IslandEvolution, MigrationConfig, SearchFrontier,
+                        SearchJob, lineage_fingerprint, seed_genome)
+from repro.core.evals import EvalCoordinator, EvalSpec, protocol
+from repro.core.perfmodel import (BenchConfig, register_suite,
+                                  unregister_suite)
+from repro.core.search_space import KernelGenome
+
+FAST_SUITE = [BenchConfig("c4k", 8, 16, 16, 4096, causal=True),
+              BenchConfig("n4k", 8, 16, 16, 4096, causal=False)]
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fast_suite():
+    register_suite("frontier-fast", lambda: FAST_SUITE, overwrite=True)
+    yield
+    unregister_suite("frontier-fast")
+
+
+def _fast_job(**kw):
+    base = dict(suite="frontier-fast", steps=4, migration_interval=2,
+                check_correctness=False, n_islands=2)
+    base.update(kw)
+    return SearchJob(**base)
+
+
+def _terminal(frontier, job_id):
+    events = frontier.job_events(job_id)
+    assert events, "job emitted no events"
+    return events[-1]
+
+
+# -- determinism ------------------------------------------------------------------
+
+
+def test_frontier_job_bit_identical_to_direct_service_engine():
+    """The headline gate: the same seed through the frontier and through
+    IslandEvolution(backend='service') directly walks the same lineage."""
+    frontier = SearchFrontier(workers=2)
+    try:
+        job_id = frontier.submit(_fast_job(seed=3))
+        assert frontier.wait(job_id, timeout=300) == "done"
+        done = _terminal(frontier, job_id)
+        assert done.kind == "done"
+        via_frontier = done.data["fingerprint"]
+    finally:
+        frontier.close()
+
+    direct = IslandEvolution(config=EngineConfig(
+        n_islands=2, suite=FAST_SUITE, seed=3,
+        evals=EvalConfig(backend="service", service_workers=2,
+                         check_correctness=False),
+        migration=MigrationConfig(interval=2)))
+    try:
+        direct.run(max_steps=4)
+        assert via_frontier == lineage_fingerprint(direct)
+    finally:
+        direct.close()
+
+
+def test_concurrent_unequal_priority_jobs_share_one_fleet():
+    """Two jobs with 3:1 priority on a 2-slot fleet: both complete, both are
+    granted slots under their own tenant, and — because the scorer is a
+    deterministic function of the genome — contention changes pacing only,
+    never the lineage: identical jobs end bit-identical."""
+    frontier = SearchFrontier(workers=1, worker_slots=2)
+    try:
+        hi = frontier.submit(_fast_job(seed=7, priority=3.0, budget=500))
+        lo = frontier.submit(_fast_job(seed=7, priority=1.0, budget=500))
+        assert frontier.wait(hi, timeout=300) == "done"
+        assert frontier.wait(lo, timeout=300) == "done"
+        assert _terminal(frontier, hi).data["fingerprint"] == \
+            _terminal(frontier, lo).data["fingerprint"]
+        st = frontier.stats()
+        tenants = st["coordinator"]["tenants"]
+        for jid in (hi, lo):
+            assert tenants[jid]["granted"] > 0
+            assert tenants[jid]["completed"] == tenants[jid]["granted"]
+            assert st["jobs"][jid]["spent"] > 0
+    finally:
+        frontier.close()
+
+
+# -- stopping: budget, deadline, cancel ---------------------------------------------
+
+
+def test_budget_stops_job_at_chunk_boundary():
+    frontier = SearchFrontier(workers=1)
+    try:
+        job_id = frontier.submit(_fast_job(steps=50, budget=1))
+        assert frontier.wait(job_id, timeout=300) == "done"
+        done = _terminal(frontier, job_id)
+        assert done.data["spent"] >= 1
+        assert done.data["steps"] < 50      # stopped long before the cap
+    finally:
+        frontier.close()
+
+
+def test_deadline_cancels_job():
+    frontier = SearchFrontier(workers=1)
+    try:
+        job_id = frontier.submit(_fast_job(steps=50, deadline_s=0.0))
+        assert frontier.wait(job_id, timeout=300) == "cancelled"
+        assert any(ev.data.get("deadline_exceeded")
+                   for ev in frontier.job_events(job_id)
+                   if ev.kind == "progress")
+    finally:
+        frontier.close()
+
+
+def test_cancel_stops_running_job():
+    frontier = SearchFrontier(workers=1)
+    try:
+        job_id = frontier.submit(_fast_job(steps=500, migration_interval=1))
+        assert frontier.cancel(job_id)
+        assert frontier.wait(job_id, timeout=300) == "cancelled"
+        assert not frontier.cancel("job-9999")     # unknown id
+    finally:
+        frontier.close()
+
+
+def test_coordinator_incapable_backend_fails_the_job_only():
+    """A job naming a registry backend that cannot score against a shared
+    fleet fails cleanly — the service itself keeps running."""
+    frontier = SearchFrontier(workers=0)
+    try:
+        job_id = frontier.submit(_fast_job(backend="thread"))
+        assert frontier.wait(job_id, timeout=60) == "failed"
+        assert "cannot score" in _terminal(frontier, job_id).data["error"]
+        assert frontier.submit(_fast_job(backend="thread"))  # still serving
+    finally:
+        frontier.close()
+
+
+def test_submit_after_close_raises():
+    frontier = SearchFrontier(workers=0)
+    frontier.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        frontier.submit(_fast_job())
+    frontier.close()                                  # idempotent
+
+
+# -- the wire client ----------------------------------------------------------------
+
+
+def test_client_submit_stream_cancel_over_the_wire():
+    frontier = SearchFrontier(workers=1)
+    try:
+        with FrontierClient(frontier.address) as client:
+            # a full stream, in lifecycle order
+            job_id = client.submit(_fast_job(seed=1, steps=2))
+            kinds = [ev.kind for ev in client.stream(job_id)]
+            assert kinds[0] == "accepted" and kinds[1] == "started"
+            assert "commit" in kinds and "progress" in kinds
+            assert kinds[-1] == "done"
+            done = frontier.job_events(job_id)[-1]
+            assert done.data["spent"] > 0 and done.data["fingerprint"]
+
+            # a job that dies in its runner streams a terminal 'failed'
+            bad = client.submit(_fast_job(backend="thread"))
+            ev = client.wait(bad)
+            assert ev.kind == "failed" and "cannot score" in ev.data["error"]
+
+            # cancellation round-trips the wire
+            slow = client.submit(_fast_job(steps=500, migration_interval=1))
+            client.cancel(slow)
+            assert client.wait(slow).kind == "cancelled"
+    finally:
+        frontier.close()
+
+
+def test_client_hello_refused_when_nobody_serves_jobs():
+    """A bare coordinator (no frontier installed) closes client sessions at
+    the door instead of letting jobs queue into a void."""
+    coord = EvalCoordinator()
+    sock = socket.create_connection(coord.address)
+    try:
+        protocol.send_msg(sock, {"type": protocol.HELLO, "role": "client",
+                                 "name": "lost"})
+        with pytest.raises(ConnectionError):
+            protocol.recv_msg(sock)
+    finally:
+        sock.close()
+        coord.close()
+
+
+# -- the scheduler itself -----------------------------------------------------------
+
+
+def test_weighted_fair_grants_follow_granted_over_weight():
+    """Drive the coordinator's scheduler directly with a raw fake worker:
+    tenants A (weight 3) and B (weight 1) each queue 8 tasks onto one 1-slot
+    worker, so every grant is observable as its own tasks frame.  The grant
+    sequence must follow argmin(granted/weight) exactly, and the contended-
+    grant counters must record the 3:1 apportionment."""
+    spec = EvalSpec.resolve(FAST_SUITE, check_correctness=False)
+    ga = seed_genome().with_(block_q=64)
+    gb = seed_genome().with_(block_q=256)
+    coord = EvalCoordinator()
+    sock = None
+    try:
+        coord.set_tenant_weight("A", 3.0)
+        coord.set_tenant_weight("B", 1.0)
+        futs = coord.submit_many(spec, [ga] * 8, tenant="A")
+        futs += coord.submit_many(spec, [gb] * 8, tenant="B")
+
+        sock = socket.create_connection(coord.address)
+        protocol.send_msg(sock, {"type": protocol.HELLO, "name": "fake",
+                                 "slots": 1, "compact": True,
+                                 "host": "elsewhere"})
+        assert protocol.recv_msg(sock)["type"] == protocol.WELCOME
+
+        order = []
+        for _ in range(16):
+            msg = protocol.recv_msg(sock)
+            while msg["type"] != protocol.TASKS:   # skip warm announcements
+                msg = protocol.recv_msg(sock)
+            assert len(msg["tasks"]) == 1          # one slot: one grant each
+            tid, payload = msg["tasks"][0]
+            genome = KernelGenome.from_edits(payload[1])
+            order.append("A" if genome == ga else "B")
+            protocol.send_msg(sock, {"type": protocol.RESULT, "id": tid,
+                                     "ok": True, "value": genome.key()})
+        assert [f.result(10) for f in futs]
+
+        # argmin(granted/weight), tenant id breaking ties: A pulls 3 grants
+        # per B grant while both queues are non-empty, then B drains alone
+        assert order == ["A", "B", "A", "A", "A", "B", "A", "A",
+                         "A", "B", "A", "B", "B", "B", "B", "B"]
+        tenants = coord.stats()["tenants"]
+        assert tenants["A"]["granted"] == 8
+        assert tenants["A"]["granted_contended"] == 8
+        assert tenants["B"]["granted"] == 8
+        assert tenants["B"]["granted_contended"] == 3
+        assert coord.stats()["granted_contended"] == 11
+    finally:
+        if sock is not None:
+            sock.close()
+        coord.close()

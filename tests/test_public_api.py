@@ -1,0 +1,144 @@
+"""Public-API snapshot: the exported surface of repro.core and
+repro.core.evals, pinned to checked-in lists.  A name appearing or vanishing
+from __all__ is an API change and must be made deliberately — update the
+snapshot in the same commit that changes the surface, and say so in the
+changelog line."""
+import repro.core
+import repro.core.evals
+
+CORE_EVALS_SURFACE = [
+    "BackendInfo",
+    "BatchScorer",
+    "CORRECTNESS_TOL",
+    "CascadeBackend",
+    "ClientSession",
+    "ElasticProcessPool",
+    "EvalBackend",
+    "EvalCoordinator",
+    "EvalSpec",
+    "FIDELITIES",
+    "HLO",
+    "InlineBackend",
+    "MEASURED",
+    "PERFMODEL",
+    "ProcessBackend",
+    "ScoreCache",
+    "ScoreVector",
+    "Scorer",
+    "ServiceBackend",
+    "ThreadBackend",
+    "backend_info",
+    "default_worker_count",
+    "evaluate_genome",
+    "make_backend",
+    "make_process_executor",
+    "register_backend",
+    "registered_backends",
+    "spawn_local_workers",
+    "stop_local_workers",
+    "unregister_backend",
+]
+
+CORE_SURFACE = [
+    "AdaptiveTopology",
+    "AgentPolicy",
+    "AgenticVariationOperator",
+    "AllToAllTopology",
+    "Archipelago",
+    "BatchScorer",
+    "BenchConfig",
+    "Commit",
+    "ContinuousEvolution",
+    "Directive",
+    "ElasticProcessPool",
+    "EngineConfig",
+    "EvalBackend",
+    "EvalConfig",
+    "EvalCoordinator",
+    "EvalSpec",
+    "EvolutionReport",
+    "ExplicitTopology",
+    "FrontierClient",
+    "InlineBackend",
+    "Island",
+    "IslandEvolution",
+    "IslandReport",
+    "IslandSpec",
+    "JobEvent",
+    "KernelGenome",
+    "KnowledgeBase",
+    "Lineage",
+    "MigrationConfig",
+    "MigrationStats",
+    "MigrationTopology",
+    "PlanExecuteSummarize",
+    "PrefetchAllocator",
+    "ProcessBackend",
+    "RefutedMemory",
+    "RingTopology",
+    "ScoreCache",
+    "ScoreVector",
+    "Scorer",
+    "ScriptedAgent",
+    "SearchFrontier",
+    "SearchJob",
+    "ServiceBackend",
+    "SingleShotMutation",
+    "StarTopology",
+    "Supervisor",
+    "TOPOLOGIES",
+    "ThreadBackend",
+    "Toolbelt",
+    "VariationResult",
+    "backend_info",
+    "decode_suite",
+    "default_specs",
+    "default_worker_count",
+    "engine_config_from_legacy",
+    "estimate",
+    "evaluate_genome",
+    "expert_reference",
+    "fa_reference",
+    "gqa_suite",
+    "lineage_fingerprint",
+    "make_backend",
+    "make_operator",
+    "make_topology",
+    "mha_suite",
+    "register_backend",
+    "register_suite",
+    "registered_backends",
+    "registered_suites",
+    "scenario_specs",
+    "seed_genome",
+    "spawn_local_workers",
+    "stop_local_workers",
+    "suite_by_name",
+    "topology_names",
+    "unregister_backend",
+    "unregister_suite",
+]
+
+
+def _diff(actual, snapshot):
+    actual, snapshot = set(actual), set(snapshot)
+    return (f"added: {sorted(actual - snapshot)}; "
+            f"removed: {sorted(snapshot - actual)}")
+
+
+def test_core_evals_surface_matches_snapshot():
+    actual = sorted(repro.core.evals.__all__)
+    assert actual == sorted(CORE_EVALS_SURFACE), \
+        _diff(actual, CORE_EVALS_SURFACE)
+
+
+def test_core_surface_matches_snapshot():
+    actual = sorted(repro.core.__all__)
+    assert actual == sorted(CORE_SURFACE), _diff(actual, CORE_SURFACE)
+
+
+def test_all_names_are_importable():
+    for name in repro.core.__all__:
+        assert getattr(repro.core, name, None) is not None, name
+    for name in repro.core.evals.__all__:
+        assert getattr(repro.core.evals, name, None) is not None, name
