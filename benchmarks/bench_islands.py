@@ -919,6 +919,126 @@ def frontier_smoke(args) -> int:
     return 0 if ok else 1
 
 
+def slate_smoke(args) -> int:
+    """The CI ``slate-smoke`` gate for columnar slate scoring.  Three gates,
+    all deterministic in outcome (the speedup is wall-clock but with ~10x
+    headroom over its threshold):
+
+      vectorize  ``estimate_batch`` over a 64-genome slate x the MHA suite
+                 is bit-identical to the scalar ``estimate`` loop and
+                 >= 3x faster;
+      memo       a micro-variant slate (block sweeps whose proxy-clamped
+                 blocks collide) pays the interpreter once per structure —
+                 correctness-memo hit rate > 50%;
+      identity   engine lineages are bit-identical with the batch path off
+                 vs on, across inline / thread / process / service backends.
+
+    Writes results/bench/slate.json."""
+    import itertools
+
+    from repro.core import Archipelago, seed_genome
+    from repro.core.evals import set_batch_scoring
+    from repro.core.evals.scorer import _CHECK_MEMO, correctness_memo_stats
+    from repro.core.perfmodel import estimate, estimate_batch
+    from repro.core.search_space import KernelGenome
+
+    suite = suite_by_name("mha")
+
+    # -- gate 1: vectorized rung-0 >= 3x the scalar walk, bit-identical -----
+    slate = [KernelGenome(bq, bk, rm, mm, dm, kg)
+             for bq, bk, rm, mm, dm, kg in itertools.islice(
+                 itertools.product((64, 128, 256, 512, 1024, 2048),
+                                   (128, 256, 512, 1024),
+                                   ("branchless", "branched"),
+                                   ("dense", "block_skip"),
+                                   ("deferred", "eager"), (True, False)),
+                 64)]
+    print(f"== slate smoke: {len(slate)}-genome slate x "
+          f"{len(suite)}-config MHA suite ==")
+    scalar_s = batch_s = float("inf")
+    for _ in range(3):                      # best-of-3 on a shared runner
+        t0 = time.perf_counter()
+        scalar = [[estimate(g, c) for c in suite] for g in slate]
+        scalar_s = min(scalar_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        be = estimate_batch(slate, suite)
+        batch_s = min(batch_s, time.perf_counter() - t0)
+    identical = all(be.profile(gi, ci) == scalar[gi][ci]
+                    for gi in range(len(slate)) for ci in range(len(suite)))
+    speedup = scalar_s / batch_s if batch_s else float("inf")
+    vec_ok = identical and speedup >= 3.0
+    print(f"rung-0 model: scalar {scalar_s * 1e3:.1f} ms, columnar "
+          f"{batch_s * 1e3:.1f} ms -> {speedup:.1f}x (>= 3x: "
+          f"{'OK' if speedup >= 3.0 else 'FAILED'}); bit-identical "
+          f"{'OK' if identical else 'MISMATCH'}")
+
+    # -- gate 2: memo hit rate on a micro-variant slate ---------------------
+    # block_q 64/128/256 and block_k 128/256 all clamp to the same proxy
+    # blocks: 6 genomes per div_mode share one kernel structure each
+    g0 = seed_genome()
+    micro = [g0.with_(block_q=bq, block_k=bk, div_mode=dm)
+             for dm in ("eager", "deferred")
+             for bq in (64, 128, 256) for bk in (128, 256)]
+    _CHECK_MEMO.clear()
+    sc = Scorer(suite=[c for c in suite if c.seq_len == 4096])
+    t0 = time.perf_counter()
+    sc.score_batch(micro)
+    memo_wall = time.perf_counter() - t0
+    ms = correctness_memo_stats()
+    hit_rate = ms["hits"] / max(1, ms["hits"] + ms["misses"])
+    memo_ok = hit_rate > 0.5
+    print(f"correctness memo: {len(micro)}-genome micro-variant slate -> "
+          f"{ms['misses']} interpreter runs, {ms['hits']} memo hits "
+          f"(rate {hit_rate:.2f} > 0.5: {'OK' if memo_ok else 'FAILED'}; "
+          f"{memo_wall:.2f}s wall)")
+    _CHECK_MEMO.clear()
+
+    # -- gate 3: batch path off/on lineage identity per backend -------------
+    steps = min(args.steps, 6)
+    eng_suite = [c for c in suite if c.seq_len == 4096]
+
+    def fingerprint(backend, enabled):
+        set_batch_scoring(enabled)
+        kw = {"service_workers": 2} if backend == "service" else {}
+        eng = Archipelago(n_islands=2, suite=eng_suite, migration_interval=2,
+                          seed=args.seed, backend=backend,
+                          check_correctness=False, **kw)
+        try:
+            eng.run(max_steps=steps)
+            return lineage_fingerprint(eng)
+        finally:
+            eng.close()
+
+    backends = ("inline", "thread", "process", "service")
+    identity = {}
+    try:
+        for backend in backends:
+            identity[backend] = (fingerprint(backend, False)
+                                 == fingerprint(backend, True))
+            print(f"lineage off == on [{backend}]: "
+                  f"{'OK' if identity[backend] else 'MISMATCH'}")
+    finally:
+        set_batch_scoring(True)
+    identity_ok = all(identity.values())
+
+    ok = vec_ok and memo_ok and identity_ok
+    emit_json("slate", {
+        "slate_size": len(slate), "suite_configs": len(suite),
+        "scalar_s": scalar_s, "batch_s": batch_s, "speedup": speedup,
+        "memo": {"slate": len(micro), "hits": ms["hits"],
+                 "misses": ms["misses"], "hit_rate": hit_rate,
+                 "wall_s": memo_wall},
+        "engine_identity": identity, "engine_steps": steps,
+        "gates": {"vectorized_3x": speedup >= 3.0,
+                  "bit_identical": identical,
+                  "memo_hit_rate": memo_ok,
+                  "batch_off_on_lineage_identity": identity_ok,
+                  "passed": ok},
+    })
+    print("slate smoke: " + ("PASSED" if ok else "FAILED"))
+    return 0 if ok else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=40,
@@ -971,6 +1091,14 @@ def main(argv=None):
                          "kill lineage invariance, and frontier-vs-direct "
                          "bit-identity; writes results/bench/frontier.json "
                          "(the CI frontier-smoke step)")
+    ap.add_argument("--slate-smoke", action="store_true",
+                    help="run ONLY the columnar slate-scoring gates: "
+                         "vectorized rung-0 >= 3x the scalar loop (bit-"
+                         "identical), correctness-memo hit rate > 50% on a "
+                         "micro-variant slate, and batch-path off/on lineage "
+                         "identity across inline/thread/process/service; "
+                         "writes results/bench/slate.json (the CI "
+                         "slate-smoke step)")
     ap.add_argument("--gate", choices=("all", "deterministic"), default="all",
                     help="what the exit code enforces: 'deterministic' gates "
                          "resume identity, exact resumed-vs-uninterrupted "
@@ -987,6 +1115,8 @@ def main(argv=None):
         return cold_batch_smoke(args)
     if args.frontier_smoke:
         return frontier_smoke(args)
+    if args.slate_smoke:
+        return slate_smoke(args)
     topologies = [t.strip() for t in args.topologies.split(",") if t.strip()]
     unknown = [t for t in topologies if t not in topology_names()]
     if unknown:

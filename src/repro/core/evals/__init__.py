@@ -47,9 +47,12 @@ from repro.core.evals.service import (ClientSession, EvalCoordinator,
 from repro.core.evals.vector import ScoreVector
 # importable for tests/internal callers, deliberately NOT in __all__ —
 # wire-level helpers are implementation detail, not supported surface
+from repro.core.evals.scorer import (batch_scoring_enabled,  # noqa: F401
+                                     correctness_memo_stats,
+                                     set_batch_scoring)
 from repro.core.evals.worker import (EvalSpec, evaluate_frame,  # noqa: F401
-                                     evaluate_genome, intern_spec,
-                                     warm_worker)
+                                     evaluate_frame_many, evaluate_genome,
+                                     intern_spec, warm_worker)
 
 __all__ = [
     "BackendInfo", "BatchScorer", "CORRECTNESS_TOL", "CascadeBackend",

@@ -35,10 +35,12 @@ from typing import (Callable, Optional, Protocol, Sequence, Union,
                     runtime_checkable)
 
 from repro.core.evals.cache import PERFMODEL, ScoreCache, fidelity_key
-from repro.core.evals.scorer import InlineBackend, Scorer
+from repro.core.evals.scorer import (InlineBackend, Scorer,
+                                     batch_scoring_enabled)
 from repro.core.evals.vector import ScoreVector
 from repro.core.evals.worker import (EvalSpec, _prestart_noop, evaluate_frame,
-                                     evaluate_genome, intern_spec, warm_worker)
+                                     evaluate_frame_many, evaluate_genome,
+                                     intern_spec, warm_worker)
 from repro.core.perfmodel import BenchConfig
 from repro.core.search_space import KernelGenome
 
@@ -258,6 +260,117 @@ class BatchScorer:
         with self._lock:
             self._futures.pop(key, None)
 
+    def submit_many(self, genomes: Sequence[KernelGenome]) -> list:
+        """Batch form of :meth:`submit`: one future per request (duplicates
+        and in-flight keys share), with everything actually uncached scored
+        in up to ``max_workers`` chunked :meth:`Scorer.score_batch` tasks —
+        one vectorized rung-0 call per chunk — instead of one executor task
+        per genome.  Cache lookups stay counted per request, so hit/miss
+        accounting matches the per-genome path exactly.  With the batch path
+        disabled this degrades to a :meth:`submit` loop."""
+        genomes = list(genomes)
+        if not batch_scoring_enabled():
+            return [self.submit(g) for g in genomes]
+        results: list[concurrent.futures.Future] = []
+        waiters: list[tuple[str, concurrent.futures.Future]] = []
+        todo_g: list[KernelGenome] = []
+        todo_k: list[str] = []
+        todo_f: list[concurrent.futures.Future] = []
+        todo_e: list[threading.Event] = []
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("submit on closed BatchScorer")
+            for g in genomes:
+                key = self.base.score_key(g)
+                sv = self.base.cache.get(key)     # counted, like submit
+                if sv is not None:
+                    done: concurrent.futures.Future = \
+                        concurrent.futures.Future()
+                    done.set_result(sv)
+                    results.append(done)
+                    continue
+                fut = self._futures.get(key)
+                if fut is not None:
+                    results.append(fut)           # collapse onto in-flight
+                    continue
+                if key in self._inflight:
+                    # a synchronous __call__ owns it: wait it out on the
+                    # executor, exactly like submit() would
+                    fut = self._executor.submit(self, g)
+                    self._futures[key] = fut
+                    waiters.append((key, fut))
+                    results.append(fut)
+                    continue
+                ev = threading.Event()            # claim batch ownership
+                self._inflight[key] = ev
+                fut = concurrent.futures.Future()
+                self._futures[key] = fut
+                todo_g.append(g)
+                todo_k.append(key)
+                todo_f.append(fut)
+                todo_e.append(ev)
+                results.append(fut)
+        for key, fut in waiters:
+            fut.add_done_callback(lambda f, key=key: self._drop_submitted(key))
+        n = len(todo_g)
+        if n:
+            n_chunks = min(n, self.max_workers)
+            for c in range(n_chunks):
+                lo, hi = c * n // n_chunks, (c + 1) * n // n_chunks
+                if lo == hi:
+                    continue
+                task = self._executor.submit(
+                    self._run_batch_chunk, todo_g[lo:hi], todo_k[lo:hi],
+                    todo_f[lo:hi], todo_e[lo:hi])
+                task.add_done_callback(
+                    lambda t, k=todo_k[lo:hi], f=todo_f[lo:hi],
+                    e=todo_e[lo:hi]: self._on_chunk_task_done(k, f, e, t))
+        return results
+
+    def _run_batch_chunk(self, genomes, keys, futs, events) -> None:
+        """One executor task scoring a whole chunk via ``score_batch``:
+        cache the results, release the in-flight events (waiters re-read the
+        cache), resolve the per-key futures.  On failure nothing is cached
+        and the keys are evicted so later submits retry — the same contract
+        as the per-genome path."""
+        try:
+            svs = self.base.score_batch(genomes)
+        except Exception as e:
+            with self._lock:
+                for k in keys:
+                    self._inflight.pop(k, None)
+                    self._futures.pop(k, None)
+            for ev in events:
+                ev.set()                 # waiters retry and become owners
+            for f in futs:
+                f.set_exception(e)
+            return
+        for k, sv in zip(keys, svs):
+            self.base.cache.put(k, sv)
+        with self._lock:
+            for k in keys:
+                self._inflight.pop(k, None)
+                self._futures.pop(k, None)
+        for ev in events:
+            ev.set()
+        for f, sv in zip(futs, svs):
+            f.set_result(sv)
+
+    def _on_chunk_task_done(self, keys, futs, events, task) -> None:
+        """Only meaningful when ``close(cancel_futures=True)`` cancels a
+        queued chunk: release its claims and cancel its futures so nothing
+        waits forever on work that will never run."""
+        if not task.cancelled():
+            return                       # _run_batch_chunk resolved everything
+        with self._lock:
+            for k in keys:
+                self._inflight.pop(k, None)
+                self._futures.pop(k, None)
+        for ev in events:
+            ev.set()
+        for f in futs:
+            f.cancel()
+
     def __call__(self, genome: KernelGenome) -> ScoreVector:
         key = self.base.score_key(genome)
         cache = self.base.cache
@@ -286,29 +399,33 @@ class BatchScorer:
 
     def map(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
         """Evaluate a batch concurrently; order-preserving, duplicates collapse
-        onto one evaluation.  Routed through :meth:`submit` so the batch shares
-        the same in-flight table as concurrent submitters — a bare executor
-        submission here would burn a slot waiting on an in-flight duplicate."""
-        unique: dict[str, concurrent.futures.Future] = {}
+        onto one evaluation (one counted lookup per unique genome, as the
+        per-genome path did).  Routed through :meth:`submit_many` so the whole
+        uncached slate runs as chunked ``score_batch`` tasks sharing the same
+        in-flight table as concurrent submitters."""
+        unique: dict[str, KernelGenome] = {}
         for g in genomes:
-            key = self.base.score_key(g)
-            if key not in unique:
-                unique[key] = self.submit(g)
-        return [unique[self.base.score_key(g)].result() for g in genomes]
+            unique.setdefault(self.base.score_key(g), g)
+        futs = dict(zip(unique, self.submit_many(list(unique.values()))))
+        return [futs[self.base.score_key(g)].result() for g in genomes]
 
     def prefetch(self, genomes: Sequence[KernelGenome]) -> None:
         """Fire-and-forget cache warming for speculative candidates.  Peeks
         first (speculative work must not inflate the hit count), skips genomes
         already in flight either way (``_futures`` from submits, ``_inflight``
-        from synchronous callers), and routes the rest through :meth:`submit`
-        so later submitters share the prefetch's future."""
+        from synchronous callers), and routes the rest through
+        :meth:`submit_many` so later submitters share the prefetch's futures
+        and the speculative slate rides the batch path."""
+        todo: list[KernelGenome] = []
         for g in genomes:
             key = self.base.score_key(g)
             with self._lock:
                 if self.base.cache.peek(key) is not None \
                         or key in self._inflight or key in self._futures:
                     continue
-            self.submit(g)
+            todo.append(g)
+        if todo:
+            self.submit_many(todo)
 
     def close(self) -> None:
         """Idempotent: later calls are no-ops; ``submit`` after close raises."""
@@ -600,9 +717,49 @@ class ProcessBackend(ParentCacheBackend):
                 evaluate_frame, genome.to_edits(), self._spec_id)
         return self._executor.submit(evaluate_genome, genome, self.spec)
 
+    def _dispatch_eval_many(self, genomes: Sequence[KernelGenome]) -> list:
+        """Columnar dispatch: the deduped batch ships as up to
+        ``max_workers`` :func:`evaluate_frame_many` tasks (balanced
+        contiguous chunks — multi-core parallelism is preserved, each chunk
+        is one vectorized ``score_batch`` in its worker) instead of one task
+        per genome.  Per-genome futures are fanned out from each chunk task.
+        Requires the compact wire (workers that know the interned spec id);
+        otherwise, or with the batch path disabled, singleton dispatch."""
+        if len(genomes) <= 1 or not self._compact_wire \
+                or not batch_scoring_enabled():
+            return [self._dispatch_eval(g) for g in genomes]
+        entries = [(g.to_edits(), self._spec_id) for g in genomes]
+        futs = [concurrent.futures.Future() for _ in genomes]
+        n, n_chunks = len(entries), min(len(entries), self.max_workers)
+        for c in range(n_chunks):
+            lo, hi = c * n // n_chunks, (c + 1) * n // n_chunks
+            if lo == hi:
+                continue
+            task = self._executor.submit(evaluate_frame_many, entries[lo:hi])
+            task.add_done_callback(
+                lambda t, chunk=futs[lo:hi]: _fan_out_chunk(t, chunk))
+        return futs
+
     def _close_resources(self) -> None:
         if self._own_executor:
             self._executor.shutdown(wait=True, cancel_futures=True)
+
+
+def _fan_out_chunk(task: concurrent.futures.Future, futs: list) -> None:
+    """Resolve a chunk's per-genome futures from its batch task: results in
+    order, a batch-level failure/cancellation propagated to every member (the
+    parent evicts them from the in-flight table, so callers retry)."""
+    if task.cancelled():
+        for f in futs:
+            f.cancel()
+        return
+    err = task.exception()
+    if err is not None:
+        for f in futs:
+            f.set_exception(err)
+        return
+    for f, sv in zip(futs, task.result()):
+        f.set_result(sv)
 
 
 def make_backend(name: str,

@@ -60,6 +60,7 @@ class ScoreCache:
         self._data: dict[str, ScoreVector] = {}
         self.hits = 0
         self.misses = 0
+        self._eval_seconds: dict[str, float] = {}
 
     def get(self, key: str) -> Optional[ScoreVector]:
         """Counted lookup: increments ``hits`` or ``misses``."""
@@ -93,10 +94,23 @@ class ScoreCache:
         with self._lock:
             self._data.clear()
 
+    def record_eval_seconds(self, fidelity: str, seconds: float) -> None:
+        """Accumulate paid-evaluation wall time against a fidelity rung.
+        Scorers call this on every uncached evaluation, so the cascade's
+        per-rung cost claims are measured, not modelled.  The accounting
+        lives where the scores land: a process/service parent whose workers
+        pay evaluation elsewhere records ~0 here, while in-process backends
+        (inline/thread, the cascade smoke) record real wall time."""
+        with self._lock:
+            self._eval_seconds[fidelity] = (
+                self._eval_seconds.get(fidelity, 0.0) + seconds)
+
     def stats(self) -> dict:
-        """Hit/miss counters plus per-fidelity entry counts — how cascade
-        savings are observed per island (``Toolbelt.stats``/``IslandReport``):
-        the entry split shows how many genomes paid which rung."""
+        """Hit/miss counters plus per-fidelity entry counts and paid-eval
+        wall time — how cascade savings are observed per island
+        (``Toolbelt.stats``/``IslandReport.score_caches``): the entry split
+        shows how many genomes paid which rung, ``eval_seconds`` what each
+        rung actually cost."""
         with self._lock:
             per_fidelity: dict[str, int] = {}
             for key in self._data:
@@ -107,4 +121,5 @@ class ScoreCache:
                 "misses": self.misses,
                 "entries": len(self._data),
                 "per_fidelity": per_fidelity,
+                "eval_seconds": dict(self._eval_seconds),
             }

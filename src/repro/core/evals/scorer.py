@@ -24,8 +24,12 @@ key (``cache.fidelity_key``) so rungs never alias one another.
 """
 from __future__ import annotations
 
+import itertools
 import math
+import os
 import threading
+import time
+from collections import OrderedDict
 from typing import Optional, Sequence
 
 import numpy as np
@@ -35,10 +39,101 @@ from repro.core.evals.cache import (FIDELITIES, HLO, MEASURED, PERFMODEL,
                                     ScoreCache, fidelity_key)
 from repro.core.evals.vector import ScoreVector
 from repro.core.perfmodel import (KERNEL_LAUNCH, BenchConfig, estimate,
-                                  measured_estimate, mha_suite)
+                                  estimate_batch, measured_estimate,
+                                  mha_suite)
 from repro.core.search_space import KernelGenome
 
 CORRECTNESS_TOL = 2e-5
+
+# ---------------------------------------------------------------------------
+# batch-path switch
+# ---------------------------------------------------------------------------
+
+# One switch degrades every batched surface (Scorer.score_batch vectorization,
+# BatchScorer/ProcessBackend batched dispatch, the service worker's per-frame
+# scoring) to the scalar path — both compute bit-identical results (gated by
+# the slate smoke), so this exists for A/B gating and emergency rollback, not
+# semantics.  Seeded from the environment so spawned service workers inherit
+# the parent's setting (service.py propagates REPRO_BATCH_SCORING).
+_BATCH_SCORING = os.environ.get("REPRO_BATCH_SCORING", "1") != "0"
+
+
+def set_batch_scoring(enabled: bool) -> None:
+    """Globally enable/disable the columnar slate-scoring path (process-wide;
+    already-spawned remote workers keep the setting they inherited)."""
+    global _BATCH_SCORING
+    _BATCH_SCORING = bool(enabled)
+
+
+def batch_scoring_enabled() -> bool:
+    return _BATCH_SCORING
+
+
+# ---------------------------------------------------------------------------
+# structure-keyed correctness memo
+# ---------------------------------------------------------------------------
+
+CHECK_MEMO_CAP = 256
+
+
+class _CorrectnessMemo:
+    """Bounded LRU over *structural* correctness keys.
+
+    The interpreter run in :meth:`Scorer.check` depends only on the genome's
+    kernel-structural fields after the proxy block clamp, the proxy shape
+    set (the suite's ``(causal, proxy-window)`` pairs + GQA bit), and the
+    RNG seed — not on the whole genome.  Micro-variant slates (block sweeps
+    that clamp to the same proxy blocks) therefore pay the interpreter once
+    per structure.  Process-wide, like the worker scorer LRU it sits beside:
+    every Scorer in the process shares it, keys carry the shape signature so
+    distinct suites/seeds never alias."""
+
+    def __init__(self, cap: int = CHECK_MEMO_CAP):
+        self.cap = cap
+        self._lock = threading.Lock()
+        self._data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return self._data[key]
+            self.misses += 1
+            return None
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.cap:
+                self._data.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "entries": len(self._data), "cap": self.cap}
+
+
+_CHECK_MEMO = _CorrectnessMemo()
+
+
+def correctness_memo_stats() -> dict:
+    """Hit/miss/size counters of the process-wide correctness memo (surfaced
+    through ``Toolbelt.stats``; remote workers each hold their own memo)."""
+    return _CHECK_MEMO.stats()
 
 # proxy geometry shared by the correctness check and the hlo/measured rungs:
 # small enough for the interpreter, big enough that blocks/windows survive
@@ -114,45 +209,90 @@ class Scorer:
         self.service_latency_s = service_latency_s
         self.fidelity = fidelity
         self.cache = cache if cache is not None else ScoreCache()
-        self.n_evaluations = 0
-        self._count_lock = threading.Lock()
+        # paid-eval counter: itertools.count().__next__ is GIL-atomic, so
+        # concurrent backends count without a lock (read via n_evaluations)
+        self._eval_count = itertools.count()
+        self._proxy_lock = threading.Lock()
         self._proxy_inputs = None
+        self._shape_sig = None
+
+    @property
+    def n_evaluations(self) -> int:
+        """Paid (uncached) evaluations so far.  ``repr(count)`` exposes the
+        next value without consuming it — a lock-free read of a lock-free
+        counter."""
+        r = repr(self._eval_count)
+        return int(r[r.index("(") + 1:-1])
 
     # -- correctness ----------------------------------------------------------
     def warm(self) -> None:
-        """Build the RNG-derived proxy inputs eagerly.  The lazy build is not
-        thread-safe, so concurrent backends call this once up front; worker
-        initializers call it so the first real evaluation is not penalized."""
+        """Build the RNG-derived proxy inputs eagerly — a no-op once built.
+        The lazy build itself is lock-protected, so this is purely a
+        prewarmer: worker initializers call it so the first real evaluation
+        is not penalized."""
         if self.check_correctness:
             self._proxy_data()
 
     def _proxy_data(self):
         if self._proxy_inputs is None:
-            import jax.numpy as jnp
-            rng = np.random.default_rng(self.rng_seed)
-            shapes = _correctness_proxy_shapes(self.suite)
-            data = []
-            for sh in shapes:
-                q = jnp.asarray(rng.normal(size=(sh["B"], sh["Hq"], sh["S"], sh["D"])),
-                                jnp.float32)
-                k = jnp.asarray(rng.normal(size=(sh["B"], sh["Hkv"], sh["S"], sh["D"])),
-                                jnp.float32)
-                v = jnp.asarray(rng.normal(size=(sh["B"], sh["Hkv"], sh["S"], sh["D"])),
-                                jnp.float32)
-                data.append((sh, q, k, v))
-            self._proxy_inputs = data
+            with self._proxy_lock:
+                if self._proxy_inputs is not None:    # lost the build race
+                    return self._proxy_inputs
+                import jax.numpy as jnp
+                rng = np.random.default_rng(self.rng_seed)
+                shapes = _correctness_proxy_shapes(self.suite)
+                data = []
+                for sh in shapes:
+                    q = jnp.asarray(rng.normal(size=(sh["B"], sh["Hq"], sh["S"], sh["D"])),
+                                    jnp.float32)
+                    k = jnp.asarray(rng.normal(size=(sh["B"], sh["Hkv"], sh["S"], sh["D"])),
+                                    jnp.float32)
+                    v = jnp.asarray(rng.normal(size=(sh["B"], sh["Hkv"], sh["S"], sh["D"])),
+                                    jnp.float32)
+                    data.append((sh, q, k, v))
+                self._proxy_inputs = data
         return self._proxy_inputs
 
+    @staticmethod
+    def _clamped_kwargs(genome: KernelGenome) -> dict:
+        """Kernel kwargs with blocks scaled down onto the proxy shapes, so
+        the structural path (grid/loop/skip/branch) is still exercised."""
+        kw = genome.kernel_kwargs()
+        kw["block_q"] = max(16, min(kw["block_q"], 2048) // 16)
+        kw["block_k"] = max(16, min(kw["block_k"], 2048) // 16)
+        return kw
+
+    def structural_key(self, genome: KernelGenome) -> tuple:
+        """The correctness-memo key: everything the interpreter run actually
+        depends on.  Clamped kernel kwargs (micro-variants whose blocks clamp
+        to the same proxy blocks collide — the memo's whole point) plus the
+        proxy-shape signature (the suite's ``(causal, proxy window)`` set +
+        GQA bit) and the input seed, so distinct suites/seeds never alias."""
+        if self._shape_sig is None:
+            self._shape_sig = tuple(sorted(
+                (sh["B"], sh["Hq"], sh["Hkv"], sh["S"], sh["D"], sh["causal"],
+                 -1 if sh["window"] is None else sh["window"])
+                for sh in _correctness_proxy_shapes(self.suite)))
+        kw = self._clamped_kwargs(genome)
+        return (self._shape_sig, self.rng_seed,
+                tuple(sorted(kw.items())))
+
     def check(self, genome: KernelGenome) -> tuple[bool, str]:
-        """Execute the genome's kernel (interpret mode) against the oracle."""
+        """Execute the genome's kernel (interpret mode) against the oracle —
+        memoized per kernel structure in the process-wide bounded LRU."""
+        key = self.structural_key(genome)
+        cached = _CHECK_MEMO.get(key)
+        if cached is not None:
+            return cached
+        result = self._check_uncached(genome)
+        _CHECK_MEMO.put(key, result)
+        return result
+
+    def _check_uncached(self, genome: KernelGenome) -> tuple[bool, str]:
         import jax.numpy as jnp
         from repro.kernels.flash_attention import flash_attention
         from repro.kernels.ref import mha_reference
-        kw = genome.kernel_kwargs()
-        # proxy shapes are small; scale blocks down proportionally so the
-        # structural path (grid/loop/skip/branch) is still exercised
-        kw["block_q"] = max(16, min(kw["block_q"], 2048) // 16)
-        kw["block_k"] = max(16, min(kw["block_k"], 2048) // 16)
+        kw = self._clamped_kwargs(genome)
         for sh, q, k, v in self._proxy_data():
             try:
                 o = flash_attention(q, k, v, causal=sh["causal"], window=sh["window"],
@@ -185,28 +325,86 @@ class Scorer:
     def score_uncached(self, genome: KernelGenome) -> ScoreVector:
         """Pay the full evaluation cost, bypassing the memo cache (concurrent
         backends manage the cache themselves and call this directly)."""
-        with self._count_lock:       # backends call this from many threads
-            self.n_evaluations += 1
-        if self.service_latency_s > 0:
-            import time
-            time.sleep(self.service_latency_s)
+        t0 = time.perf_counter()
+        try:
+            next(self._eval_count)
+            if self.service_latency_s > 0:
+                time.sleep(self.service_latency_s)
 
-        if self.check_correctness:
-            ok, why = self.check(genome)
-            if not ok:
-                return ScoreVector(tuple(c.name for c in self.suite),
-                                   tuple(0.0 for _ in self.suite), False, why)
+            if self.check_correctness:
+                ok, why = self.check(genome)
+                if not ok:
+                    return ScoreVector(tuple(c.name for c in self.suite),
+                                       tuple(0.0 for _ in self.suite), False,
+                                       why)
 
-        if self.fidelity == HLO:
-            values, profiles = self._hlo_values(genome)
-        elif self.fidelity == MEASURED:
-            values, profiles = self._measured_values(genome)
-        else:
-            values, profiles = [], {}
-            for cfg in self.suite:
-                p = estimate(genome, cfg)
-                profiles[cfg.name] = p
-                values.append(p.tflops if p.feasible else 0.0)
+            if self.fidelity == HLO:
+                values, profiles = self._hlo_values(genome)
+            elif self.fidelity == MEASURED:
+                values, profiles = self._measured_values(genome)
+            else:
+                values, profiles = [], {}
+                for cfg in self.suite:
+                    p = estimate(genome, cfg)
+                    profiles[cfg.name] = p
+                    values.append(p.tflops if p.feasible else 0.0)
+            return self._assemble(values, profiles)
+        finally:
+            self.cache.record_eval_seconds(self.fidelity,
+                                           time.perf_counter() - t0)
+
+    def score_batch(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
+        """Batched :meth:`score_uncached`: pay the evaluation cost for every
+        entry (no cache, no dedup — backends own both) with one vectorized
+        rung-0 model call for the whole slate and one structural-memo lookup
+        per genome.  Results are bit-identical to the scalar path; with the
+        batch path disabled this *is* the scalar path.  The modelled service
+        latency is held once per batch — batching a slate amortizes the
+        round trip, which is the point."""
+        genomes = list(genomes)
+        if not genomes:
+            return []
+        if not _BATCH_SCORING:
+            return [self.score_uncached(g) for g in genomes]
+        t0 = time.perf_counter()
+        try:
+            for _ in genomes:
+                next(self._eval_count)
+            if self.service_latency_s > 0:
+                time.sleep(self.service_latency_s)
+
+            checks = ([self.check(g) for g in genomes]
+                      if self.check_correctness
+                      else [(True, "")] * len(genomes))
+            out: list = [None] * len(genomes)
+            todo = [i for i, (ok, why) in enumerate(checks) if ok]
+            for i, (ok, why) in enumerate(checks):
+                if not ok:
+                    out[i] = ScoreVector(tuple(c.name for c in self.suite),
+                                         tuple(0.0 for _ in self.suite),
+                                         False, why)
+            if self.fidelity == PERFMODEL:
+                be = estimate_batch([genomes[i] for i in todo], self.suite)
+                for k, i in enumerate(todo):
+                    profiles = be.profiles(k)
+                    values = [profiles[c.name].tflops
+                              if profiles[c.name].feasible else 0.0
+                              for c in self.suite]
+                    out[i] = self._assemble(values, profiles)
+            else:                     # hlo/measured stay scalar per genome
+                for i in todo:
+                    values, profiles = (
+                        self._hlo_values(genomes[i]) if self.fidelity == HLO
+                        else self._measured_values(genomes[i]))
+                    out[i] = self._assemble(values, profiles)
+            return out
+        finally:
+            self.cache.record_eval_seconds(self.fidelity,
+                                           time.perf_counter() - t0)
+
+    def _assemble(self, values, profiles) -> ScoreVector:
+        """The common ScoreVector assembly of both scoring paths (identical
+        failure-string derivation, so batch == scalar bit-for-bit)."""
         failure = ""
         if any(v == 0.0 for v in values):
             bad = [c.name for c, v in zip(self.suite, values) if v == 0.0]

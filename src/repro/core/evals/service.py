@@ -89,6 +89,7 @@ from typing import Callable, Optional, Sequence, Union
 from repro.core.evals import protocol
 from repro.core.evals.backends import ParentCacheBackend, register_backend
 from repro.core.evals.cache import ScoreCache
+from repro.core.evals.scorer import batch_scoring_enabled
 from repro.core.evals.worker import EvalSpec, intern_spec
 from repro.core.perfmodel import BenchConfig
 from repro.core.search_space import KernelGenome
@@ -890,6 +891,9 @@ def _worker_env() -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
                                if env.get("PYTHONPATH") else "")
+    # spawned workers inherit the parent's batch-scoring setting, so a
+    # whole fleet A/Bs (or rolls back) the columnar path with one switch
+    env["REPRO_BATCH_SCORING"] = "1" if batch_scoring_enabled() else "0"
     return env
 
 

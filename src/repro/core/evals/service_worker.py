@@ -50,6 +50,7 @@ from multiprocessing import shared_memory
 from typing import Optional, Sequence
 
 from repro.core.evals import protocol
+from repro.core.evals.scorer import batch_scoring_enabled
 from repro.core.evals.worker import EvalSpec, _scorer_for, evaluate_genome
 from repro.core.search_space import KernelGenome
 
@@ -167,6 +168,72 @@ class EvalServiceWorker:
         except OSError:
             self._stop.set()
 
+    def _evaluate_frame_batch(self, entries: Sequence) -> None:
+        """A whole coalesced ``tasks`` frame as one columnar evaluation:
+        decode every payload (a per-entry shm failure degrades that entry
+        only), group the survivors by spec id, score each group with one
+        :meth:`Scorer.score_batch` call — one vectorized rung-0 model pass,
+        one structural correctness-memo pass — and stream RESULT frames in
+        entry order.  A group whose batch raises falls back to per-entry
+        scalar scoring so failure attribution stays per task, with error
+        strings identical to the singleton path."""
+        decoded: list = []               # (task_id, sid, genome)
+        for task_id, payload in entries:
+            if payload[0] == "shm":
+                _, seg_name, off, ln, sid = payload
+                try:
+                    genome = self._shm_genome(seg_name, off, ln)
+                except Exception:
+                    try:
+                        self._send({"type": protocol.RESULT, "id": task_id,
+                                    "shm_failure": True})
+                    except OSError:
+                        self._stop.set()
+                        return
+                    continue
+            else:
+                _, edits, sid = payload
+                genome = KernelGenome.from_edits(edits)
+            decoded.append((task_id, sid, genome))
+        groups: dict[int, list[int]] = {}
+        for idx, (_tid, sid, _g) in enumerate(decoded):
+            groups.setdefault(sid, []).append(idx)
+        results: dict[int, dict] = {}
+        for sid, idxs in groups.items():
+            spec = self._specs.get(sid)
+            if spec is None:
+                err = ("RuntimeError: task references unannounced "
+                       f"spec id {sid}")
+                for i in idxs:
+                    results[i] = {"type": protocol.RESULT,
+                                  "id": decoded[i][0], "ok": False,
+                                  "error": err}
+                continue
+            scorer = _scorer_for(spec)
+            try:
+                svs = scorer.score_batch([decoded[i][2] for i in idxs])
+                for i, sv in zip(idxs, svs):
+                    results[i] = {"type": protocol.RESULT,
+                                  "id": decoded[i][0], "ok": True,
+                                  "value": sv}
+            except Exception:            # pragma: no cover - defensive
+                for i in idxs:
+                    try:
+                        sv = scorer.score_uncached(decoded[i][2])
+                        results[i] = {"type": protocol.RESULT,
+                                      "id": decoded[i][0], "ok": True,
+                                      "value": sv}
+                    except Exception as e:
+                        results[i] = {"type": protocol.RESULT,
+                                      "id": decoded[i][0], "ok": False,
+                                      "error": f"{type(e).__name__}: {e}"}
+        for i in range(len(decoded)):
+            try:
+                self._send(results[i])
+            except OSError:
+                self._stop.set()
+                return
+
     def _heartbeat_loop(self, interval_s: float) -> None:
         while not self._stop.wait(interval_s):
             try:
@@ -215,8 +282,13 @@ class EvalServiceWorker:
                     # have them; registration is synchronous (before any of
                     # the batch evaluates) and idempotent
                     self._warm(pool, msg.get("specs", ()))
-                    for task_id, payload in msg.get("tasks", ()):
-                        pool.submit(self._evaluate_entry, task_id, payload)
+                    tasks = tuple(msg.get("tasks", ()))
+                    if batch_scoring_enabled() and len(tasks) > 1:
+                        # columnar: the whole frame is one vectorized pass
+                        pool.submit(self._evaluate_frame_batch, tasks)
+                    else:
+                        for task_id, payload in tasks:
+                            pool.submit(self._evaluate_entry, task_id, payload)
                 elif kind == protocol.TASK:
                     pool.submit(self._evaluate, msg["id"], msg["spec"],
                                 msg["genome"])

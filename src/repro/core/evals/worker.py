@@ -193,6 +193,36 @@ def evaluate_frame(edits: tuple, spec_id: int) -> ScoreVector:
     return _scorer_for(spec).score_uncached(KernelGenome.from_edits(edits))
 
 
+def evaluate_frame_many(entries: Sequence) -> list:
+    """Evaluate a whole coalesced frame of ``(edits, spec_id)`` tasks — the
+    columnar task function.  Entries are grouped per spec and each group is
+    scored with one :meth:`Scorer.score_batch` call (one vectorized rung-0
+    model evaluation, one structural correctness-memo pass), results returned
+    in entry order.  Pure like :func:`evaluate_frame`; a batch that raises
+    mid-group degrades to per-entry scalar scoring so failure attribution
+    stays per task."""
+    entries = list(entries)
+    genomes = [KernelGenome.from_edits(edits) for edits, _sid in entries]
+    groups: "OrderedDict[int, list[int]]" = OrderedDict()
+    for idx, (_edits, sid) in enumerate(entries):
+        groups.setdefault(int(sid), []).append(idx)
+    out: list = [None] * len(entries)
+    for sid, idxs in groups.items():
+        spec = _WORKER_SPECS.get(sid)
+        if spec is None:
+            raise RuntimeError(
+                f"unknown interned spec id {sid}: this worker was never "
+                f"warmed with it (announced ids: {sorted(_WORKER_SPECS)})")
+        scorer = _scorer_for(spec)
+        try:
+            svs = scorer.score_batch([genomes[i] for i in idxs])
+        except Exception:            # pragma: no cover - defensive fallback
+            svs = [scorer.score_uncached(genomes[i]) for i in idxs]
+        for i, sv in zip(idxs, svs):
+            out[i] = sv
+    return out
+
+
 def _prestart_noop() -> None:
     """Trivial task submitted once per worker to force the pool to fork/spawn
     its processes immediately (while the parent is still jax-clean)."""

@@ -31,10 +31,12 @@ unit-tested for its qualitative properties (tests/test_perfmodel.py).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
 
-from repro.core.search_space import KernelGenome
+import numpy as np
+
+from repro.core.search_space import KernelGenome, genome_columns
 
 # ---- hardware constants (TPU v5e) -----------------------------------------
 PEAK_FLOPS = 197e12          # bf16 MXU peak, per chip (brief-provided)
@@ -368,6 +370,279 @@ def estimate(g: KernelGenome, cfg: BenchConfig) -> Profile:
         roofline_s=roofline_s,
     )
     return prof
+
+
+# ---------------------------------------------------------------------------
+# columnar (struct-of-arrays) batch evaluation of the same model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BatchEstimate:
+    """Columnar result of :func:`estimate_batch`: one float64 column per
+    :class:`Profile` term, shaped ``(n_genomes, n_configs)``.  ``profile``
+    materializes the scalar :class:`Profile` for one lane on demand —
+    bit-identical to what :func:`estimate` returns for that (genome, config)
+    pair, including the infeasible zero-profile and its reason string."""
+    config_names: tuple
+    tflops: np.ndarray
+    total_s: np.ndarray
+    t_mxu: np.ndarray
+    t_vpu: np.ndarray
+    t_dma: np.ndarray
+    t_overhead: np.ndarray
+    t_bubble: np.ndarray
+    vmem: np.ndarray
+    feasible: np.ndarray
+    rooflines: tuple = field(default_factory=tuple)   # per config
+
+    def __len__(self) -> int:
+        return self.tflops.shape[0]
+
+    def profile(self, gi: int, ci: int) -> Profile:
+        vmem = int(self.vmem[gi, ci])
+        if not self.feasible[gi, ci]:
+            return Profile(0.0, 0.0, 0, 0, 0, 0, 0, vmem, False,
+                           f"VMEM overflow: {vmem / 2**20:.1f} MiB > 128 MiB",
+                           self.rooflines[ci])
+        return Profile(
+            tflops=float(self.tflops[gi, ci]),
+            total_s=float(self.total_s[gi, ci]),
+            t_mxu=float(self.t_mxu[gi, ci]),
+            t_vpu_exposed=float(self.t_vpu[gi, ci]),
+            t_dma_exposed=float(self.t_dma[gi, ci]),
+            t_overhead=float(self.t_overhead[gi, ci]),
+            t_bubble=float(self.t_bubble[gi, ci]),
+            vmem_bytes=vmem,
+            feasible=True,
+            roofline_s=self.rooflines[ci],
+        )
+
+    def profiles(self, gi: int) -> dict:
+        """``{config name: Profile}`` for one genome (the scorer's shape)."""
+        return {name: self.profile(gi, ci)
+                for ci, name in enumerate(self.config_names)}
+
+
+def estimate_batch(genomes: Sequence[KernelGenome],
+                   suite: Sequence[BenchConfig]) -> BatchEstimate:
+    """Vectorized :func:`estimate` over a ``(genomes x suite)`` slate.
+
+    The genome list is decomposed into struct-of-arrays columns over the
+    ``_GENOME_DEFAULTS`` field table and the whole model runs as element-wise
+    float64 NumPy ops over *lanes* (one lane per (genome, config) pair,
+    genome-major).  Every arithmetic expression below replicates the scalar
+    code's operation order and associativity exactly — float64 NumPy ufuncs
+    round identically to CPython float ops — so results are **bit-identical**
+    to the scalar path (gated by tests and the `--slate-smoke` bench).
+
+    The two data-dependent trip counts become masked loops: the q-block walk
+    runs to ``max(nq)`` emitting one *row* per active (lane, i), and the
+    K-block walk runs to ``max(n_run)`` accumulating per-row subtotals in
+    ascending-j order — the same sequential fold as the scalar
+    ``sum(...)`` over ``blk_times``.  Row subtotals then fold into per-lane
+    totals in ascending-i order, matching the scalar outer loop."""
+    genomes, suite = list(genomes), list(suite)
+    N, C = len(genomes), len(suite)
+    names = tuple(c.name for c in suite)
+    rooflines = tuple(useful_flops(c) / PEAK_FLOPS for c in suite)
+    if N == 0 or C == 0:
+        z = np.zeros((N, C))
+        return BatchEstimate(names, z, z.copy(), z.copy(), z.copy(), z.copy(),
+                             z.copy(), z.copy(), z.astype(np.int64),
+                             np.ones((N, C), dtype=bool), rooflines)
+    L = N * C
+
+    # -- per-genome columns, repeated genome-major over lanes ----------------
+    cols = genome_columns(genomes)
+    rep_g = lambda vals, dt_: np.repeat(np.asarray(vals, dtype=dt_), C)
+    block_q = rep_g(cols["block_q"], np.int64)
+    block_k = rep_g(cols["block_k"], np.int64)
+    branchless = rep_g([m == "branchless" for m in cols["rescale_mode"]], bool)
+    dense = rep_g([m == "dense" for m in cols["mask_mode"]], bool)
+    eager = rep_g([m == "eager" for m in cols["div_mode"]], bool)
+    deferred = rep_g([m == "deferred" for m in cols["div_mode"]], bool)
+    kv_in_grid = rep_g(cols["kv_in_grid"], bool)
+    gqa_pack = rep_g(cols["gqa_pack"], bool)
+    bf16_acc = rep_g([a == "bf16" for a in cols["acc_dtype"]], bool)
+
+    # -- per-config columns, tiled over lanes --------------------------------
+    tile_c = lambda vals, dt_: np.tile(np.asarray(vals, dtype=dt_), N)
+    D = tile_c([c.head_dim for c in suite], np.int64)
+    dt = tile_c([c.dtype_bytes for c in suite], np.int64)
+    S = tile_c([c.seq_len for c in suite], np.int64)
+    batch = tile_c([c.batch for c in suite], np.int64)
+    n_heads = tile_c([c.n_heads for c in suite], np.int64)
+    n_kv = tile_c([c.n_kv_heads for c in suite], np.int64)
+    causal = tile_c([c.causal for c in suite], bool)
+    has_win = tile_c([c.window is not None for c in suite], bool)
+    window = tile_c([(0 if c.window is None else c.window) for c in suite],
+                    np.int64)
+    uf = tile_c([useful_flops(c) for c in suite], np.float64)
+
+    rep = n_heads // n_kv
+    packed = gqa_pack & (rep > 1)
+
+    # -- vmem_usage, element-wise (all-integer, same ops) --------------------
+    rows_ = np.where(packed, S * rep, S)
+    bq = np.minimum(block_q, rows_)
+    bk = np.minimum(block_k, S)
+    acc = bq * D * np.where(bf16_acc, 2, 4)
+    stats = 2 * bq * 128 * 4
+    scores = bq * bk * 4
+    qbuf = bq * D * dt
+    kvbuf = np.where(kv_in_grid, 2 * (2 * bk * D * dt), 2 * (S * D * dt))
+    vmem = acc + stats + scores + qbuf + kvbuf
+    feasible = vmem <= VMEM_BYTES
+
+    n_fetch = np.where(packed, n_kv, n_heads)
+    nq = np.ceil(rows_ / bq).astype(np.int64)
+    nk = np.ceil(S / bk).astype(np.int64)
+    # _mxu_eff: int / (128 * ceil(int/128)) — int/int true division
+    u_q = bq / (128 * np.ceil(bq / 128).astype(np.int64))
+    u_k = bk / (128 * np.ceil(bk / 128).astype(np.int64))
+
+    # -- per-lane i/j-invariant terms (scalar op order preserved) ------------
+    per_blk_mxu = 4.0 * bq * bk * D / (PEAK_FLOPS * u_q * u_k)
+    softmax_vpu = SOFTMAX_COST * bq * bk
+    rescale_vpu = 2.0 * bq * D
+    eager_vpu = np.where(eager, 2.0 * bq * D + bq, 0.0)
+    mask_vpu = MASK_COST * bq * bk
+    t_d = (2 * bk * D * dt) / HBM_BW
+    c04 = 1 - MXU_VPU_OVERLAP
+    nb_cap = np.maximum(1, np.ceil(bq / bk).astype(np.int64) + 1)
+    # vpu_ops accumulates left-to-right: ((softmax+eager)[+mask])+rescale
+    base_v = softmax_vpu + eager_vpu
+    sel_m = base_v + mask_vpu
+    tv_bl_nm = (base_v + rescale_vpu) / VPU_FLOPS
+    tv_bl_m = (sel_m + rescale_vpu) / VPU_FLOPS
+
+    # -- phase A: q-block walk -> one row per active (lane, i) ---------------
+    lane_ids = np.arange(L)
+    act_lane = feasible
+    max_nq = int(nq[act_lane].max()) if act_lane.any() else 0
+    lane_parts, nrun_parts, nb_parts = [], [], []
+    group_bounds = []
+    total_rows = 0
+    for i in range(max_nq):
+        m = act_lane & (i < nq)
+        if not m.any():
+            break
+        lanes_i = lane_ids[m]
+        bq_i, bk_i, S_i, nk_i = bq[m], bk[m], S[m], nk[m]
+        # packed tiles wrap around the sequence; plain tiles clamp at S
+        lo_pos = (i * bq_i) % S_i
+        hi_pos = lo_pos + bq_i - 1
+        wrap = hi_pos >= S_i
+        q_lo = np.where(packed[m], np.where(wrap, 0, lo_pos), i * bq_i)
+        q_hi = np.where(packed[m], np.where(wrap, S_i - 1, hi_pos),
+                        np.minimum(i * bq_i + bq_i, S_i) - 1)
+        j_hi = np.where(causal[m],
+                        np.minimum(nk_i,
+                                   np.ceil((q_hi + 1) / bk_i).astype(np.int64)),
+                        nk_i)
+        j_lo = np.where(has_win[m],
+                        np.maximum(0, (q_lo - window[m] + 1) // bk_i), 0)
+        j_hi = np.maximum(j_hi, j_lo)
+        n_run = np.where(dense[m], nk_i, j_hi - j_lo)
+        n_b = np.where(dense[m], nk_i, np.minimum(j_hi - j_lo, nb_cap[m]))
+        lane_parts.append(lanes_i)
+        nrun_parts.append(n_run)
+        nb_parts.append(n_b)
+        group_bounds.append((total_rows, total_rows + len(lanes_i)))
+        total_rows += len(lanes_i)
+
+    R = total_rows
+    row_lane = (np.concatenate(lane_parts) if R else
+                np.zeros(0, dtype=np.int64))
+    row_nrun = (np.concatenate(nrun_parts) if R else
+                np.zeros(0, dtype=np.int64))
+    row_nb = np.concatenate(nb_parts) if R else np.zeros(0, dtype=np.int64)
+
+    # -- phase B: K-block walk, per-row subtotals in ascending-j order -------
+    # sort rows ascending by trip count so the active set at step j is a
+    # contiguous suffix (views, no boolean-mask temporaries); per-row
+    # accumulation order is j-ascending regardless of row permutation, which
+    # is exactly the scalar `sum(...)` fold over blk_times.
+    order = np.argsort(row_nrun, kind="stable")
+    s_nrun = row_nrun[order]
+    s_mask_from = s_nrun - row_nb[order]        # mask applies at j >= this
+    rl = row_lane[order]
+    s_pb, s_td = per_blk_mxu[rl], t_d[rl]
+    s_bl, s_grid = branchless[rl], kv_in_grid[rl]
+    s_tvblnm, s_tvblm = tv_bl_nm[rl], tv_bl_m[rl]
+    s_selnm, s_selm = base_v[rl], sel_m[rl]
+    s_resc, s_bq = rescale_vpu[rl], bq[rl]
+    s_mxu = np.zeros(R)
+    s_vpu = np.zeros(R)
+    s_dma = np.zeros(R)
+    s_bub = np.zeros(R)
+    max_j = int(s_nrun[-1]) if R else 0
+    for j in range(max_j):
+        k = int(np.searchsorted(s_nrun, j, side="right"))
+        sl = slice(k, R)
+        masked = j >= s_mask_from[sl]
+        p_j = 1.0 / (j + 1)                     # P(block max beats running max)
+        sel = np.where(masked, s_selm[sl], s_selnm[sl])
+        tv_br = (sel + (p_j * s_resc[sl] + s_bq[sl])) / VPU_FLOPS
+        tv_bl = np.where(masked, s_tvblm[sl], s_tvblnm[sl])
+        t_v = np.where(s_bl[sl], tv_bl, tv_br)
+        compute = s_pb[sl] + c04 * t_v
+        s_mxu[sl] += s_pb[sl]
+        s_vpu[sl] += np.where(s_grid[sl], c04 * t_v, t_v)
+        s_dma[sl] += np.where(s_grid[sl],
+                              np.maximum(0.0, s_td[sl] - compute), 0.0)
+        s_bub[sl] += np.where(s_bl[sl], 0.0, BRANCH_BUBBLE)
+    # unsort back to (i-major) row order
+    u_mxu = np.empty(R); u_mxu[order] = s_mxu
+    u_vpu = np.empty(R); u_vpu[order] = s_vpu
+    u_dma = np.empty(R); u_dma[order] = s_dma
+    u_bub = np.empty(R); u_bub[order] = s_bub
+
+    # -- phase C: fold rows into per-lane totals in ascending-i order --------
+    T_mxu = np.zeros(L)
+    T_vpu = np.zeros(L)
+    T_dma = np.zeros(L)
+    T_ovh = np.zeros(L)
+    T_bub = np.zeros(L)
+    defer_add = np.where(deferred, (bq * D) / VPU_FLOPS, 0.0)
+    qo_bytes = bq * D * dt * 2
+    stage_bytes = 2 * S * D * dt
+    qo_add = np.where(kv_in_grid,
+                      np.maximum(0.0, qo_bytes / HBM_BW - GRID_STEP_OVERHEAD),
+                      qo_bytes / HBM_BW + stage_bytes / HBM_BW + DMA_SETUP)
+    for a, b in group_bounds:
+        lanes_i = row_lane[a:b]                 # each lane at most once per i
+        T_mxu[lanes_i] += u_mxu[a:b]
+        T_vpu[lanes_i] += u_vpu[a:b]
+        T_dma[lanes_i] += u_dma[a:b]
+        T_bub[lanes_i] += u_bub[a:b]
+        T_ovh[lanes_i] += GRID_STEP_OVERHEAD * np.where(kv_in_grid[lanes_i],
+                                                        row_nrun[a:b], 1)
+        T_vpu[lanes_i] += defer_add[lanes_i]    # += 0.0 where eager: exact
+        T_dma[lanes_i] += qo_add[lanes_i]
+
+    per_head = (T_mxu + T_vpu + T_dma + T_ovh + T_bub)
+    scale = batch * n_fetch
+    total = KERNEL_LAUNCH + scale * per_head
+    tflops = uf / total / 1e12
+
+    def _col(v):
+        return np.where(feasible, v, 0.0).reshape(N, C)
+
+    return BatchEstimate(
+        config_names=names,
+        tflops=_col(tflops),
+        total_s=_col(total),
+        t_mxu=_col(T_mxu * scale),
+        t_vpu=_col(T_vpu * scale),
+        t_dma=_col(T_dma * scale),
+        t_overhead=_col(T_ovh * scale),
+        t_bubble=_col(T_bub * scale),
+        vmem=vmem.reshape(N, C),
+        feasible=feasible.reshape(N, C),
+        rooflines=rooflines,
+    )
 
 
 # ---------------------------------------------------------------------------

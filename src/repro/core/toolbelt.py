@@ -182,7 +182,11 @@ class Toolbelt:
     def stats(self) -> dict:
         """``evaluations`` is the scorer's paid-evaluation total — for a
         shared BatchScorer that is the whole suite group, not just this belt;
-        ``evaluate_calls`` is this belt's own request count."""
+        ``evaluate_calls`` is this belt's own request count.
+        ``correctness_memo`` is the process-wide structural-memo view:
+        authoritative for inline/thread backends, parent-side (workers keep
+        their own memos) for process/service."""
+        from repro.core.evals import correctness_memo_stats
         return {
             "tool_calls": len(self.calls),
             "evaluations": self.scorer.n_evaluations,
@@ -194,4 +198,5 @@ class Toolbelt:
             "score_cache": (self.scorer.cache.stats()
                             if hasattr(getattr(self.scorer, "cache", None),
                                        "stats") else {}),
+            "correctness_memo": correctness_memo_stats(),
         }

@@ -1,0 +1,285 @@
+"""Columnar slate scoring (PR 9): seeded randomized bit-identity of the
+vectorized rung-0 perfmodel (``estimate_batch``) and the batched scorer path
+(``Scorer.score_batch``) against the scalar references, the structure-keyed
+correctness memo (collisions score once, distinct structures never alias,
+LRU bound respected), the lock-free evaluation counter, per-fidelity
+``eval_seconds`` accounting, and the BatchScorer ``submit_many`` slate
+dispatch."""
+import random
+import threading
+
+import pytest
+
+from repro.core import KernelGenome, ScoreCache, Scorer, seed_genome
+from repro.core.evals import (BatchScorer, batch_scoring_enabled,
+                              correctness_memo_stats, set_batch_scoring)
+from repro.core.evals.scorer import _CHECK_MEMO, _CorrectnessMemo
+from repro.core.perfmodel import (BenchConfig, decode_suite, estimate,
+                                  estimate_batch, gqa_suite, mha_suite)
+from repro.core.search_space import (ACC_DTYPES, BLOCK_K_CHOICES,
+                                     BLOCK_Q_CHOICES, DIV_MODES, MASK_MODES,
+                                     RESCALE_MODES, genome_columns)
+
+FAST_SUITE = [BenchConfig("c4k", 8, 16, 16, 4096, causal=True),
+              BenchConfig("w4k", 8, 16, 16, 4096, causal=True, window=1024)]
+
+# a loop-mode (kv_in_grid=False) genome overflows VMEM on this config:
+# kv buffering alone is 2*S*D*4B = 256 MiB > the 128 MiB budget
+LONG_SEQ = BenchConfig("long", 1, 8, 8, 2 ** 19, causal=True)
+
+
+def random_genomes(n, seed, force_loop_mode=False):
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n):
+        out.append(KernelGenome(
+            block_q=rng.choice(BLOCK_Q_CHOICES),
+            block_k=rng.choice(BLOCK_K_CHOICES),
+            rescale_mode=rng.choice(RESCALE_MODES),
+            mask_mode=rng.choice(MASK_MODES),
+            div_mode=rng.choice(DIV_MODES),
+            kv_in_grid=False if force_loop_mode else rng.choice((False, True)),
+            gqa_pack=rng.choice((False, True)),
+            acc_dtype=rng.choice(ACC_DTYPES)))
+    return out
+
+
+def assert_profiles_identical(p, q):
+    assert p.tflops == q.tflops
+    assert p.total_s == q.total_s
+    assert p.t_mxu == q.t_mxu
+    assert p.t_vpu_exposed == q.t_vpu_exposed
+    assert p.t_dma_exposed == q.t_dma_exposed
+    assert p.t_overhead == q.t_overhead
+    assert p.t_bubble == q.t_bubble
+    assert p.vmem_bytes == q.vmem_bytes
+    assert p.feasible == q.feasible
+    assert p.infeasible_reason == q.infeasible_reason
+    assert p.roofline_s == q.roofline_s
+
+
+# -- columnar genome decomposition --------------------------------------------
+
+
+def test_genome_columns_is_field_ordered_soa():
+    gs = random_genomes(5, seed=3)
+    cols = genome_columns(gs)
+    assert list(cols) == ["block_q", "block_k", "rescale_mode", "mask_mode",
+                          "div_mode", "kv_in_grid", "gqa_pack", "acc_dtype"]
+    for name, col in cols.items():
+        assert col == [getattr(g, name) for g in gs]
+
+
+# -- vectorized rung-0 perfmodel: bit-identity against the scalar walk --------
+
+
+@pytest.mark.parametrize("suite_fn,n,seed", [
+    (mha_suite, 12, 11), (gqa_suite, 8, 22), (decode_suite, 6, 33)])
+def test_estimate_batch_bit_identical_to_scalar(suite_fn, n, seed):
+    suite = suite_fn()
+    genomes = random_genomes(n, seed)
+    be = estimate_batch(genomes, suite)
+    assert be.config_names == tuple(c.name for c in suite)
+    for gi, g in enumerate(genomes):
+        for ci, cfg in enumerate(suite):
+            assert_profiles_identical(be.profile(gi, ci), estimate(g, cfg))
+
+
+def test_estimate_batch_infeasible_lanes_match_scalar():
+    # loop-mode genomes on a 512k-token config: VMEM overflow, early return
+    genomes = random_genomes(6, seed=44, force_loop_mode=True)
+    suite = [LONG_SEQ, FAST_SUITE[0]]
+    be = estimate_batch(genomes, suite)
+    for gi, g in enumerate(genomes):
+        for ci, cfg in enumerate(suite):
+            assert_profiles_identical(be.profile(gi, ci), estimate(g, cfg))
+    assert not be.profile(0, 0).feasible
+    assert "VMEM overflow" in be.profile(0, 0).infeasible_reason
+
+
+def test_estimate_batch_profiles_dict_matches_suite():
+    genomes = random_genomes(3, seed=5)
+    be = estimate_batch(genomes, FAST_SUITE)
+    profs = be.profiles(1)
+    assert set(profs) == {"c4k", "w4k"}
+    assert_profiles_identical(profs["c4k"], estimate(genomes[1], FAST_SUITE[0]))
+
+
+# -- Scorer.score_batch: slate == scalar, ScoreVector for ScoreVector ---------
+
+
+def test_score_batch_bit_identical_to_score_uncached():
+    genomes = random_genomes(10, seed=7)
+    sb = Scorer(suite=FAST_SUITE, check_correctness=False)
+    ss = Scorer(suite=FAST_SUITE, check_correctness=False)
+    batch = sb.score_batch(genomes)
+    for sv, g in zip(batch, genomes):
+        ref = ss.score_uncached(g)
+        assert sv.config_names == ref.config_names
+        assert sv.values == ref.values
+        assert sv.correct == ref.correct
+        assert sv.failure == ref.failure
+        assert set(sv.profiles) == set(ref.profiles)
+        for name in sv.profiles:
+            assert_profiles_identical(sv.profiles[name], ref.profiles[name])
+    assert sb.n_evaluations == len(genomes)
+
+
+def test_score_batch_disabled_falls_back_to_scalar_loop():
+    assert batch_scoring_enabled()          # default-on
+    genomes = random_genomes(4, seed=9)
+    try:
+        set_batch_scoring(False)
+        assert not batch_scoring_enabled()
+        off = Scorer(suite=FAST_SUITE, check_correctness=False
+                     ).score_batch(genomes)
+    finally:
+        set_batch_scoring(True)
+    on = Scorer(suite=FAST_SUITE, check_correctness=False).score_batch(genomes)
+    for a, b in zip(off, on):
+        assert a.values == b.values and a.failure == b.failure
+
+
+def test_score_batch_empty_and_eval_seconds():
+    sc = Scorer(suite=FAST_SUITE, check_correctness=False)
+    assert sc.score_batch([]) == []
+    assert sc.cache.stats()["eval_seconds"] == {}
+    sc.score_batch(random_genomes(3, seed=1))
+    sc.score_uncached(seed_genome())
+    es = sc.cache.stats()["eval_seconds"]
+    assert set(es) == {"perfmodel"} and es["perfmodel"] > 0.0
+
+
+def test_record_eval_seconds_accumulates_per_fidelity():
+    cache = ScoreCache()
+    cache.record_eval_seconds("perfmodel", 0.25)
+    cache.record_eval_seconds("perfmodel", 0.25)
+    cache.record_eval_seconds("measured", 1.0)
+    assert cache.stats()["eval_seconds"] == {"perfmodel": 0.5, "measured": 1.0}
+
+
+# -- structure-keyed correctness memo -----------------------------------------
+
+
+def test_structural_key_collides_for_micro_variants_only():
+    sc = Scorer(suite=FAST_SUITE)
+    g = seed_genome()
+    # block_q 64/128/256 all clamp to proxy block 16 -> one structure
+    assert (sc.structural_key(g.with_(block_q=64))
+            == sc.structural_key(g.with_(block_q=128))
+            == sc.structural_key(g.with_(block_q=256)))
+    # a mode flip is a different kernel structure
+    assert (sc.structural_key(g)
+            != sc.structural_key(g.with_(rescale_mode="branchless")))
+    # same genome, different suite shapes or seed: never aliases
+    other = Scorer(suite=[BenchConfig("nc", 8, 16, 16, 4096, causal=False)])
+    assert sc.structural_key(g) != other.structural_key(g)
+    reseed = Scorer(suite=FAST_SUITE, rng_seed=1)
+    assert sc.structural_key(g) != reseed.structural_key(g)
+
+
+def test_memoized_check_runs_interpreter_once_per_structure(monkeypatch):
+    _CHECK_MEMO.clear()
+    calls = []
+
+    def fake_check(self, genome):
+        calls.append(genome.key())
+        return True, ""
+
+    monkeypatch.setattr(Scorer, "_check_uncached", fake_check)
+    sc = Scorer(suite=FAST_SUITE)
+    g = seed_genome()
+    slate = [g.with_(block_q=bq) for bq in (64, 128, 256)]   # one structure
+    for v in slate:
+        assert sc.check(v) == (True, "")
+    assert len(calls) == 1                    # collisions scored once
+    sc.check(g.with_(div_mode="deferred"))    # distinct structure: new run
+    assert len(calls) == 2
+    stats = correctness_memo_stats()
+    assert stats["hits"] == 2 and stats["misses"] == 2
+    assert stats["entries"] == 2
+    _CHECK_MEMO.clear()
+
+
+def test_memo_lru_bound_respected():
+    memo = _CorrectnessMemo(cap=3)
+    for i in range(10):
+        memo.put(("k", i), (True, ""))
+    assert len(memo) == 3
+    assert memo.get(("k", 9)) is not None     # newest survives
+    assert memo.get(("k", 0)) is None         # oldest evicted
+    assert memo.stats()["cap"] == 3
+    # re-put refreshes recency: ("k", 7) survives the next eviction
+    memo.put(("k", 7), (True, ""))
+    memo.put(("k", 10), (True, ""))
+    assert memo.get(("k", 7)) is not None
+
+
+def test_real_interpreter_check_memoizes_across_scorers():
+    _CHECK_MEMO.clear()
+    g = seed_genome()
+    s1 = Scorer(suite=FAST_SUITE)
+    s2 = Scorer(suite=FAST_SUITE)          # same structure key -> shared memo
+    ok1, why1 = s1.check(g)
+    ok2, why2 = s2.check(g)
+    assert ok1 and ok2 and why1 == why2 == ""
+    stats = correctness_memo_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 1
+    _CHECK_MEMO.clear()
+
+
+# -- lock-free evaluation counter ---------------------------------------------
+
+
+def test_eval_counter_exact_under_concurrency():
+    sc = Scorer(suite=FAST_SUITE, check_correctness=False)
+    g = seed_genome()
+    threads = [threading.Thread(
+        target=lambda: [sc.score_uncached(g) for _ in range(5)])
+        for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sc.n_evaluations == 40
+    # the read is non-consuming
+    assert sc.n_evaluations == 40
+
+
+# -- BatchScorer slate dispatch -----------------------------------------------
+
+
+def test_submit_many_dedups_and_matches_inline():
+    base = Scorer(suite=FAST_SUITE, check_correctness=False)
+    batch = BatchScorer(base, max_workers=4)
+    try:
+        genomes = random_genomes(8, seed=13)
+        slate = genomes + genomes[:3]               # duplicates share futures
+        futs = batch.submit_many(slate)
+        assert len(futs) == len(slate)
+        assert futs[0] is futs[len(genomes)]        # same key -> same future
+        ref = Scorer(suite=FAST_SUITE, check_correctness=False)
+        for f, g in zip(futs, slate):
+            assert f.result(timeout=30).values == ref.score_uncached(g).values
+        assert batch.n_evaluations == len(genomes)  # dups never re-paid
+    finally:
+        batch.close()
+
+
+def test_map_rides_batch_path_and_preserves_order():
+    base = Scorer(suite=FAST_SUITE, check_correctness=False)
+    batch = BatchScorer(base, max_workers=2)
+    try:
+        genomes = random_genomes(6, seed=17)
+        slate = [genomes[0], genomes[1], genomes[0]] + genomes[2:]
+        svs = batch.map(slate)
+        ref = Scorer(suite=FAST_SUITE, check_correctness=False)
+        for sv, g in zip(svs, slate):
+            assert sv.values == ref.score_uncached(g).values
+        assert batch.n_evaluations == len(genomes)
+        # a second map is pure cache hits
+        n = batch.n_evaluations
+        batch.map(slate)
+        assert batch.n_evaluations == n
+    finally:
+        batch.close()
