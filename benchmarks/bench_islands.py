@@ -1039,6 +1039,132 @@ def slate_smoke(args) -> int:
     return 0 if ok else 1
 
 
+def obs_smoke(args) -> int:
+    """The CI ``obs-smoke`` gate for the unified telemetry plane.  Three
+    gates, written to results/bench/obs.json:
+
+      overhead   the same seeded 2-island thread-backend run, obs off vs on
+                 (journal + spans + metrics live), best-of-3 each side
+                 interleaved: the enabled run must cost < 5% extra wall
+                 (with a 50 ms absolute floor so a sub-second run's timer
+                 noise can't fail the ratio) and commit the bit-identical
+                 lineage;
+      journal    the enabled run's journal is exact: one journal_open and
+                 exactly ``report.commits`` commit events for the seeded
+                 run — the journal is a record, not a sample;
+      stitching  a seeded 2-island service-backend run (2 localhost socket
+                 workers) with obs on commits the same lineage as obs off,
+                 and its journal holds at least one fully stitched eval
+                 trace (submit -> dispatch -> worker score -> harvest_wire).
+    """
+    from repro.core import Archipelago, obs
+    from repro.core.obs import report as obs_report
+
+    suite = [c for c in suite_by_name("mha") if c.seq_len == 4096]
+    steps = min(args.steps, 12)
+    print(f"== obs smoke: seeded 2-island runs, {steps} steps, "
+          f"{len(suite)}-config suite ==")
+
+    def run_engine(backend, enabled, run_root=None, run_id=None, **kw):
+        obs.set_enabled(enabled)
+        try:
+            if enabled and run_root is not None:
+                obs.ensure_journal(run_id=run_id, root=run_root)
+            eng = Archipelago(n_islands=2, suite=suite, migration_interval=2,
+                              seed=args.seed, backend=backend,
+                              check_correctness=False, **kw)
+            try:
+                t0 = time.perf_counter()
+                rep = eng.run(max_steps=steps)
+                wall = time.perf_counter() - t0
+                return wall, rep, lineage_fingerprint(eng)
+            finally:
+                eng.close()
+        finally:
+            obs.close_journal()
+            obs.set_enabled(False)
+
+    with tempfile.TemporaryDirectory() as runs_dir:
+        # -- gate 1: wall-clock overhead, off vs on, interleaved best-of-3 --
+        walls_off, walls_on = [], []
+        fp_off = fp_on = rep_on = None
+        journal = None
+        for i in range(3):
+            w, _, fp_off = run_engine("thread", False)
+            walls_off.append(w)
+            rid = f"obs-smoke-{i}"
+            w, rep_on, fp_on = run_engine("thread", True,
+                                          run_root=runs_dir, run_id=rid)
+            walls_on.append(w)
+            journal = os.path.join(runs_dir, rid, "journal.jsonl")
+        t_off, t_on = min(walls_off), min(walls_on)
+        overhead = (t_on - t_off) / t_off if t_off else 0.0
+        overhead_ok = overhead < 0.05 or (t_on - t_off) < 0.05
+        thread_identical = fp_off == fp_on
+        print(f"thread run: obs-off {t_off:.3f}s vs obs-on {t_on:.3f}s "
+              f"(overhead {overhead * 100:+.1f}%, < 5%: "
+              f"{'OK' if overhead_ok else 'FAILED'}); lineage identical: "
+              f"{'OK' if thread_identical else 'MISMATCH'}")
+
+        # -- gate 2: the journal is exact for the seeded run ----------------
+        events = obs_report.load_journal(journal)
+        summary = obs_report.summarize(events)
+        kinds = summary["kinds"]
+        journal_ok = (kinds.get("journal_open", 0) == 1
+                      and kinds.get("commit", 0) == rep_on.commits)
+        print(f"journal: {summary['events']} events "
+              f"({', '.join(f'{k}={n}' for k, n in kinds.items())}); "
+              f"commit events == {rep_on.commits} engine commits and one "
+              f"journal_open: {'OK' if journal_ok else 'FAILED'}")
+
+        # -- gate 3: cross-host stitching + lineage identity on the service -
+        _, _, fp_svc_off = run_engine("service", False, service_workers=2)
+        _, rep_svc, fp_svc_on = run_engine("service", True,
+                                           run_root=runs_dir,
+                                           run_id="obs-smoke-svc",
+                                           service_workers=2)
+        svc_journal = os.path.join(runs_dir, "obs-smoke-svc", "journal.jsonl")
+        svc_events = obs_report.load_journal(svc_journal)
+        svc_summary = obs_report.summarize(svc_events)
+        by_trace: dict = {}
+        for ev in svc_events:
+            if ev.get("trace") and ev.get("span"):
+                by_trace.setdefault(ev["trace"], set()).add(ev["span"])
+        stitched = sum(1 for spans in by_trace.values()
+                       if {"dispatch", "score", "harvest_wire"} <= spans)
+        service_identical = fp_svc_off == fp_svc_on
+        stitch_ok = stitched > 0 and service_identical
+        print(f"service run: {svc_summary['traces']} traces in the journal, "
+              f"{stitched} fully stitched submit->dispatch->score->"
+              f"harvest_wire ({'OK' if stitched else 'FAILED'}); lineage "
+              f"obs-off == obs-on: "
+              f"{'OK' if service_identical else 'MISMATCH'}")
+
+    ok = (overhead_ok and thread_identical and journal_ok and stitch_ok)
+    emit_json("obs", {
+        "steps": steps, "seed": args.seed,
+        "overhead": {"wall_off_s": t_off, "wall_on_s": t_on,
+                     "walls_off_s": walls_off, "walls_on_s": walls_on,
+                     "fraction": overhead},
+        "journal": {"events": summary["events"], "kinds": kinds,
+                    "engine_commits": rep_on.commits,
+                    "traces": summary["traces"]},
+        "service": {"traces": svc_summary["traces"],
+                    "stitched_traces": stitched,
+                    "events": svc_summary["events"],
+                    "kinds": svc_summary["kinds"],
+                    "engine_commits": rep_svc.commits},
+        "gates": {"overhead_under_5pct": overhead_ok,
+                  "thread_lineage_identical": thread_identical,
+                  "journal_exact": journal_ok,
+                  "service_stitched": stitched > 0,
+                  "service_lineage_identical": service_identical,
+                  "passed": ok},
+    })
+    print("obs smoke: " + ("PASSED" if ok else "FAILED"))
+    return 0 if ok else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=40,
@@ -1099,6 +1225,13 @@ def main(argv=None):
                          "identity across inline/thread/process/service; "
                          "writes results/bench/slate.json (the CI "
                          "slate-smoke step)")
+    ap.add_argument("--obs-smoke", action="store_true",
+                    help="run ONLY the telemetry-plane gates: obs-on "
+                         "overhead < 5% wall on the same seeded run (bit-"
+                         "identical lineage), an exact journal for the "
+                         "seeded 2-island run, and cross-host span "
+                         "stitching over the socket service; writes "
+                         "results/bench/obs.json (the CI obs-smoke step)")
     ap.add_argument("--gate", choices=("all", "deterministic"), default="all",
                     help="what the exit code enforces: 'deterministic' gates "
                          "resume identity, exact resumed-vs-uninterrupted "
@@ -1117,6 +1250,8 @@ def main(argv=None):
         return frontier_smoke(args)
     if args.slate_smoke:
         return slate_smoke(args)
+    if args.obs_smoke:
+        return obs_smoke(args)
     topologies = [t.strip() for t in args.topologies.split(",") if t.strip()]
     unknown = [t for t in topologies if t not in topology_names()]
     if unknown:

@@ -25,15 +25,18 @@ inherits warm modules instead of paying its own multi-second import.
 from __future__ import annotations
 
 import concurrent.futures
+import contextlib
 import importlib
 import multiprocessing
 import os
 import sys
 import threading
+import time
 from dataclasses import dataclass
 from typing import (Callable, Optional, Protocol, Sequence, Union,
                     runtime_checkable)
 
+from repro.core import obs
 from repro.core.evals.cache import PERFMODEL, ScoreCache, fidelity_key
 from repro.core.evals.scorer import (InlineBackend, Scorer,
                                      batch_scoring_enabled)
@@ -43,6 +46,9 @@ from repro.core.evals.worker import (EvalSpec, _prestart_noop, evaluate_frame,
                                      intern_spec, warm_worker)
 from repro.core.perfmodel import BenchConfig
 from repro.core.search_space import KernelGenome
+
+# reusable, reentrant no-op context (nullcontext is both) for un-traced paths
+_NULL_CTX = contextlib.nullcontext()
 
 
 # -- the backend registry ------------------------------------------------------
@@ -251,10 +257,25 @@ class BatchScorer:
             fut = self._futures.get(key)
             if fut is not None:
                 return fut
-            fut = self._executor.submit(self, genome)
+            fut = self._submit_call(genome)
             self._futures[key] = fut
         fut.add_done_callback(lambda f, key=key: self._drop_submitted(key))
+        if obs.enabled():
+            obs.span("submit", obs.current_trace(), backend="thread", n=1)
         return fut
+
+    def _submit_call(self, genome) -> concurrent.futures.Future:
+        """Dispatch one synchronous ``self(genome)`` onto the executor,
+        re-binding the submitter's trace in the scoring thread (trace ids are
+        thread-local, and executor threads are not the submitting thread)."""
+        if obs.enabled():
+            tr = obs.current_trace()
+
+            def call_traced(g=genome, tr=tr):
+                with obs.use_trace(tr):
+                    return self(g)
+            return self._executor.submit(call_traced)
+        return self._executor.submit(self, genome)
 
     def _drop_submitted(self, key: str) -> None:
         with self._lock:
@@ -296,7 +317,7 @@ class BatchScorer:
                 if key in self._inflight:
                     # a synchronous __call__ owns it: wait it out on the
                     # executor, exactly like submit() would
-                    fut = self._executor.submit(self, g)
+                    fut = self._submit_call(g)
                     self._futures[key] = fut
                     waiters.append((key, fut))
                     results.append(fut)
@@ -314,6 +335,7 @@ class BatchScorer:
             fut.add_done_callback(lambda f, key=key: self._drop_submitted(key))
         n = len(todo_g)
         if n:
+            tr = obs.current_trace() if obs.enabled() else None
             n_chunks = min(n, self.max_workers)
             for c in range(n_chunks):
                 lo, hi = c * n // n_chunks, (c + 1) * n // n_chunks
@@ -321,20 +343,24 @@ class BatchScorer:
                     continue
                 task = self._executor.submit(
                     self._run_batch_chunk, todo_g[lo:hi], todo_k[lo:hi],
-                    todo_f[lo:hi], todo_e[lo:hi])
+                    todo_f[lo:hi], todo_e[lo:hi], tr)
                 task.add_done_callback(
                     lambda t, k=todo_k[lo:hi], f=todo_f[lo:hi],
                     e=todo_e[lo:hi]: self._on_chunk_task_done(k, f, e, t))
+            if obs.enabled():
+                obs.span("submit", tr, backend="thread", n=n)
         return results
 
-    def _run_batch_chunk(self, genomes, keys, futs, events) -> None:
+    def _run_batch_chunk(self, genomes, keys, futs, events, tr=None) -> None:
         """One executor task scoring a whole chunk via ``score_batch``:
         cache the results, release the in-flight events (waiters re-read the
         cache), resolve the per-key futures.  On failure nothing is cached
         and the keys are evicted so later submits retry — the same contract
-        as the per-genome path."""
+        as the per-genome path.  ``tr`` re-binds the submitter's trace in
+        this executor thread so the chunk's score span stitches."""
         try:
-            svs = self.base.score_batch(genomes)
+            with obs.use_trace(tr) if tr is not None else _NULL_CTX:
+                svs = self.base.score_batch(genomes)
         except Exception as e:
             with self._lock:
                 for k in keys:
@@ -514,6 +540,7 @@ class ParentCacheBackend:
     never diverge between them."""
 
     overlapping = True
+    obs_name = "remote"     # span label; subclasses name their wire
 
     def __init__(self, spec: EvalSpec, cache: Optional[ScoreCache] = None):
         self.spec = spec
@@ -592,6 +619,9 @@ class ParentCacheBackend:
         # outside the lock: an already-completed future runs the callback
         # synchronously right here, and _on_done takes the lock itself
         fut.add_done_callback(lambda f, key=key: self._on_done(key, f))
+        if obs.enabled():
+            obs.span("submit", obs.current_trace(), backend=self.obs_name,
+                     n=1, rung=self.spec.fidelity)
         return fut
 
     def _on_done(self, key: str, fut: concurrent.futures.Future) -> None:
@@ -641,6 +671,9 @@ class ParentCacheBackend:
         # outside the lock: a completed future runs its callback synchronously
         for key, fut in zip(new_keys, dispatched):
             fut.add_done_callback(lambda f, key=key: self._on_done(key, f))
+        if new_keys and obs.enabled():
+            obs.span("submit", obs.current_trace(), backend=self.obs_name,
+                     n=len(new_keys), rung=self.spec.fidelity)
         return [futs[self.score_key(g)] for g in genomes]
 
     def __call__(self, genome: KernelGenome) -> ScoreVector:
@@ -709,13 +742,27 @@ class ProcessBackend(ParentCacheBackend):
         self._compact_wire = self._spec_id in getattr(
             self._executor, "warm_spec_ids", ())
 
+    obs_name = "process"
+
     def _dispatch_eval(self, genome: KernelGenome) -> concurrent.futures.Future:
         if self._compact_wire:
             # seed-only frame: tens of bytes on the queue vs ~560 for the
             # full (genome, spec) pickle — the cold-batch wire win
-            return self._executor.submit(
+            fut = self._executor.submit(
                 evaluate_frame, genome.to_edits(), self._spec_id)
-        return self._executor.submit(evaluate_genome, genome, self.spec)
+        else:
+            fut = self._executor.submit(evaluate_genome, genome, self.spec)
+        if obs.enabled():
+            # parent-side dispatch span: duration covers queue + worker
+            # scoring (the pool's wire does not ship worker timings back)
+            self._obs_dispatch_span(fut, obs.current_trace(), 1)
+        return fut
+
+    def _obs_dispatch_span(self, fut, tr, n) -> None:
+        t0 = time.perf_counter()
+        fut.add_done_callback(lambda f: obs.span(
+            "dispatch", tr, backend="process", n=n,
+            dur_s=time.perf_counter() - t0, rung=self.spec.fidelity))
 
     def _dispatch_eval_many(self, genomes: Sequence[KernelGenome]) -> list:
         """Columnar dispatch: the deduped batch ships as up to
@@ -731,11 +778,14 @@ class ProcessBackend(ParentCacheBackend):
         entries = [(g.to_edits(), self._spec_id) for g in genomes]
         futs = [concurrent.futures.Future() for _ in genomes]
         n, n_chunks = len(entries), min(len(entries), self.max_workers)
+        traced = obs.enabled()
         for c in range(n_chunks):
             lo, hi = c * n // n_chunks, (c + 1) * n // n_chunks
             if lo == hi:
                 continue
             task = self._executor.submit(evaluate_frame_many, entries[lo:hi])
+            if traced:
+                self._obs_dispatch_span(task, obs.current_trace(), hi - lo)
             task.add_done_callback(
                 lambda t, chunk=futs[lo:hi]: _fan_out_chunk(t, chunk))
         return futs

@@ -15,9 +15,11 @@ rungs ever aliasing each other.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 from typing import Optional
 
+from repro.core import obs
 from repro.core.evals.vector import ScoreVector
 
 # the evaluation-cascade fidelity ladder, cheapest rung first.  Defined here
@@ -52,24 +54,52 @@ def key_fidelity(key: str) -> str:
     return fid if sep and fid in FIDELITIES else PERFMODEL
 
 
+# per-instance registry label: the metrics registry is process-global and
+# caches are many (one per suite per engine), so each cache gets a distinct
+# label instead of all aliasing one counter
+_CACHE_IDS = itertools.count()
+
+
 class ScoreCache:
-    """Thread-safe ``key -> ScoreVector`` memo with hit/miss accounting."""
+    """Thread-safe ``key -> ScoreVector`` memo with hit/miss accounting.
+
+    The hit/miss counters live in the process metrics registry
+    (``obs.REGISTRY``) labelled per cache instance; ``self.hits`` /
+    ``self.misses`` stay readable (and settable) exactly as before — the
+    legacy surface is now a view of the registry."""
 
     def __init__(self):
         self._lock = threading.Lock()
         self._data: dict[str, ScoreVector] = {}
-        self.hits = 0
-        self.misses = 0
+        cid = f"c{next(_CACHE_IDS)}"
+        self._m_hits = obs.REGISTRY.counter("score_cache_hits", cache=cid)
+        self._m_misses = obs.REGISTRY.counter("score_cache_misses", cache=cid)
         self._eval_seconds: dict[str, float] = {}
+
+    @property
+    def hits(self) -> int:
+        return self._m_hits.value
+
+    @hits.setter
+    def hits(self, v: int) -> None:
+        self._m_hits.value = v
+
+    @property
+    def misses(self) -> int:
+        return self._m_misses.value
+
+    @misses.setter
+    def misses(self, v: int) -> None:
+        self._m_misses.value = v
 
     def get(self, key: str) -> Optional[ScoreVector]:
         """Counted lookup: increments ``hits`` or ``misses``."""
         with self._lock:
             sv = self._data.get(key)
             if sv is None:
-                self.misses += 1
+                self._m_misses.inc()
             else:
-                self.hits += 1
+                self._m_hits.inc()
             return sv
 
     def peek(self, key: str) -> Optional[ScoreVector]:

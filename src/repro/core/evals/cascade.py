@@ -31,6 +31,7 @@ from __future__ import annotations
 import concurrent.futures
 from typing import Optional, Sequence
 
+from repro.core import obs
 from repro.core.evals.backends import make_backend, register_backend
 from repro.core.evals.cache import (FIDELITIES, HLO, MEASURED, PERFMODEL,
                                     ScoreCache)
@@ -212,6 +213,13 @@ class CascadeBackend:
                                          _geomean_or_zero(sv2))
         log["calibration"] = self.calibration.state()
         self.last_run = log
+        if obs.enabled():
+            # one promotion event per pass: slate size and the per-rung paid
+            # evaluation counts — the journal's view of where cascade budget
+            # went (promotion decisions themselves ride the engine payload)
+            obs.publish("cascade_promote", trace=obs.current_trace(),
+                        slate=log["slate"],
+                        evals={k: v for k, v in log["evals"].items() if v})
         return log
 
 

@@ -29,6 +29,7 @@ import threading
 import time
 from typing import Callable, Optional, Sequence
 
+from repro.core import obs
 from repro.core.evals.worker import (EvalSpec, _prestart_noop, intern_spec,
                                      warm_worker)
 
@@ -233,12 +234,20 @@ class ElasticProcessPool:
             self.resize_events.append({
                 "event": "grow", "workers": len(self._slots),
                 "queue_depth": len(self._pending), "why": reason})
+            if obs.enabled():
+                # the pool's resize log, mirrored onto the process event bus
+                # (journal + ring) with its structured reason
+                obs.publish("pool_grow", workers=len(self._slots),
+                            queue_depth=len(self._pending), why=reason)
 
     def _retire_slot_locked(self, slot: _Slot, reason: str) -> None:
         self._slots.remove(slot)
         self.resize_events.append({
             "event": "shrink", "workers": len(self._slots),
             "queue_depth": len(self._pending), "why": reason})
+        if obs.enabled():
+            obs.publish("pool_shrink", workers=len(self._slots),
+                        queue_depth=len(self._pending), why=reason)
         # never block the caller on a worker teardown
         threading.Thread(target=slot.executor.shutdown,
                          kwargs=dict(wait=False), daemon=True).start()

@@ -16,7 +16,9 @@ safely shared across rungs, since it stores only the genome payload.
 Frame types (the ``"type"`` key of every message):
 
   hello      worker -> coordinator  registration: name, slots (capacity),
-                                    host (enables the same-host shm path)
+                                    host (enables the same-host shm path),
+                                    trace (understands eval-lifecycle trace
+                                    maps; see below)
   welcome    coordinator -> worker  assigned worker id, heartbeat interval,
                                     and the specs to pre-warm scorers for
   warm       coordinator -> worker  additional specs registered later
@@ -32,7 +34,8 @@ Frame types (the ``"type"`` key of every message):
                                     sid) for a same-host shared-memory ref;
                                     specs/shm repeat un-acked announcements
                                     (idempotent worker-side)
-  result     worker -> coordinator  {id, ok, value | error}
+  result     worker -> coordinator  {id, ok, value | error}; may carry
+                                    ``spans`` (below)
   shm_ok     worker -> coordinator  worker attached the shm segments named
                                     in a tasks frame (same-host fast path
                                     confirmed usable)
@@ -52,6 +55,18 @@ legacy workers never send ``role``, so PR 6 worker binaries are untouched):
   job_event   frontier -> client    {job, kind, t, data}: lineage commits,
                                     budget spend, completion, ... — the
                                     streamed lifecycle of a submitted job
+
+Eval-lifecycle tracing (``repro.core.obs``) rides the same capability
+negotiation as compact/shm: a worker that sends ``trace: True`` in HELLO may
+receive an optional ``trace`` field on task/tasks frames — a ``{task id:
+(trace id, attempt)}`` map naming which assignments belong to a traced
+evaluation — and piggybacks ``spans`` (a tuple of ``{span, dur_s, ...}``
+dicts timing deserialize/score on that host) on the corresponding RESULT
+frames, which the coordinator stitches onto the submitter's trace.  A worker
+that never advertises ``trace`` (any pre-trace binary) receives frames
+byte-identical to the old wire and replies exactly as before — tracing is
+negotiated, never assumed, and carries no scoring payload, so it cannot
+perturb results.
 
 Transport security: frames are pickles, so the listener must only ever be
 reachable by trusted workers (loopback, or a private cluster network) — the

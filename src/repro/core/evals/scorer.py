@@ -34,7 +34,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core import perfmodel
+from repro.core import obs, perfmodel
 from repro.core.evals.cache import (FIDELITIES, HLO, MEASURED, PERFMODEL,
                                     ScoreCache, fidelity_key)
 from repro.core.evals.vector import ScoreVector
@@ -327,31 +327,41 @@ class Scorer:
         backends manage the cache themselves and call this directly)."""
         t0 = time.perf_counter()
         try:
-            next(self._eval_count)
-            if self.service_latency_s > 0:
-                time.sleep(self.service_latency_s)
-
-            if self.check_correctness:
-                ok, why = self.check(genome)
-                if not ok:
-                    return ScoreVector(tuple(c.name for c in self.suite),
-                                       tuple(0.0 for _ in self.suite), False,
-                                       why)
-
-            if self.fidelity == HLO:
-                values, profiles = self._hlo_values(genome)
-            elif self.fidelity == MEASURED:
-                values, profiles = self._measured_values(genome)
-            else:
-                values, profiles = [], {}
-                for cfg in self.suite:
-                    p = estimate(genome, cfg)
-                    profiles[cfg.name] = p
-                    values.append(p.tflops if p.feasible else 0.0)
-            return self._assemble(values, profiles)
+            return self._score_uncached_inner(genome)
         finally:
-            self.cache.record_eval_seconds(self.fidelity,
-                                           time.perf_counter() - t0)
+            dur = time.perf_counter() - t0
+            self.cache.record_eval_seconds(self.fidelity, dur)
+            if obs.enabled():
+                # the lifecycle "score" span: inline scoring inherits the
+                # harvest walk's thread-local trace; thread-backend chunks
+                # run under the submitting thread's trace (re-bound by
+                # BatchScorer); service workers measure their own spans
+                obs.span("score", obs.current_trace(), dur_s=dur,
+                         rung=self.fidelity, n=1)
+
+    def _score_uncached_inner(self, genome: KernelGenome) -> ScoreVector:
+        next(self._eval_count)
+        if self.service_latency_s > 0:
+            time.sleep(self.service_latency_s)
+
+        if self.check_correctness:
+            ok, why = self.check(genome)
+            if not ok:
+                return ScoreVector(tuple(c.name for c in self.suite),
+                                   tuple(0.0 for _ in self.suite), False,
+                                   why)
+
+        if self.fidelity == HLO:
+            values, profiles = self._hlo_values(genome)
+        elif self.fidelity == MEASURED:
+            values, profiles = self._measured_values(genome)
+        else:
+            values, profiles = [], {}
+            for cfg in self.suite:
+                p = estimate(genome, cfg)
+                profiles[cfg.name] = p
+                values.append(p.tflops if p.feasible else 0.0)
+        return self._assemble(values, profiles)
 
     def score_batch(self, genomes: Sequence[KernelGenome]) -> list[ScoreVector]:
         """Batched :meth:`score_uncached`: pay the evaluation cost for every
@@ -399,8 +409,11 @@ class Scorer:
                     out[i] = self._assemble(values, profiles)
             return out
         finally:
-            self.cache.record_eval_seconds(self.fidelity,
-                                           time.perf_counter() - t0)
+            dur = time.perf_counter() - t0
+            self.cache.record_eval_seconds(self.fidelity, dur)
+            if obs.enabled():
+                obs.span("score", obs.current_trace(), dur_s=dur,
+                         rung=self.fidelity, n=len(genomes))
 
     def _assemble(self, values, profiles) -> ScoreVector:
         """The common ScoreVector assembly of both scoring paths (identical

@@ -86,6 +86,7 @@ from collections import deque
 from multiprocessing import shared_memory
 from typing import Callable, Optional, Sequence, Union
 
+from repro.core import obs
 from repro.core.evals import protocol
 from repro.core.evals.backends import ParentCacheBackend, register_backend
 from repro.core.evals.cache import ScoreCache
@@ -99,22 +100,38 @@ __all__ = ["ClientSession", "EvalCoordinator", "ServiceBackend",
 
 DEFAULT_TENANT = ""
 
+# per-coordinator registry label (the metrics registry is process-global and
+# coordinators are many across a test session)
+_COORD_IDS = itertools.count()
+
 
 class _Tenant:
     """Per-tenant scheduling state: a FIFO of pending tasks plus the grant
-    accounting the weighted-fair scheduler and ``stats()`` read."""
+    accounting the weighted-fair scheduler and ``stats()`` read.
+
+    The grant counters are registry instruments (``obs.REGISTRY``) labelled
+    by coordinator + tenant — the per-tenant demand signal the ROADMAP's
+    market-priced-slots item needs.  The scheduler reads ``granted.value``,
+    which counts identically to the old plain int, so grant traces are
+    unchanged."""
 
     __slots__ = ("tid", "weight", "queue", "submitted", "granted",
                  "granted_contended", "completed")
 
-    def __init__(self, tid: str, weight: float = 1.0):
+    def __init__(self, tid: str, weight: float = 1.0, coord: str = "c?"):
         self.tid = tid
         self.weight = max(float(weight), 1e-9)
         self.queue: deque[dict] = deque()
-        self.submitted = 0
-        self.granted = 0            # slot grants (dispatches incl. retries)
-        self.granted_contended = 0  # grants while >= 2 tenants were queued
-        self.completed = 0
+        reg = obs.REGISTRY
+        self.submitted = reg.counter("tenant_submitted",
+                                     coord=coord, tenant=tid)
+        # slot grants (dispatches incl. retries)
+        self.granted = reg.counter("tenant_granted", coord=coord, tenant=tid)
+        # grants while >= 2 tenants were queued
+        self.granted_contended = reg.counter("tenant_granted_contended",
+                                             coord=coord, tenant=tid)
+        self.completed = reg.counter("tenant_completed",
+                                     coord=coord, tenant=tid)
 
 
 class _RemoteWorker:
@@ -122,12 +139,13 @@ class _RemoteWorker:
 
     __slots__ = ("wid", "name", "slots", "reader", "writer", "queue",
                  "sender", "conn_task", "in_flight", "last_seen", "alive",
-                 "host", "compact", "shm_ok", "specs_known", "segments_known")
+                 "host", "compact", "shm_ok", "specs_known", "segments_known",
+                 "trace")
 
     def __init__(self, wid: int, name: str, slots: int,
                  reader: asyncio.StreamReader, writer: asyncio.StreamWriter, *,
                  host: Optional[str] = None, compact: bool = False,
-                 wants_shm: bool = False):
+                 wants_shm: bool = False, trace: bool = False):
         self.wid = wid
         self.name = name
         self.slots = max(1, slots)
@@ -144,6 +162,10 @@ class _RemoteWorker:
         # full-payload frames forever — capability is negotiated, not assumed.
         self.host = host                     # for the same-host shm fast path
         self.compact = compact               # understands batched tasks frames
+        # understands the optional per-frame trace map and ships spans back
+        # on results (negotiated exactly like compact/shm: a worker that
+        # does not advertise it never sees a trace field)
+        self.trace = trace
         # None = shm untried (use optimistically), False = failed, disabled
         self.shm_ok: Optional[bool] = None if wants_shm else False
         # announcements already enqueued ahead of any frame that would need
@@ -273,11 +295,28 @@ class EvalCoordinator:
         self._next_tid = itertools.count()
         self._closed = False
         self.peak_workers = 0
-        self.tasks_submitted = 0
-        self.tasks_completed = 0
-        self.tasks_requeued = 0
-        self.granted_contended = 0
-        self.events: list[dict] = []
+        # lifecycle counters live in the process metrics registry, labelled
+        # per coordinator; ``stats()`` is now a read of the registry.  These
+        # attributes hold the Counter instruments (internal call sites use
+        # .inc(); nothing outside this module read the raw ints).
+        self.obs_id = f"c{next(_COORD_IDS)}"
+        reg = obs.REGISTRY
+        self.tasks_submitted = reg.counter("coord_tasks_submitted",
+                                           coord=self.obs_id)
+        self.tasks_completed = reg.counter("coord_tasks_completed",
+                                           coord=self.obs_id)
+        self.tasks_requeued = reg.counter("coord_tasks_requeued",
+                                          coord=self.obs_id)
+        self.granted_contended = reg.counter("coord_granted_contended",
+                                             coord=self.obs_id)
+        # join/leave totals are counters, not ring scans: the event window
+        # below is bounded, so derived counts must not depend on it
+        self._m_joined = reg.counter("coord_workers_joined", coord=self.obs_id)
+        self._m_left = reg.counter("coord_workers_left", coord=self.obs_id)
+        # bounded join/leave/requeue window (a long frontier run used to grow
+        # this list without limit); list-attribute reads keep working as views
+        self.events = obs.EventRing(
+            cap=int(os.environ.get("REPRO_OBS_EVENT_CAP", obs.DEFAULT_CAP)))
         # frontier hooks: called on the EVENT LOOP thread for every frame a
         # client session sends / when one disconnects — handlers must not block
         self.on_client_msg: Optional[Callable[[ClientSession, dict], None]] \
@@ -358,12 +397,12 @@ class EvalCoordinator:
                                    for t in self._tenants.values()),
                 "in_flight": sum(len(w.in_flight)
                                  for w in self._workers.values()),
-                "tasks_submitted": self.tasks_submitted,
-                "tasks_completed": self.tasks_completed,
-                "tasks_requeued": self.tasks_requeued,
-                "granted_contended": self.granted_contended,
-                "joined": sum(1 for e in self.events if e["event"] == "join"),
-                "left": sum(1 for e in self.events if e["event"] == "leave"),
+                "tasks_submitted": self.tasks_submitted.value,
+                "tasks_completed": self.tasks_completed.value,
+                "tasks_requeued": self.tasks_requeued.value,
+                "granted_contended": self.granted_contended.value,
+                "joined": self._m_joined.value,
+                "left": self._m_left.value,
                 "wire_task_bytes": self.wire_task_bytes,
                 "wire_tasks_sent": self.wire_tasks_sent,
                 "wire_bytes_per_task": (self.wire_task_bytes /
@@ -376,12 +415,14 @@ class EvalCoordinator:
                 "clients": len(self._clients),
                 "tenants": {t.tid: {"weight": t.weight,
                                     "queued": len(t.queue),
-                                    "submitted": t.submitted,
-                                    "granted": t.granted,
-                                    "granted_contended": t.granted_contended,
-                                    "completed": t.completed}
+                                    "submitted": t.submitted.value,
+                                    "granted": t.granted.value,
+                                    "granted_contended":
+                                        t.granted_contended.value,
+                                    "completed": t.completed.value}
                             for t in self._tenants.values()},
                 "events": list(self.events),
+                "events_dropped": self.events.dropped,
             }
 
     def wait_for_workers(self, n: int, timeout: Optional[float] = None) -> bool:
@@ -418,7 +459,7 @@ class EvalCoordinator:
     def _tenant_locked(self, tid: str) -> _Tenant:
         t = self._tenants.get(tid)
         if t is None:
-            t = self._tenants[tid] = _Tenant(tid)
+            t = self._tenants[tid] = _Tenant(tid, coord=self.obs_id)
         return t
 
     def set_tenant_weight(self, tenant: str, weight: float) -> None:
@@ -452,13 +493,19 @@ class EvalCoordinator:
                     w.specs_known.add(sid)
 
     def submit(self, spec: EvalSpec, genome: KernelGenome, *,
-               tenant: str = DEFAULT_TENANT) -> concurrent.futures.Future:
-        return self.submit_many(spec, (genome,), tenant=tenant)[0]
+               tenant: str = DEFAULT_TENANT,
+               trace: Optional[str] = None) -> concurrent.futures.Future:
+        return self.submit_many(spec, (genome,), tenant=tenant,
+                                trace=trace)[0]
 
     def submit_many(self, spec: EvalSpec, genomes: Sequence[KernelGenome], *,
-                    tenant: str = DEFAULT_TENANT) -> list:
+                    tenant: str = DEFAULT_TENANT,
+                    trace: Optional[str] = None) -> list:
         """Queue a batch under one lock pass; the whole batch rides to each
-        assigned worker in one ``tasks`` frame (see :meth:`_dispatch`)."""
+        assigned worker in one ``tasks`` frame (see :meth:`_dispatch`).
+        ``trace`` tags every task with the submitter's eval-lifecycle trace
+        id; ``attempt`` counts dispatches (a death-requeue increments it, so
+        a retried eval's spans show both attempts)."""
         sid = intern_spec(spec)
         futs: list[concurrent.futures.Future] = []
         with self._lock:
@@ -469,9 +516,10 @@ class EvalCoordinator:
                 fut: concurrent.futures.Future = concurrent.futures.Future()
                 t.queue.append({"id": next(self._next_tid), "spec": spec,
                                 "sid": sid, "genome": genome,
-                                "tenant": tenant, "future": fut})
-                t.submitted += 1
-                self.tasks_submitted += 1
+                                "tenant": tenant, "future": fut,
+                                "trace": trace, "attempt": 0})
+                t.submitted.inc()
+                self.tasks_submitted.inc()
                 futs.append(fut)
         self._call_soon(self._dispatch)
         return futs
@@ -486,6 +534,7 @@ class EvalCoordinator:
         Frames are encoded here and enqueued on each worker's sender queue;
         enqueue cannot fail, so a send failure surfaces in the sender
         coroutine as a worker death (requeue + re-dispatch), never here."""
+        traced: list[tuple] = []
         with self._lock:
             if self._closed:
                 return
@@ -501,7 +550,8 @@ class EvalCoordinator:
                 contended = len(queued) >= 2
                 # weighted fair share: grant the slot to the queued tenant
                 # with the lowest granted/weight (tenant id breaks ties)
-                t = min(queued, key=lambda t: (t.granted / t.weight, t.tid))
+                t = min(queued,
+                        key=lambda t: (t.granted.value / t.weight, t.tid))
                 task = t.queue.popleft()
                 if task["future"].cancelled():
                     continue
@@ -509,10 +559,10 @@ class EvalCoordinator:
                 w = min(free, key=lambda w: (len(w.in_flight) / w.slots,
                                              w.wid))
                 w.in_flight[task["id"]] = task
-                t.granted += 1
+                t.granted.inc()
                 if contended:
-                    t.granted_contended += 1
-                    self.granted_contended += 1
+                    t.granted_contended.inc()
+                    self.granted_contended.inc()
                 grouped.setdefault(w.wid, (w, []))[1].append(task)
             for w, tasks in grouped.values():
                 frames, sids, segs = self._encode_tasks_locked(w, tasks)
@@ -526,6 +576,16 @@ class EvalCoordinator:
                 self.wire_tasks_sent += len(tasks)
                 w.specs_known |= sids
                 w.segments_known |= segs
+                for task in tasks:
+                    if task.get("trace"):
+                        traced.append((task["trace"], task["attempt"],
+                                       w.name, task["tenant"]))
+        if traced and obs.enabled():
+            # one dispatch span per (task, attempt), published outside the
+            # lock: a SIGKILLed eval's trace shows every attempt
+            for tr, attempt, wname, tenant in traced:
+                obs.span("dispatch", tr, worker=wname, attempt=attempt,
+                         tenant=tenant)
 
     def _enqueue_locked(self, w: _RemoteWorker, msg: dict) -> int:
         """Encode one frame onto a worker's sender queue; returns its exact
@@ -543,8 +603,17 @@ class EvalCoordinator:
         workers get one full-payload frame per task.  Returns the frames and
         the announced spec ids / segment names (confirmed at enqueue)."""
         if not w.compact:
-            return ([{"type": protocol.TASK, "id": t["id"], "spec": t["spec"],
-                      "genome": t["genome"]} for t in tasks], set(), set())
+            # a worker that never advertised ``trace`` in HELLO gets frames
+            # byte-identical to the pre-trace protocol (same negotiation
+            # contract as compact/shm: legacy binaries are untouched)
+            frames = []
+            for t in tasks:
+                frame = {"type": protocol.TASK, "id": t["id"],
+                         "spec": t["spec"], "genome": t["genome"]}
+                if w.trace and t.get("trace"):
+                    frame["trace"] = {t["id"]: (t["trace"], t["attempt"])}
+                frames.append(frame)
+            return (frames, set(), set())
         use_shm = (w.host == self._hostname and w.shm_ok is not False
                    and not self._shm_broken)
         entries, need_specs, need_segs = [], {}, set()
@@ -558,9 +627,12 @@ class EvalCoordinator:
                     if self._shm_store is None:
                         self._shm_store = _ShmGenomeStore()
                     seg, off, ln = self._shm_store.put(t["genome"])
-                except OSError:
+                except OSError as e:
                     self._shm_broken = True     # no usable /dev/shm: fall back
                     use_shm = False
+                    if obs.enabled():
+                        obs.publish("shm_broken", coord=self.obs_id,
+                                    reason=f"{type(e).__name__}: {e}")
                 else:
                     payload = ("shm", seg, off, ln, sid)
                     if seg not in w.segments_known:
@@ -573,6 +645,11 @@ class EvalCoordinator:
             frame["specs"] = tuple(need_specs.items())
         if need_segs:
             frame["shm"] = tuple(need_segs)
+        if w.trace:
+            tmap = {t["id"]: (t["trace"], t["attempt"])
+                    for t in tasks if t.get("trace")}
+            if tmap:
+                frame["trace"] = tmap
         return ([frame], set(need_specs), need_segs)
 
     # -- connection handling (loop thread) -------------------------------------------
@@ -620,7 +697,8 @@ class EvalCoordinator:
                               int(hello.get("slots", 1)), reader, writer,
                               host=hello.get("host"),
                               compact=bool(hello.get("compact")),
-                              wants_shm=bool(hello.get("shm")))
+                              wants_shm=bool(hello.get("shm")),
+                              trace=bool(hello.get("trace")))
             w.conn_task = asyncio.current_task()
             # WELCOME is enqueued before the worker becomes dispatchable, in
             # the same critical section — queue FIFO order guarantees no
@@ -635,10 +713,14 @@ class EvalCoordinator:
             w.specs_known |= {sid for sid, _ in specs_sent}
             self._workers[wid] = w
             self.peak_workers = max(self.peak_workers, len(self._workers))
+            self._m_joined.inc()
             self.events.append({"event": "join", "worker": w.name,
                                 "slots": w.slots,
                                 "workers": len(self._workers)})
             self._roster.notify_all()
+        if obs.enabled():
+            obs.publish("join", worker=w.name, coord=self.obs_id,
+                        slots=w.slots, trace_capable=w.trace)
         w.sender = self._loop.create_task(self._sender_loop(w))
         self._dispatch()
         while True:
@@ -733,21 +815,36 @@ class EvalCoordinator:
                 w.shm_ok = False
                 w.segments_known.clear()
                 if task is not None:
+                    task["attempt"] += 1
                     self._tenant_locked(task["tenant"]).queue.appendleft(task)
-                    self.tasks_requeued += 1
+                    self.tasks_requeued.inc()
                     self.events.append({"event": "requeue", "worker": w.name,
                                         "tasks": 1,
                                         "workers": len(self._workers),
                                         "why": "shm"})
+            if task is not None and obs.enabled():
+                obs.publish("shm_failure", worker=w.name, coord=self.obs_id,
+                            reason="worker could not attach/read shm payload",
+                            trace=task.get("trace"))
             self._dispatch()
             return
         with self._lock:
             task = w.in_flight.pop(msg["id"], None)
             if task is not None:
-                self.tasks_completed += 1
-                self._tenant_locked(task["tenant"]).completed += 1
+                self.tasks_completed.inc()
+                self._tenant_locked(task["tenant"]).completed.inc()
         if task is None:
             return        # task was requeued past this worker; stale result
+        if task.get("trace") and obs.enabled():
+            # worker-side spans piggyback on the RESULT frame; re-publish
+            # them here stitched onto the task's trace so one journal holds
+            # the whole eval lifecycle across hosts
+            for sp in msg.get("spans", ()):
+                obs.span(sp.get("span", "?"), task["trace"], worker=w.name,
+                         attempt=task["attempt"],
+                         **{k: v for k, v in sp.items() if k != "span"})
+            obs.span("harvest_wire", task["trace"], worker=w.name,
+                     attempt=task["attempt"], ok=bool(msg.get("ok")))
         fut = task["future"]
         try:
             if msg.get("ok"):
@@ -779,14 +876,25 @@ class EvalCoordinator:
             # front of the tenant's queue, original order: requeued work must
             # not queue behind speculation submitted after it
             for task in reversed(orphans):
+                task["attempt"] += 1
                 self._tenant_locked(task["tenant"]).queue.appendleft(task)
-            self.tasks_requeued += len(orphans)
+            self.tasks_requeued.inc(len(orphans))
+            self._m_left.inc()
             self.events.append({"event": "leave", "worker": w.name,
                                 "workers": len(self._workers), "why": why})
             if orphans:
                 self.events.append({"event": "requeue", "worker": w.name,
                                     "tasks": len(orphans),
                                     "workers": len(self._workers)})
+            requeued_traces = [(t["trace"], t["attempt"]) for t in orphans
+                               if t.get("trace")]
+        if obs.enabled():
+            obs.publish("leave", worker=w.name, coord=self.obs_id, why=why)
+            # each orphan's NEW attempt number: the next dispatch span for
+            # this trace carries it, so a SIGKILLed eval shows both attempts
+            for tr, attempt in requeued_traces:
+                obs.span("requeue", tr, worker=w.name, attempt=attempt,
+                         why=why)
         for task in to_cancel:
             task["future"].cancel()
         if w.sender is not None:
@@ -894,6 +1002,9 @@ def _worker_env() -> dict:
     # spawned workers inherit the parent's batch-scoring setting, so a
     # whole fleet A/Bs (or rolls back) the columnar path with one switch
     env["REPRO_BATCH_SCORING"] = "1" if batch_scoring_enabled() else "0"
+    # same switch semantics for observability: a fleet's workers trace
+    # exactly when the parent does
+    env["REPRO_OBS"] = "1" if obs.enabled() else "0"
     return env
 
 
@@ -990,18 +1101,23 @@ class ServiceBackend(ParentCacheBackend):
         """Current fleet capacity in slots (reports/JSON; live, not static)."""
         return self.coordinator.total_slots
 
+    obs_name = "service"
+
     def _dispatch_eval(self, genome: KernelGenome) -> concurrent.futures.Future:
         """One task on the wire.  ``n_evaluations`` counts these dispatches;
         a dead worker's requeues are coordinator-internal, not re-counted."""
-        return self.coordinator.submit(self.spec, genome, tenant=self.tenant)
+        return self.coordinator.submit(
+            self.spec, genome, tenant=self.tenant,
+            trace=obs.current_trace() if obs.enabled() else None)
 
     def _dispatch_eval_many(self, genomes: Sequence[KernelGenome]) -> list:
         """A whole deduped batch in one coordinator pass — the tasks travel
         to each assigned worker in a single batched frame instead of
         len(batch) round trips (``map``/``prefetch`` land here via
         ``ParentCacheBackend.submit_many``)."""
-        return self.coordinator.submit_many(self.spec, genomes,
-                                            tenant=self.tenant)
+        return self.coordinator.submit_many(
+            self.spec, genomes, tenant=self.tenant,
+            trace=obs.current_trace() if obs.enabled() else None)
 
     def _close_resources(self) -> None:
         """A shared coordinator is left running for its other backends."""

@@ -46,6 +46,7 @@ import concurrent.futures
 import pickle
 import socket
 import threading
+import time
 from multiprocessing import shared_memory
 from typing import Optional, Sequence
 
@@ -125,12 +126,21 @@ class EvalServiceWorker:
             self._send({"type": protocol.SHM_OK, "segments": (seg_name,)})
         return pickle.loads(bytes(seg.buf[off:off + ln]))
 
-    def _evaluate(self, task_id: int, spec: EvalSpec, genome) -> None:
-        """Legacy full-payload task frame."""
+    def _evaluate(self, task_id: int, spec: EvalSpec, genome,
+                  traced: bool = False) -> None:
+        """Legacy full-payload task frame.  ``traced`` tasks time the score
+        and piggyback the span on the RESULT frame (the coordinator stitches
+        it onto the submitter's trace) — untraced tasks pay nothing and their
+        frames stay byte-identical to the pre-trace wire."""
         try:
+            t0 = time.perf_counter() if traced else 0.0
             sv = evaluate_genome(genome, spec)
             msg = {"type": protocol.RESULT, "id": task_id, "ok": True,
                    "value": sv}
+            if traced:
+                msg["spans"] = ({"span": "score",
+                                 "dur_s": round(time.perf_counter() - t0, 6),
+                                 "rung": getattr(spec, "fidelity", None)},)
         except Exception as e:            # deterministic failure: report, not retry
             msg = {"type": protocol.RESULT, "id": task_id, "ok": False,
                    "error": f"{type(e).__name__}: {e}"}
@@ -139,9 +149,11 @@ class EvalServiceWorker:
         except OSError:
             self._stop.set()              # coordinator gone: wind down
 
-    def _evaluate_entry(self, task_id: int, payload: tuple) -> None:
+    def _evaluate_entry(self, task_id: int, payload: tuple,
+                        traced: bool = False) -> None:
         """One assignment from a batched ``tasks`` frame."""
         try:
+            t0 = time.perf_counter() if traced else 0.0
             if payload[0] == "shm":
                 _, seg_name, off, ln, sid = payload
                 try:
@@ -154,12 +166,19 @@ class EvalServiceWorker:
             else:
                 _, edits, sid = payload
                 genome = KernelGenome.from_edits(edits)
+            t1 = time.perf_counter() if traced else 0.0
             spec = self._specs.get(sid)
             if spec is None:
                 raise RuntimeError(f"task references unannounced spec id {sid}")
             sv = _scorer_for(spec).score_uncached(genome)
             msg = {"type": protocol.RESULT, "id": task_id, "ok": True,
                    "value": sv}
+            if traced:
+                t2 = time.perf_counter()
+                msg["spans"] = (
+                    {"span": "deserialize", "dur_s": round(t1 - t0, 6)},
+                    {"span": "score", "dur_s": round(t2 - t1, 6),
+                     "rung": getattr(spec, "fidelity", None)})
         except Exception as e:
             msg = {"type": protocol.RESULT, "id": task_id, "ok": False,
                    "error": f"{type(e).__name__}: {e}"}
@@ -168,7 +187,8 @@ class EvalServiceWorker:
         except OSError:
             self._stop.set()
 
-    def _evaluate_frame_batch(self, entries: Sequence) -> None:
+    def _evaluate_frame_batch(self, entries: Sequence,
+                              traced_ids: frozenset = frozenset()) -> None:
         """A whole coalesced ``tasks`` frame as one columnar evaluation:
         decode every payload (a per-entry shm failure degrades that entry
         only), group the survivors by spec id, score each group with one
@@ -211,11 +231,19 @@ class EvalServiceWorker:
                 continue
             scorer = _scorer_for(spec)
             try:
+                t0 = time.perf_counter()
                 svs = scorer.score_batch([decoded[i][2] for i in idxs])
+                dur = round(time.perf_counter() - t0, 6)
+                # traced tasks in a columnar group share the batch span
+                # (dur_s is the whole group's pass; n says so)
+                span = ({"span": "score", "dur_s": dur, "n": len(idxs),
+                         "rung": getattr(spec, "fidelity", None)},)
                 for i, sv in zip(idxs, svs):
                     results[i] = {"type": protocol.RESULT,
                                   "id": decoded[i][0], "ok": True,
                                   "value": sv}
+                    if decoded[i][0] in traced_ids:
+                        results[i]["spans"] = span
             except Exception:            # pragma: no cover - defensive
                 for i in idxs:
                     try:
@@ -255,11 +283,12 @@ class EvalServiceWorker:
             try:
                 self._send({"type": protocol.HELLO, "name": self.name,
                             "slots": self.slots,
-                            # capabilities: batched compact frames, and the
+                            # capabilities: batched compact frames, the
                             # same-host shm fast path (the coordinator only
-                            # uses it when our hostname matches its own)
+                            # uses it when our hostname matches its own), and
+                            # per-task trace maps + result-frame spans
                             "host": socket.gethostname(),
-                            "compact": True, "shm": True})
+                            "compact": True, "shm": True, "trace": True})
                 welcome = protocol.recv_msg(self._sock)
             except (ConnectionError, OSError):
                 return    # coordinator gone mid-handshake: a normal exit
@@ -283,15 +312,20 @@ class EvalServiceWorker:
                     # the batch evaluates) and idempotent
                     self._warm(pool, msg.get("specs", ()))
                     tasks = tuple(msg.get("tasks", ()))
+                    # {task id: (trace, attempt)} — present only when the
+                    # coordinator traces (and only for trace-capable workers)
+                    traced = frozenset(msg.get("trace") or ())
                     if batch_scoring_enabled() and len(tasks) > 1:
                         # columnar: the whole frame is one vectorized pass
-                        pool.submit(self._evaluate_frame_batch, tasks)
+                        pool.submit(self._evaluate_frame_batch, tasks, traced)
                     else:
                         for task_id, payload in tasks:
-                            pool.submit(self._evaluate_entry, task_id, payload)
+                            pool.submit(self._evaluate_entry, task_id, payload,
+                                        task_id in traced)
                 elif kind == protocol.TASK:
                     pool.submit(self._evaluate, msg["id"], msg["spec"],
-                                msg["genome"])
+                                msg["genome"],
+                                msg["id"] in (msg.get("trace") or ()))
                 elif kind == protocol.WARM:
                     self._warm(pool, msg.get("specs", ()))
                 elif kind == protocol.SHUTDOWN:

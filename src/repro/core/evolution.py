@@ -13,6 +13,7 @@ import os
 import time
 from typing import Optional, Sequence
 
+from repro.core import obs
 from repro.core.evals import Scorer, make_backend
 from repro.core.islands import EvolutionReport, Island
 from repro.core.perfmodel import BenchConfig, suite_by_name
@@ -95,6 +96,7 @@ class ContinuousEvolution:
             wall_budget_s: Optional[float] = None, verbose: bool = False
             ) -> EvolutionReport:
         t0 = time.time()
+        obs.ensure_journal()      # no-op unless REPRO_OBS is on
         isl = self.island
         start_commits = len(isl.lineage)
         start_steps = isl.steps
@@ -108,10 +110,15 @@ class ContinuousEvolution:
             result = isl.step()
             if verbose:
                 head = isl.lineage.best()
-                print(f"[step {isl.steps - start_steps - 1:3d}] "
-                      f"committed={result.committed} "
-                      f"best={head.geomean if head else 0:.1f} TFLOPS "
-                      f"attempts={result.internal_attempts}  {result.note[:80]}")
+                # console sink + journal see the same line (obs.narrate)
+                obs.narrate(
+                    f"[step {isl.steps - start_steps - 1:3d}] "
+                    f"committed={result.committed} "
+                    f"best={head.geomean if head else 0:.1f} TFLOPS "
+                    f"attempts={result.internal_attempts}  {result.note[:80]}",
+                    step=isl.steps - start_steps - 1,
+                    committed=result.committed,
+                    best=head.geomean if head else 0.0)
         best = isl.lineage.best()
         return EvolutionReport(
             commits=len(isl.lineage) - start_commits,

@@ -43,6 +43,7 @@ import time
 from dataclasses import asdict, dataclass, field
 from typing import Callable, Optional
 
+from repro.core import obs
 from repro.core.config import EngineConfig, EvalConfig, MigrationConfig
 from repro.core.evals import protocol
 from repro.core.evals.backends import backend_info, register_backend
@@ -166,6 +167,16 @@ class SearchFrontier:
         self._jobs: dict[str, _JobState] = {}
         self._next_job = itertools.count(1)
         self._closed = False
+        # frontier job lifecycle counters, labelled by the fleet they ran on
+        # (the coordinator's registry id); per-job gauges are created per
+        # tenant as jobs progress (see _emit)
+        reg, cid = obs.REGISTRY, self.coordinator.obs_id
+        self._m_jobs = reg.counter("frontier_jobs_submitted", coord=cid)
+        self._m_final = {
+            "done": reg.counter("frontier_jobs_done", coord=cid),
+            "cancelled": reg.counter("frontier_jobs_cancelled", coord=cid),
+            "failed": reg.counter("frontier_jobs_failed", coord=cid),
+        }
         # wire ingress: the coordinator routes client HELLOs + frames here
         self.coordinator.on_client_msg = self._on_client_msg
         self.coordinator.on_client_close = lambda session: None
@@ -207,6 +218,7 @@ class SearchFrontier:
             job_id = f"job-{next(self._next_job):04d}"
             state = _JobState(job, job_id, callback)
             self._jobs[job_id] = state
+            self._m_jobs.inc()
         self._emit(state, "accepted",
                    {"job": job.to_wire(), "ref": _ref,
                     "fleet_slots": self.coordinator.total_slots})
@@ -259,6 +271,21 @@ class SearchFrontier:
         ev = JobEvent(state.job_id, kind, time.monotonic() - state.t0, data)
         with self._lock:
             state.events.append(ev)
+        final = self._m_final.get(kind)
+        if final is not None:
+            final.inc()
+        if kind == "progress":
+            # per-tenant frontier gauges: spend + best, labelled like the
+            # coordinator's grant counters so one registry read joins them
+            labels = dict(coord=self.coordinator.obs_id, tenant=state.job_id)
+            obs.REGISTRY.gauge("frontier_job_spent", **labels).set(state.spent)
+            obs.REGISTRY.gauge("frontier_job_best",
+                               **labels).set(state.best_geomean)
+        if obs.enabled():
+            # the job lifecycle, mirrored onto the run journal (tenant-tagged
+            # so the report's per-tenant rollup sees it)
+            obs.publish("job_event", tenant=state.job_id, kind=kind,
+                        t_job=round(ev.t, 6))
         if state.callback is not None:
             try:
                 state.callback(ev)

@@ -25,6 +25,7 @@ import threading
 from collections import deque
 from typing import Iterator, Optional, Union
 
+from repro.core import obs
 from repro.core.evals import protocol
 from repro.core.frontier import JobEvent, SearchJob
 
@@ -63,6 +64,11 @@ class FrontierClient:
                                 msg.get("t", 0.0), msg.get("data") or {})
 
     def _route(self, ev: JobEvent) -> None:
+        if obs.enabled():
+            # mirror the received stream into this process's journal: a
+            # client-side record of the remote job, tagged like the server's
+            obs.publish("job_event_recv", tenant=ev.job, kind=ev.kind,
+                        t_job=round(ev.t, 6))
         if ev.kind in ("accepted", "failed") and ev.data.get("ref"):
             self._accepted.append(ev)
         else:

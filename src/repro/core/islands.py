@@ -73,11 +73,11 @@ from __future__ import annotations
 import concurrent.futures
 import json
 import os
-import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence, Union
 
+from repro.core import obs
 from repro.core.config import (EngineConfig, EvalConfig, MigrationConfig,
                                engine_config_from_legacy)
 from repro.core.evals import (HLO, MEASURED, BatchScorer, CascadeBackend,
@@ -135,6 +135,7 @@ class IslandReport:
     eval_pool: dict = field(default_factory=dict)     # elastic pool stats
     score_caches: dict = field(default_factory=dict)  # suite -> ScoreCache.stats()
     cascade: dict = field(default_factory=dict)       # cascade totals + factors
+    commit_events_dropped: int = 0    # commit-event ring overflow (bounded window)
 
 
 class EpochMemoryView:
@@ -223,6 +224,20 @@ class Island:
         self.migrants_accepted = 0
         self.proposed = 0             # speculative submissions (pipelined)
         self.traces: list[dict] = []
+        # eval-lifecycle trace: minted at propose, consumed by the next
+        # harvest so the speculative batch and the authoritative walk stitch
+        # under one id (None while obs is disabled — zero-cost)
+        self._last_trace = None
+        # per-operator acceptance credit (the ROADMAP self-tuning-variation
+        # item's demand signal): registry instruments, shared across engines
+        # by (island, operator) label
+        op = getattr(self.operator, "name", type(self.operator).__name__)
+        self._m_steps = obs.REGISTRY.counter(
+            "island_steps", island=name, operator=op)
+        self._m_commits = obs.REGISTRY.counter(
+            "operator_commits", island=name, operator=op)
+        self._m_rejects = obs.REGISTRY.counter(
+            "operator_rejects", island=name, operator=op)
 
     # -- the proposal phase (pipelined stepping) ----------------------------------
     def _prefetch_candidates(self) -> None:
@@ -261,7 +276,16 @@ class Island:
         genomes = proposer(self.tools, directive)
         if cap is not None:
             genomes = genomes[:cap]
-        n = self.tools.submit_evaluations(genomes)
+        if obs.enabled():
+            # mint the eval-lifecycle trace here: the speculative submits
+            # inherit it thread-locally, and the next harvest reuses it so
+            # propose -> submit -> dispatch -> worker -> harvest stitch
+            tr = self._last_trace = obs.new_trace()
+            with obs.use_trace(tr):
+                n = self.tools.submit_evaluations(genomes)
+            obs.span("propose", tr, island=self.name, n=n)
+        else:
+            n = self.tools.submit_evaluations(genomes)
         self.proposed += n
         return n
 
@@ -273,8 +297,22 @@ class Island:
         operator's deterministic order no matter which futures finished
         first.  Commits on improvement."""
         directive = self.supervisor.check(self.lineage)
-        result = self.operator.vary(self.tools, directive)
+        if obs.enabled():
+            # reuse the propose-minted trace (pipelined) or mint one for the
+            # barrier path, so every authoritative walk has a lifecycle id
+            tr, self._last_trace = (self._last_trace or obs.new_trace()), None
+            t0 = time.perf_counter()
+            with obs.use_trace(tr):
+                result = self.operator.vary(self.tools, directive)
+            obs.span("harvest", tr, island=self.name,
+                     dur_s=time.perf_counter() - t0,
+                     committed=result.committed,
+                     attempts=result.internal_attempts)
+        else:
+            result = self.operator.vary(self.tools, directive)
         self.steps += 1
+        self._m_steps.inc()
+        (self._m_commits if result.committed else self._m_rejects).inc()
         self.internal_attempts += result.internal_attempts
         self.traces.append({
             "step": self.steps - 1, "directive": directive.note,
@@ -611,8 +649,12 @@ class IslandEvolution:
         self.migrations_accepted = 0
         self.topology = make_topology(topology, seed=seed)
         self.migration_stats = MigrationStats()
-        self._events_lock = threading.Lock()
-        self.commit_events: list[dict] = []   # {"t","island","geomean","coverage"}
+        # bounded commit-event window (satellite of the telemetry plane):
+        # quacks like the list it replaced — iteration/len/indexing keep
+        # working — but long frontier runs no longer grow without limit;
+        # shed history is counted in .dropped
+        self.commit_events = obs.EventRing(
+            cap=int(os.environ.get("REPRO_OBS_COMMIT_CAP", obs.DEFAULT_CAP)))
         self._t0 = None
 
         n = len(self.specs)
@@ -741,8 +783,13 @@ class IslandEvolution:
             "geomean": island.best_geomean(),
             "values": tuple(b.values) if b else (),
         }
-        with self._events_lock:
-            self.commit_events.append(event)
+        self.commit_events.append(event)
+        if obs.enabled():
+            # the bus/journal record stitches to the harvest walk's trace
+            # (commit runs inside the operator walk, so the TLS binding from
+            # Island.harvest is still live here)
+            obs.publish("commit", trace=obs.current_trace(),
+                        island=island.name, geomean=event["geomean"])
         if self._on_commit is not None:
             # runtime observer (the frontier's event stream); an observer
             # failure must never poison the island's stepping thread
@@ -799,6 +846,9 @@ class IslandEvolution:
         migration + memory-publish barrier every ``migration_interval`` steps."""
         t0 = time.time()
         self._t0 = t0 if self._t0 is None else self._t0
+        # an obs-enabled run always journals — no extra setup at call sites
+        # (no-op when disabled or when a journal is already attached)
+        obs.ensure_journal()
         start_steps = [isl.steps for isl in self.islands]
         start_commits = sum(len(isl.lineage) for isl in self.islands)
         start_attempts = sum(isl.internal_attempts for isl in self.islands)
@@ -833,9 +883,16 @@ class IslandEvolution:
             self._epoch_barrier()
             if verbose:
                 name, b = self.best()
-                print(f"[epoch @{done:3d} steps/island] best={b.geomean if b else 0:.1f} "
-                      f"TFLOPS on {name}  coverage={self.coverage_geomean():.1f} "
-                      f"migrations={self.migrations_accepted}")
+                # routed through the console sink so the journal records the
+                # same line the terminal shows — they can't disagree
+                obs.narrate(
+                    f"[epoch @{done:3d} steps/island] "
+                    f"best={b.geomean if b else 0:.1f} "
+                    f"TFLOPS on {name}  coverage={self.coverage_geomean():.1f} "
+                    f"migrations={self.migrations_accepted}",
+                    epoch=done, island=name,
+                    best=b.geomean if b else 0.0,
+                    migrations=self.migrations_accepted)
 
         wall = time.time() - t0
         name, b = self.best()
@@ -865,7 +922,8 @@ class IslandEvolution:
             score_caches={key: s.cache.stats()
                           for key, s in self.scorers.items()
                           if hasattr(getattr(s, "cache", None), "stats")},
-            cascade=self.cascade_totals())
+            cascade=self.cascade_totals(),
+            commit_events_dropped=self.commit_events.dropped)
 
     def _bootstrap_batch(self) -> None:
         """Batch-evaluate the starting genomes of all not-yet-seeded islands

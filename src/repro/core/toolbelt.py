@@ -15,6 +15,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Iterable, Optional, Sequence
 
+from repro.core import obs
 from repro.core.evals import Scorer, ScoreVector
 from repro.core.knowledge import KnowledgeBase
 from repro.core.population import Lineage
@@ -91,22 +92,30 @@ class Toolbelt:
         self.memory_refuted = memory if memory is not None else RefutedMemory()
         self.memory_notes = self.memory_refuted.notes
 
+    def _call(self, tool: str, detail: str = "") -> None:
+        """Record one tool invocation: the per-belt call log the traces keep,
+        plus a process-wide registry counter per tool name (the aggregate
+        '500 optimization directions' accounting, readable without walking
+        every belt)."""
+        self.calls.append(ToolCall(tool, detail))
+        obs.REGISTRY.counter("tool_calls", tool=tool).inc()
+
     # -- lineage access (the P_t the agent can consult) -------------------------
     def best_commit(self):
-        self.calls.append(ToolCall("lineage.best"))
+        self._call("lineage.best")
         return self.lineage.best()
 
     def recent_commits(self, n: int = 5):
-        self.calls.append(ToolCall("lineage.recent", f"n={n}"))
+        self._call("lineage.recent", f"n={n}")
         return self.lineage.commits[-n:]
 
     def diff(self, a: KernelGenome, b: KernelGenome):
-        self.calls.append(ToolCall("lineage.diff"))
+        self._call("lineage.diff")
         return a.diff(b)
 
     # -- evaluation utility f ----------------------------------------------------
     def evaluate(self, genome: KernelGenome) -> ScoreVector:
-        self.calls.append(ToolCall("evaluate", genome.key()))
+        self._call("evaluate", genome.key())
         self.n_evaluate_calls += 1
         return self.scorer(genome)
 
@@ -116,7 +125,7 @@ class Toolbelt:
         process backends run the batch on their executors; the service
         backend fans it out over its remote worker fleet; inline falls back
         to a serial loop)."""
-        self.calls.append(ToolCall("evaluate_many", f"n={len(genomes)}"))
+        self._call("evaluate_many", f"n={len(genomes)}")
         self.n_evaluate_calls += len(genomes)
         if hasattr(self.scorer, "map"):
             return self.scorer.map(genomes)
@@ -157,12 +166,12 @@ class Toolbelt:
 
     def profile(self, sv: ScoreVector) -> dict:
         """Per-config time breakdown — the profiler the agent reads."""
-        self.calls.append(ToolCall("profile"))
+        self._call("profile")
         return {name: p.breakdown() for name, p in sv.profiles.items() if p.feasible}
 
     # -- knowledge base K ----------------------------------------------------------
     def consult_kb(self, genome, sv, *tags):
-        self.calls.append(ToolCall("consult_kb", ",".join(tags)))
+        self._call("consult_kb", ",".join(tags))
         return self.kb.suggestions(genome, sv, self.scorer.suite, *tags)
 
     # -- persistent memory -----------------------------------------------------------
